@@ -1,0 +1,71 @@
+//! FSDP tuning across both paper clusters, including the distributed
+//! leader/worker coordination path (Fig 6): the tuner runs against the
+//! `DistributedProfiler`, whose measurements are aggregated across 8
+//! simulated worker ranks, then commits the tuned configs to all ranks.
+//!
+//! ```sh
+//! cargo run --release --example fsdp_tuning [-- --layers 8]
+//! ```
+
+use lagom::cli::Args;
+use lagom::coordinator::{Coordinator, DistributedProfiler};
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{build_schedule, Parallelism, Workload};
+use lagom::profiler::ProfileBackend;
+use lagom::report::{compare_strategies, comparison_table, evaluate};
+use lagom::tuner::{LagomTuner, Tuner};
+use lagom::util::units::fmt_secs;
+
+fn main() {
+    let args = Args::from_env(&[]).expect("args");
+    let layers = args.get_u64("layers", 8).expect("--layers") as u32;
+
+    let mut model = ModelSpec::phi2();
+    model.layers = layers;
+
+    // --- Part 1: strategy comparison on clusters A and B (Fig 7a protocol).
+    let mut comps = Vec::new();
+    for cluster in [ClusterSpec::cluster_a(1), ClusterSpec::cluster_b(1)] {
+        let w = Workload {
+            model: model.clone(),
+            par: Parallelism::Fsdp { world: cluster.world_size() },
+            mbs: 2,
+            gbs: 2 * cluster.world_size(),
+        };
+        comps.push(compare_strategies(&w, &cluster, 42));
+    }
+    comparison_table("FSDP: NCCL vs AutoCCL vs Lagom (Phi-2, truncated)", &comps).print();
+
+    // --- Part 2: the same tuning through the leader/worker coordinator.
+    println!("\n-- distributed coordination path (8 worker ranks, Fig 6 workflow) --");
+    let cluster = ClusterSpec::cluster_b(1);
+    let w = Workload {
+        model,
+        par: Parallelism::Fsdp { world: 8 },
+        mbs: 2,
+        gbs: 16,
+    };
+    let schedule = build_schedule(&w, &cluster);
+    let coord = Coordinator::spawn(&cluster, 42, &[]);
+    let mut backend = DistributedProfiler::new(coord);
+    let mut tuner = LagomTuner::new(cluster.clone());
+    let t0 = std::time::Instant::now();
+    let r = tuner.tune_schedule(&schedule, &mut backend);
+    println!(
+        "tuned {} comms in {} wall ({} tuning iterations, {} distributed profile rounds)",
+        r.configs.len(),
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        r.iterations,
+        backend.calls()
+    );
+    let acks = backend.coord.commit(r.configs.clone());
+    println!(
+        "committed tuned configs to workers: {acks}/8 acks (epoch {})",
+        backend.coord.commit_epoch()
+    );
+    backend.coord.shutdown();
+
+    let iter = evaluate(&schedule, &r.configs, &cluster, w.micro_steps(), 7);
+    println!("tuned iteration time (fresh noise): {}", fmt_secs(iter));
+}

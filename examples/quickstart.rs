@@ -1,0 +1,58 @@
+//! Quickstart: tune one computation-bound overlap group with Lagom and see
+//! why communication-greedy tuning backfires.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lagom::comm::{CollectiveKind, CommOpDesc};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::profiler::{ProfileBackend, SimProfiler};
+use lagom::sim::SimEnv;
+use lagom::tuner::{AutoCclTuner, LagomTuner, NcclTuner, Tuner};
+use lagom::util::units::{fmt_secs, MIB};
+
+fn main() {
+    // The paper's Fig 3 setting: an FFN operator overlapping AllReduce(32MB)
+    // on 8×A40 with PCIe (cluster B).
+    let cluster = ClusterSpec::cluster_b(1);
+    let group = OverlapGroup::with(
+        "quickstart",
+        vec![
+            CompOpDesc::ffn("ffn0", 2048, 2560, 10240, 2),
+            CompOpDesc::ffn("ffn1", 2048, 2560, 10240, 2),
+        ],
+        vec![CommOpDesc::new("allreduce", CollectiveKind::AllReduce, 32 * MIB, 8)],
+    );
+    let mut schedule = IterationSchedule::new("quickstart");
+    schedule.push(group);
+
+    println!("overlap group: 2 FFN ops on the compute stream, AllReduce(32MB) on the comm stream");
+    println!("cluster: {}\n", cluster.name);
+
+    for (label, mut tuner) in [
+        ("NCCL defaults", Box::new(NcclTuner::new(cluster.clone())) as Box<dyn Tuner>),
+        ("AutoCCL (comm-greedy)", Box::new(AutoCclTuner::new(cluster.clone()))),
+        ("Lagom (co-tuned)", Box::new(LagomTuner::new(cluster.clone()))),
+    ] {
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 42));
+        let result = tuner.tune_schedule(&schedule, &mut prof);
+        // Evaluate on fresh noise.
+        let mut eval = SimProfiler::with_reps(SimEnv::new(cluster.clone(), 7), 5);
+        let m = eval.profile_group(&schedule.groups[0], &result.configs);
+        println!("{label}:");
+        println!("  config        : {}", result.configs[0]);
+        println!(
+            "  makespan      : {}   (comp {}  comm {})",
+            fmt_secs(m.makespan),
+            fmt_secs(m.comp_total),
+            fmt_secs(m.comm_total)
+        );
+        println!("  tuning cost   : {} iterations\n", result.iterations);
+    }
+
+    println!("Lagom keeps channels/chunks small: communication runs slightly slower,");
+    println!("but the computation it overlaps — the actual bottleneck — runs faster,");
+    println!("so the group makespan drops (the paper's §3.4 boundary condition 1/3).");
+}

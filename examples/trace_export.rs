@@ -1,0 +1,42 @@
+//! Export chrome traces of the same FSDP iteration under NCCL defaults and
+//! under Lagom's tuned configs — load both in chrome://tracing / Perfetto
+//! to *see* the contention shrink.
+//!
+//! ```sh
+//! cargo run --release --example trace_export
+//! ```
+
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{build_schedule, Parallelism, Workload};
+use lagom::profiler::SimProfiler;
+use lagom::sim::{simulate_schedule, SimEnv, TraceBuilder};
+use lagom::tuner::{LagomTuner, NcclTuner, Tuner};
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let mut model = ModelSpec::phi2();
+    model.layers = 4;
+    let w = Workload { model, par: Parallelism::Fsdp { world: 8 }, mbs: 2, gbs: 16 };
+    let schedule = build_schedule(&w, &cluster);
+
+    std::fs::create_dir_all("target").ok();
+    for (label, mut tuner) in [
+        ("nccl", Box::new(NcclTuner::new(cluster.clone())) as Box<dyn Tuner>),
+        ("lagom", Box::new(LagomTuner::new(cluster.clone()))),
+    ] {
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 42));
+        let r = tuner.tune_schedule(&schedule, &mut prof);
+        let mut env = SimEnv::deterministic(cluster.clone());
+        let iter = simulate_schedule(&schedule, &r.configs, &mut env);
+        let mut tb = TraceBuilder::new();
+        tb.push_iter(&schedule, &iter);
+        let path = format!("target/trace_{label}.json");
+        std::fs::write(&path, tb.finish().to_pretty()).expect("write trace");
+        println!(
+            "{label:6} iteration {:8.3} ms -> {path}",
+            iter.total * 1e3
+        );
+    }
+    println!("open the two traces side by side: compute row (tid 0) vs comm row (tid 1).");
+}

@@ -1,0 +1,112 @@
+"""AOT compile path: lower the L2 train step (which calls the L1 Pallas
+kernels) to HLO **text** artifacts the Rust runtime loads via the `xla`
+crate.
+
+HLO text — NOT `lowered.compile()` serialization — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md and DESIGN.md §3).
+
+Usage:
+    python -m compile.aot --preset small --out-dir ../artifacts
+
+Artifacts:
+    train_init.hlo.txt   (seed f32[]) -> (theta, m, v)
+    train_step.hlo.txt   (theta, m, v, step, tokens, targets)
+                         -> (theta', m', v', loss)
+    fwd_loss.hlo.txt     (theta, tokens, targets) -> (loss,)
+    train_step.meta.json shapes for the Rust side
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PRESETS, ParamLayout, loss_fn, make_init, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(preset: str, out_dir: str) -> dict:
+    cfg = PRESETS[preset]
+    layout = ParamLayout(cfg)
+    p = layout.total
+
+    theta_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    scalar_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+    os.makedirs(out_dir, exist_ok=True)
+    written = {}
+
+    def emit(name, fn, *specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = len(text)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    init, _ = make_init(cfg)
+    emit("train_init", init, scalar_spec)
+
+    step, _ = make_train_step(cfg)
+    emit("train_step", step, theta_spec, theta_spec, theta_spec, scalar_spec, tok_spec, tok_spec)
+
+    emit(
+        "fwd_loss",
+        lambda theta, toks, tgts: (loss_fn(theta, toks, tgts, cfg, layout),),
+        theta_spec,
+        tok_spec,
+        tok_spec,
+    )
+
+    meta = {
+        "preset": preset,
+        "param_count": int(p),
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "d_model": cfg.d_model,
+        "layers": cfg.layers,
+        "heads": cfg.heads,
+        "d_ff": cfg.d_ff,
+    }
+    meta_path = os.path.join(out_dir, "train_step.meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"  wrote {meta_path} (P={p})")
+    return written
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default=os.environ.get("LAGOM_PRESET", "small"),
+                    choices=sorted(PRESETS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode: also copy train_step HLO here")
+    args = ap.parse_args()
+    print(f"AOT-lowering preset={args.preset} -> {args.out_dir}")
+    written = build_artifacts(args.preset, args.out_dir)
+    if args.out:
+        src = os.path.join(args.out_dir, "train_step.hlo.txt")
+        with open(src) as f, open(args.out, "w") as g:
+            g.write(f.read())
+    assert written["train_step"] > 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""L1: row-tiled Pallas LayerNorm kernel.
+
+Grid walks row blocks; each step normalizes a (bm, d) tile in VMEM against
+its own row statistics and applies the (gamma, beta) affine, which stay
+resident across steps. Memory-bound by design — exercises the VPU/bandwidth
+side of the contention story, complementing the MXU-bound FFN kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    o_ref[...] = (x - mean) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+def _layernorm_bwd_kernel(x_ref, g_ref, dy_ref, dx_ref, *, eps: float):
+    """Row-local dx: r*(gγ − mean(gγ) − x̂·mean(gγ·x̂)) per row."""
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * r
+    gg = dy_ref[...] * g_ref[...]
+    dx_ref[...] = r * (
+        gg - jnp.mean(gg, axis=-1, keepdims=True)
+        - xhat * jnp.mean(gg * xhat, axis=-1, keepdims=True)
+    )
+
+
+def _layernorm_call(x, gamma, beta, bm: int, eps: float):
+    m, d = x.shape
+    assert gamma.shape == (d,) and beta.shape == (d,)
+    bm_ = _pick_block(m, bm)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(m // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def layernorm(x, gamma, beta, bm: int = 128, eps: float = 1e-5):
+    """LayerNorm over the last axis of x:[m, d]."""
+    return _layernorm_call(x, gamma, beta, bm, eps)
+
+
+def _layernorm_fwd(x, gamma, beta, bm, eps):
+    return _layernorm_call(x, gamma, beta, bm, eps), (x, gamma)
+
+
+def _layernorm_bwd(bm, eps, res, dy):
+    x, gamma = res
+    m, d = x.shape
+    bm_ = _pick_block(m, bm)
+    dx = pl.pallas_call(
+        functools.partial(_layernorm_bwd_kernel, eps=eps),
+        grid=(m // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, gamma, dy)
+    # Parameter grads are cross-row reductions — cheap in plain jnp.
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    dgamma = jnp.sum(dy * xhat, axis=0)
+    dbeta = jnp.sum(dy, axis=0)
+    return dx, dgamma, dbeta
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

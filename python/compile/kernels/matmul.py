@@ -1,0 +1,65 @@
+"""L1: generic tiled Pallas matmul kernel.
+
+TPU-minded tiling (DESIGN.md §Hardware-Adaptation): the grid walks MXU-sized
+output tiles; each grid step keeps an (bm, bk) A-panel and (bk, bn) B-panel
+in VMEM and accumulates into the (bm, bn) output tile, revisiting it across
+the k-grid axis — the BlockSpec expression of the HBM->VMEM schedule a CUDA
+kernel would express with threadblocks and shared memory.
+
+Always `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (MXU-aligned when possible)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm: int = 128, bn: int = 128, bk: int = 512):
+    """`a @ b` via the Pallas kernel. Shapes need not divide the block
+    targets; blocks snap down to divisors."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (A panel + B panel +
+    accumulator) — the number DESIGN.md §Perf budgets against ~16 MB."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

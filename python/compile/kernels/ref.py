@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its oracle to float tolerance
+across the hypothesis shape/dtype sweep in python/tests/test_kernel.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def ffn_ref(x, w1, w2):
+    return jnp.dot(jax.nn.gelu(jnp.dot(x, w1)), w2)
+
+
+def layernorm_ref(x, gamma, beta, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def ffn_grads_ref(x, w1, w2, g):
+    """Reference (dx, dw1, dw2) for the custom VJP."""
+
+    def f(x, w1, w2):
+        return jnp.sum(ffn_ref(x, w1, w2) * g)
+
+    return jax.grad(f, argnums=(0, 1, 2))(x, w1, w2)

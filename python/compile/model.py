@@ -1,0 +1,196 @@
+"""L2: transformer fwd/bwd + AdamW train step in JAX, calling the L1
+Pallas kernels (fused FFN + LayerNorm) — the compute graph that
+`aot.py` lowers once to HLO text for the Rust runtime.
+
+Parameters travel as ONE flat f32[P] vector across the AOT boundary (the
+Rust side never learns the pytree); `ParamLayout` owns the packing order.
+
+Architecture: pre-LN causal transformer, tied embeddings, no biases.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_ffn import fused_ffn
+from .kernels.layernorm import layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int
+    d_model: int
+    layers: int
+    heads: int
+    d_ff: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+
+PRESETS = {
+    # CI / unit-test scale.
+    "tiny": ModelConfig(vocab=256, d_model=64, layers=2, heads=4, d_ff=256, seq=32, batch=2),
+    # examples/train_e2e default: minutes on one CPU core.
+    "small": ModelConfig(vocab=2048, d_model=256, layers=4, heads=8, d_ff=1024, seq=64, batch=2),
+    # ~100M parameters for the EXPERIMENTS.md end-to-end run.
+    "e2e100m": ModelConfig(vocab=8192, d_model=768, layers=12, heads=12, d_ff=3072, seq=64, batch=1),
+}
+
+
+class ParamLayout:
+    """Flat-vector packing: embed, then per layer (ln1 g/b, Wq, Wk, Wv, Wo,
+    ln2 g/b, W1, W2), then final ln g/b. Tied LM head."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.shapes = []
+        d, dff = cfg.d_model, cfg.d_ff
+        self.shapes.append(("embed", (cfg.vocab, d)))
+        for l in range(cfg.layers):
+            self.shapes += [
+                (f"l{l}.ln1_g", (d,)),
+                (f"l{l}.ln1_b", (d,)),
+                (f"l{l}.wq", (d, d)),
+                (f"l{l}.wk", (d, d)),
+                (f"l{l}.wv", (d, d)),
+                (f"l{l}.wo", (d, d)),
+                (f"l{l}.ln2_g", (d,)),
+                (f"l{l}.ln2_b", (d,)),
+                (f"l{l}.w1", (d, dff)),
+                (f"l{l}.w2", (dff, d)),
+            ]
+        self.shapes += [("lnf_g", (d,)), ("lnf_b", (d,))]
+        self.sizes = [int(jnp.prod(jnp.array(s))) for _, s in self.shapes]
+        self.offsets = []
+        off = 0
+        for sz in self.sizes:
+            self.offsets.append(off)
+            off += sz
+        self.total = off
+
+    def unpack(self, theta):
+        """flat f32[P] -> dict of named arrays (static slices: lowers to
+        constant-offset slices in HLO)."""
+        out = {}
+        for (name, shape), off, sz in zip(self.shapes, self.offsets, self.sizes):
+            out[name] = jax.lax.dynamic_slice(theta, (off,), (sz,)).reshape(shape)
+        return out
+
+    def pack(self, params: dict):
+        flat = [params[name].reshape(-1) for name, _ in self.shapes]
+        return jnp.concatenate(flat)
+
+    def init(self, key):
+        """Scaled-normal init, packed flat."""
+        params = {}
+        cfg = self.cfg
+        for (name, shape) in self.shapes:
+            key, sub = jax.random.split(key)
+            if name.endswith("_g"):
+                params[name] = jnp.ones(shape, jnp.float32)
+            elif name.endswith("_b"):
+                params[name] = jnp.zeros(shape, jnp.float32)
+            else:
+                fan_in = shape[0] if len(shape) > 1 else cfg.d_model
+                params[name] = (
+                    jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5) * 0.5
+                )
+        return self.pack(params)
+
+
+def _attention(p, l, x, cfg: ModelConfig):
+    """Causal multi-head attention over x:[B,S,d]."""
+    b, s, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+    q = (x @ p[f"l{l}.wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p[f"l{l}.wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ p[f"l{l}.wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = (q @ k.transpose(0, 1, 3, 2)) * (hd ** -0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e9)
+    ctx = jax.nn.softmax(scores, axis=-1) @ v  # [b,h,s,hd]
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return ctx @ p[f"l{l}.wo"]
+
+
+def forward(theta, tokens, cfg: ModelConfig, layout: ParamLayout):
+    """Logits [B,S,V] for token ids [B,S]."""
+    p = layout.unpack(theta)
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = p["embed"][tokens]  # [B,S,d]
+
+    def flat(fn, x2d_fn):
+        # Pallas kernels take 2-D [rows, d]; fold batch.
+        return x2d_fn
+
+    for l in range(cfg.layers):
+        xf = x.reshape(b * s, d)
+        ln1 = layernorm(xf, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"]).reshape(b, s, d)
+        x = x + _attention(p, l, ln1, cfg)
+        xf = x.reshape(b * s, d)
+        ln2 = layernorm(xf, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        # L1 hot-spot: fused FFN Pallas kernel.
+        ff = fused_ffn(ln2, p[f"l{l}.w1"], p[f"l{l}.w2"])
+        x = x + ff.reshape(b, s, d)
+
+    xf = x.reshape(b * s, d)
+    xf = layernorm(xf, p["lnf_g"], p["lnf_b"])
+    logits = xf @ p["embed"].T  # tied head
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(theta, tokens, targets, cfg: ModelConfig, layout: ParamLayout):
+    logits = forward(theta, tokens, cfg, layout)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    warmup: int = 20
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig = OptConfig()):
+    """Returns train_step(theta, m, v, step, tokens, targets) ->
+    (theta', m', v', loss) — the function AOT-lowered for the Rust loop."""
+    layout = ParamLayout(cfg)
+
+    def train_step(theta, m, v, step, tokens, targets):
+        loss, g = jax.value_and_grad(loss_fn)(theta, tokens, targets, cfg, layout)
+        # AdamW with linear warmup + bias correction.
+        t = step + 1.0
+        lr = opt.lr * jnp.minimum(1.0, t / opt.warmup)
+        m2 = opt.beta1 * m + (1 - opt.beta1) * g
+        v2 = opt.beta2 * v + (1 - opt.beta2) * jnp.square(g)
+        mhat = m2 / (1 - opt.beta1 ** t)
+        vhat = v2 / (1 - opt.beta2 ** t)
+        theta2 = theta - lr * (mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * theta)
+        return theta2, m2, v2, loss
+
+    return train_step, layout
+
+
+def make_init(cfg: ModelConfig):
+    """Returns init(seed_f32) -> (theta, m, v)."""
+    layout = ParamLayout(cfg)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        theta = layout.init(key)
+        return theta, jnp.zeros_like(theta), jnp.zeros_like(theta)
+
+    return init, layout

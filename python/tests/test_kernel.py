@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against
+ref.py. Kernels run interpret=True (CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fused_ffn import fused_ffn, vmem_bytes as ffn_vmem
+from compile.kernels.layernorm import layernorm
+from compile.kernels.matmul import _pick_block, matmul, vmem_bytes as mm_vmem
+from compile.kernels.ref import ffn_grads_ref, ffn_ref, layernorm_ref, matmul_ref
+
+jax.config.update("jax_enable_x64", False)
+
+DTYPES = [jnp.float32]  # interpret-mode on CPU computes in f32
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+dims = st.sampled_from([8, 16, 24, 32, 64, 96, 128])
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = rand(k1, (m, k), jnp.float32)
+        b = rand(k2, (k, n), jnp.float32)
+        np.testing.assert_allclose(matmul(a, b), matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.sampled_from([32, 64, 128]),
+        bm=st.sampled_from([8, 16, 32, 128]),
+        bk=st.sampled_from([8, 64, 512]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_block_size_invariance(self, m, bm, bk, seed):
+        """Result must not depend on the tiling."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        a = rand(k1, (m, 64), jnp.float32)
+        b = rand(k2, (64, 48), jnp.float32)
+        np.testing.assert_allclose(
+            matmul(a, b, bm=bm, bk=bk), matmul_ref(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_pick_block_divides(self):
+        for dim in [1, 7, 24, 128, 1000]:
+            for target in [1, 8, 128]:
+                b = _pick_block(dim, target)
+                assert dim % b == 0 and 1 <= b <= max(target, 1)
+
+    def test_vmem_budget_for_design_tiles(self):
+        # DESIGN.md §Perf: default tiles stay far under a 16 MB VMEM budget.
+        assert mm_vmem(128, 128, 512) < 2 * 2**20
+
+
+class TestFusedFFN:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 32, 64]),
+        d=st.sampled_from([8, 16, 32, 64]),
+        dff=st.sampled_from([16, 32, 64, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, d, dff, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, (m, d), jnp.float32)
+        w1 = rand(k2, (d, dff), jnp.float32) * 0.1
+        w2 = rand(k3, (dff, d), jnp.float32) * 0.1
+        np.testing.assert_allclose(
+            fused_ffn(x, w1, w2), ffn_ref(x, w1, w2), rtol=2e-4, atol=2e-4
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        m=st.sampled_from([8, 32]),
+        d=st.sampled_from([16, 32]),
+        dff=st.sampled_from([32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_custom_vjp_matches_autodiff(self, m, d, dff, seed):
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+        x = rand(k1, (m, d), jnp.float32)
+        w1 = rand(k2, (d, dff), jnp.float32) * 0.1
+        w2 = rand(k3, (dff, d), jnp.float32) * 0.1
+        g = rand(k4, (m, d), jnp.float32)
+        def f(x, w1, w2):
+            return jnp.sum(fused_ffn(x, w1, w2) * g)
+        dx, dw1, dw2 = jax.grad(f, argnums=(0, 1, 2))(x, w1, w2)
+        rx, rw1, rw2 = ffn_grads_ref(x, w1, w2, g)
+        np.testing.assert_allclose(dx, rx, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(dw1, rw1, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(dw2, rw2, rtol=1e-3, atol=1e-3)
+
+    def test_block_split_invariance(self):
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = rand(k1, (64, 32), jnp.float32)
+        w1 = rand(k2, (32, 128), jnp.float32) * 0.1
+        w2 = rand(k3, (128, 32), jnp.float32) * 0.1
+        full = fused_ffn(x, w1, w2, bm=64, bk=128)
+        split = fused_ffn(x, w1, w2, bm=16, bk=32)
+        np.testing.assert_allclose(full, split, rtol=1e-5, atol=1e-5)
+
+    def test_vmem_budget_for_design_tiles(self):
+        # d=768, bm=128, bk=512 (the e2e100m shape): < 16 MB, double-bufferable.
+        assert ffn_vmem(128, 768, 512) < 8 * 2**20
+
+
+class TestLayerNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 32, 64, 128]),
+        d=st.sampled_from([8, 32, 64, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, d, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = rand(k1, (m, d), jnp.float32) * 3.0 + 1.0
+        g = rand(k2, (d,), jnp.float32)
+        b = rand(k3, (d,), jnp.float32)
+        np.testing.assert_allclose(
+            layernorm(x, g, b), layernorm_ref(x, g, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_output_row_statistics(self):
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (32, 64)) * 5 + 2
+        out = layernorm(x, jnp.ones(64), jnp.zeros(64))
+        np.testing.assert_allclose(jnp.mean(out, axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(jnp.std(out, axis=-1), 1.0, atol=1e-2)

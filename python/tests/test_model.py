@@ -1,0 +1,119 @@
+"""L2 correctness: packing layout, forward shapes, loss behaviour, and the
+train step actually learning on the synthetic chain task."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    PRESETS,
+    ModelConfig,
+    OptConfig,
+    ParamLayout,
+    forward,
+    loss_fn,
+    make_init,
+    make_train_step,
+)
+
+CFG = PRESETS["tiny"]
+
+
+def synth_batch(key, cfg, vocab_mult=5, vocab_add=7):
+    """Same noisy affine chain the Rust trainer generates."""
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (cfg.batch,), 0, cfg.vocab)
+    toks = [start]
+    for _ in range(cfg.seq):
+        toks.append((toks[-1] * vocab_mult + vocab_add) % cfg.vocab)
+    seqs = jnp.stack(toks, axis=1)  # [B, S+1]
+    return seqs[:, :-1].astype(jnp.int32), seqs[:, 1:].astype(jnp.int32)
+
+
+class TestLayout:
+    def test_pack_unpack_roundtrip(self):
+        layout = ParamLayout(CFG)
+        theta = layout.init(jax.random.PRNGKey(0))
+        assert theta.shape == (layout.total,)
+        params = layout.unpack(theta)
+        theta2 = layout.pack(params)
+        np.testing.assert_array_equal(theta, theta2)
+
+    def test_param_count_formula(self):
+        layout = ParamLayout(CFG)
+        d, dff, v, L = CFG.d_model, CFG.d_ff, CFG.vocab, CFG.layers
+        expect = v * d + L * (4 * d * d + 2 * d * dff + 4 * d) + 2 * d
+        assert layout.total == expect
+
+    def test_presets_param_scale(self):
+        assert ParamLayout(PRESETS["e2e100m"]).total > 80e6
+        assert ParamLayout(PRESETS["small"]).total < 20e6
+
+
+class TestForward:
+    def test_logit_shapes_and_finiteness(self):
+        layout = ParamLayout(CFG)
+        theta = layout.init(jax.random.PRNGKey(0))
+        toks, _ = synth_batch(jax.random.PRNGKey(1), CFG)
+        logits = forward(theta, toks, CFG, layout)
+        assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_initial_loss_near_uniform(self):
+        layout = ParamLayout(CFG)
+        theta = layout.init(jax.random.PRNGKey(0))
+        toks, tgts = synth_batch(jax.random.PRNGKey(1), CFG)
+        loss = loss_fn(theta, toks, tgts, CFG, layout)
+        uniform = np.log(CFG.vocab)
+        assert abs(float(loss) - uniform) < 0.5 * uniform
+
+    def test_causality(self):
+        """Changing a future token must not change earlier logits."""
+        layout = ParamLayout(CFG)
+        theta = layout.init(jax.random.PRNGKey(0))
+        toks, _ = synth_batch(jax.random.PRNGKey(2), CFG)
+        l1 = forward(theta, toks, CFG, layout)
+        toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+        l2 = forward(theta, toks2, CFG, layout)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(l1[:, -1], l2[:, -1])
+
+
+class TestTrainStep:
+    def test_shapes_and_state_update(self):
+        step_fn, layout = make_train_step(CFG)
+        theta = layout.init(jax.random.PRNGKey(0))
+        m = jnp.zeros_like(theta)
+        v = jnp.zeros_like(theta)
+        toks, tgts = synth_batch(jax.random.PRNGKey(1), CFG)
+        t2, m2, v2, loss = jax.jit(step_fn)(theta, m, v, jnp.float32(0), toks, tgts)
+        assert t2.shape == theta.shape
+        assert float(loss) > 0
+        assert not np.allclose(t2, theta), "parameters must move"
+        assert float(jnp.sum(jnp.abs(m2))) > 0
+
+    def test_loss_decreases_over_steps(self):
+        step_fn, layout = make_train_step(CFG, OptConfig(lr=8e-3, warmup=5))
+        step_jit = jax.jit(step_fn)
+        theta = layout.init(jax.random.PRNGKey(0))
+        m = jnp.zeros_like(theta)
+        v = jnp.zeros_like(theta)
+        key = jax.random.PRNGKey(3)
+        losses = []
+        for i in range(60):
+            key, sub = jax.random.split(key)
+            toks, tgts = synth_batch(sub, CFG)
+            theta, m, v, loss = step_jit(theta, m, v, jnp.float32(i), toks, tgts)
+            losses.append(float(loss))
+        assert np.isfinite(losses).all()
+        first = np.mean(losses[:5])
+        last = np.mean(losses[-5:])
+        assert last < first * 0.85, f"loss should drop: {first:.3f} -> {last:.3f}"
+
+    def test_init_fn_matches_layout(self):
+        init, layout = make_init(CFG)
+        theta, m, v = jax.jit(init)(jnp.float32(42))
+        assert theta.shape == (layout.total,)
+        assert float(jnp.sum(jnp.abs(m))) == 0.0
+        assert float(jnp.sum(jnp.abs(v))) == 0.0

@@ -1,0 +1,77 @@
+//! Ablation — §3.1's complexity claim: Lagom's tuning cost grows linearly
+//! with the number of communications N, while joint search grows as
+//! grid^N (exponential).
+
+use lagom::bench::{save_table, Table};
+use lagom::comm::{CollectiveKind, CommOpDesc};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::profiler::SimProfiler;
+use lagom::sim::SimEnv;
+use lagom::tuner::{ExhaustiveTuner, LagomTuner, Tuner};
+use lagom::util::stats::linfit;
+use lagom::util::units::MIB;
+
+fn group_with_n_comms(n: usize) -> OverlapGroup {
+    OverlapGroup::with(
+        format!("n{n}"),
+        (0..8)
+            .map(|i| CompOpDesc::matmul(format!("mm{i}"), 2048, 2048, 2560, 2))
+            .collect(),
+        (0..n)
+            .map(|i| {
+                CommOpDesc::new(
+                    format!("ar{i}"),
+                    CollectiveKind::AllReduce,
+                    (16 + 16 * i as u64) * MIB,
+                    8,
+                )
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let grid = ExhaustiveTuner::new(cluster.clone()).grid_size() as f64;
+
+    let mut t = Table::new(
+        "Ablation — tuning cost vs number of communications N",
+        &["N", "Lagom iterations", "joint grid size (grid^N)", "ratio"],
+    );
+    let mut ns = Vec::new();
+    let mut iters = Vec::new();
+    for n in [1usize, 2, 3, 4, 6, 8] {
+        let mut s = IterationSchedule::new("c");
+        s.push(group_with_n_comms(n));
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 42 + n as u64));
+        let mut tuner = LagomTuner::new(cluster.clone());
+        let r = tuner.tune_schedule(&s, &mut prof);
+        let joint = grid.powi(n as i32);
+        t.row(vec![
+            n.to_string(),
+            r.iterations.to_string(),
+            format!("{joint:.0}"),
+            format!("{:.2e}", r.iterations as f64 / joint),
+        ]);
+        ns.push(n as f64);
+        iters.push(r.iterations as f64);
+    }
+    t.print();
+    save_table(&t);
+
+    // Linearity: iterations vs N fit a line well, and the slope is a small
+    // constant (ladder depth), nowhere near geometric growth.
+    let (a, b, r2) = linfit(&ns, &iters);
+    println!("\nlinear fit: iters ≈ {a:.1} + {b:.1}·N  (R² = {r2:.3})");
+    assert!(r2 > 0.85, "iterations grow linearly in N (R²={r2})");
+    assert!(b < 60.0, "slope is a small constant: {b}");
+    // Exponential growth would overshoot any linear envelope: check every
+    // point sits under slope·N + constant with modest slack.
+    for (&n, &it) in ns.iter().zip(&iters) {
+        assert!(
+            it <= (a + b * n) * 1.5 + 16.0,
+            "N={n}: {it} iterations exceed the linear envelope"
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! Ablation — Alg 2's relative-improvement learning rate vs fixed-step
+//! escalation: the adaptive rule should reach a comparable configuration
+//! in fewer profile iterations (big confident jumps early, small careful
+//! steps near the balance point).
+
+use lagom::bench::{save_table, Table};
+use lagom::comm::{CollectiveKind, CommOpDesc};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::profiler::{ProfileBackend, SimProfiler};
+use lagom::sim::SimEnv;
+use lagom::tuner::{LagomTuner, Tuner};
+use lagom::util::stats::mean;
+use lagom::util::units::MIB;
+
+fn comm_heavy_group(seed: u64) -> OverlapGroup {
+    OverlapGroup::with(
+        format!("g{seed}"),
+        (0..4)
+            .map(|i| CompOpDesc::matmul(format!("mm{i}"), 2048, 2048, 2560, 2))
+            .collect(),
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 192 * MIB, 8)],
+    )
+}
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let mut t = Table::new(
+        "Ablation — adaptive lr vs fixed-step escalation",
+        &["variant", "mean iterations", "mean makespan (ms)"],
+    );
+    let mut rows = Vec::new();
+    for (label, adaptive, lr0) in [
+        ("adaptive lr (Alg 2)", true, 0.5),
+        ("fixed small step (lr=0.15)", false, 0.15),
+        ("fixed large step (lr=1.0)", false, 1.0),
+    ] {
+        let mut its = Vec::new();
+        let mut zs = Vec::new();
+        for seed in 0..8u64 {
+            let mut s = IterationSchedule::new("lr");
+            s.push(comm_heavy_group(seed));
+            let mut tuner = LagomTuner::new(cluster.clone());
+            tuner.adaptive_lr = adaptive;
+            tuner.initial_lr = lr0;
+            let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 200 + seed));
+            let r = tuner.tune_schedule(&s, &mut prof);
+            let mut eval = SimProfiler::with_reps(SimEnv::new(cluster.clone(), 800 + seed), 5);
+            zs.push(eval.profile_group(&s.groups[0], &r.configs).makespan);
+            its.push(r.iterations as f64);
+        }
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", mean(&its)),
+            format!("{:.3}", mean(&zs) * 1e3),
+        ]);
+        rows.push((mean(&its), mean(&zs)));
+    }
+    t.print();
+    save_table(&t);
+
+    let (it_adapt, z_adapt) = rows[0];
+    let (it_small, z_small) = rows[1];
+    println!(
+        "\nadaptive reaches {:.1}% of fixed-small's quality in {:.0}% of the iterations",
+        z_small / z_adapt * 100.0,
+        it_adapt / it_small * 100.0
+    );
+    // Adaptive must not be both slower *and* worse than the small fixed step.
+    assert!(
+        it_adapt <= it_small * 1.05 || z_adapt <= z_small * 1.02,
+        "adaptive lr pareto-competitive"
+    );
+}

@@ -1,0 +1,138 @@
+//! Fig 3 — FFN duration when overlapped with AllReduce(32MB) across NC and
+//! C (NT=128) on 8×A40-PCIe (cluster B), plus the Fig 4 decomposition of
+//! SM vs global-resource contention.
+//!
+//! Paper shapes to reproduce:
+//! * 3a: computation time grows with both NC and C; worst configs degrade
+//!   the FFN ≳30%.
+//! * 3b (C=16KB, NC sweep): comm time falls with NC then flattens/upticks;
+//!   comp time rises with NC.
+//! * 3c (NC=4, C sweep): comm time falls with C then upticks; comp rises.
+//! * NC=16 vs NC=32: near-identical comm time, ≈30% different comp time.
+
+use lagom::bench::{save_table, Table};
+use lagom::comm::{comm_resources, comm_time, CollectiveKind, CommConfig, CommOpDesc};
+use lagom::contention::model::comp_time_contended;
+use lagom::graph::{CompOpDesc, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::sim::{simulate_group, SimEnv};
+use lagom::util::units::{KIB, MIB};
+
+fn cfg(nc: u32, c: u64) -> CommConfig {
+    CommConfig { nc, nt: 128, chunk: c, ..CommConfig::default_ring() }
+}
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let ffn = CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2);
+    let ar = CommOpDesc::new("ar32", CollectiveKind::AllReduce, 32 * MIB, 8);
+    // Comm looped back-to-back so the FFN is contended for its whole
+    // duration (the paper measures concurrent streams).
+    let measure = |nc: u32, c: u64| -> (f64, f64) {
+        let group = OverlapGroup::with(
+            "fig3",
+            vec![ffn.clone()],
+            vec![ar.clone(); 4],
+        );
+        let mut env = SimEnv::deterministic(cluster.clone());
+        let r = simulate_group(&group, &vec![cfg(nc, c); 4], &mut env);
+        (r.comp_times[0], r.comm_times[0])
+    };
+
+    let solo = {
+        let mut env = SimEnv::deterministic(cluster.clone());
+        simulate_group(&OverlapGroup::with("solo", vec![ffn.clone()], vec![]), &[], &mut env)
+            .comp_times[0]
+    };
+    println!("FFN solo (uncontended): {:.3} ms\n", solo * 1e3);
+
+    // ---- Fig 3a: NC × C heatmap of FFN duration.
+    let ncs = [1u32, 2, 4, 8, 16, 32, 48, 61];
+    let cs = [16 * KIB, 64 * KIB, 256 * KIB, 1024 * KIB, 2 * MIB, 8 * MIB];
+    let mut t3a = Table::new(
+        "Fig 3a — FFN duration (ms) under AllReduce(32MB), NC x C",
+        &["NC\\C", "16KB", "64KB", "256KB", "1MB", "2MB", "8MB"],
+    );
+    for &nc in &ncs {
+        let mut row = vec![format!("{nc}")];
+        for &c in &cs {
+            let (comp, _) = measure(nc, c);
+            row.push(format!("{:.2}", comp * 1e3));
+        }
+        t3a.row(row);
+    }
+    t3a.print();
+    save_table(&t3a);
+
+    // ---- Fig 3b: NC sweep at C=16KB.
+    let mut t3b = Table::new(
+        "Fig 3b — sweep NC (C=16KB): comm falls then flattens, comp rises",
+        &["NC", "comm (ms)", "comp (ms)", "comp slowdown"],
+    );
+    for &nc in &ncs {
+        let (comp, comm) = measure(nc, 16 * KIB);
+        t3b.row(vec![
+            nc.to_string(),
+            format!("{:.2}", comm * 1e3),
+            format!("{:.2}", comp * 1e3),
+            format!("{:+.1}%", (comp / solo - 1.0) * 100.0),
+        ]);
+    }
+    t3b.print();
+    save_table(&t3b);
+
+    // ---- Fig 3c: C sweep at NC=4.
+    let mut t3c = Table::new(
+        "Fig 3c — sweep C (NC=4): comm falls then upticks, comp rises",
+        &["C", "comm (ms)", "comp (ms)", "comp slowdown"],
+    );
+    for &c in &[16 * KIB, 32 * KIB, 64 * KIB, 128 * KIB, 256 * KIB, 512 * KIB, MIB, 2 * MIB, 4 * MIB, 8 * MIB, 16 * MIB] {
+        let (comp, comm) = measure(4, c);
+        t3c.row(vec![
+            lagom::util::units::fmt_bytes(c),
+            format!("{:.2}", comm * 1e3),
+            format!("{:.2}", comp * 1e3),
+            format!("{:+.1}%", (comp / solo - 1.0) * 100.0),
+        ]);
+    }
+    t3c.print();
+    save_table(&t3c);
+
+    // ---- Fig 4: contention decomposition (SM waves vs bandwidth/L2).
+    let gpu = cluster.gpu();
+    let mut t4 = Table::new(
+        "Fig 4 — contention decomposition (analytic model, Eqs 4-6)",
+        &["config", "SMs taken", "V(NC,C) GB/s", "L2 frac", "comp (model, ms)"],
+    );
+    for (nc, c) in [(2u32, 64 * KIB), (8, 2 * MIB), (16, 512 * KIB), (32, 512 * KIB), (61, 2 * MIB)] {
+        let d = comm_time(&ar, &cfg(nc, c), &cluster.topology, gpu);
+        let res = comm_resources(&ar, &cfg(nc, c), &cluster.topology, gpu, d);
+        let y = comp_time_contended(&ffn, gpu, Some(&res));
+        t4.row(vec![
+            format!("NC={nc} C={}", lagom::util::units::fmt_bytes(c)),
+            res.sms.to_string(),
+            format!("{:.1}", res.mem_bw / 1e9),
+            format!("{:.2}", res.l2_frac),
+            format!("{:.2}", y * 1e3),
+        ]);
+    }
+    t4.print();
+    save_table(&t4);
+
+    // ---- Paper's headline checks.
+    let (c16, x16) = measure(16, 512 * KIB);
+    let (c32, x32) = measure(32, 512 * KIB);
+    println!(
+        "\nNC=16 vs NC=32 @C=512KB: comm {:.2} vs {:.2} ms ({:+.1}%), comp {:.2} vs {:.2} ms ({:+.1}%)",
+        x16 * 1e3,
+        x32 * 1e3,
+        (x32 / x16 - 1.0) * 100.0,
+        c16 * 1e3,
+        c32 * 1e3,
+        (c32 / c16 - 1.0) * 100.0
+    );
+    assert!((x32 / x16 - 1.0).abs() < 0.10, "comm nearly identical");
+    assert!(c32 / c16 > 1.10, "comp differs substantially (paper: 30.2%)");
+    let (worst, _) = measure(61, 8 * MIB);
+    assert!(worst / solo > 1.30, "worst-case degradation >= 30% (paper: 35%)");
+}

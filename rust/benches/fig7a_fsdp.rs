@@ -1,0 +1,71 @@
+//! Fig 7a — end-to-end FSDP iteration time: {Phi-2, Llama-3-8B, MPT-7B} ×
+//! {cluster A, cluster B} × {8, 16 GPUs} × {NCCL, AutoCCL, Lagom}.
+//!
+//! Paper bands: Lagom 1.10–1.33× over NCCL; AutoCCL can fall below NCCL in
+//! computation-bound settings. Models are depth-truncated (layer schedules
+//! repeat identically and tuned configs are reused per unique pattern, so
+//! relative speedups are depth-insensitive; see DESIGN.md).
+//!
+//! Full-depth run: LAGOM_FULL=1 cargo bench --bench fig7a_fsdp
+
+use lagom::bench::{save_table, Table};
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{Parallelism, Workload};
+use lagom::report::{compare_strategies, comparison_table};
+use lagom::util::stats::geomean;
+
+fn main() {
+    let full = std::env::var("LAGOM_FULL").is_ok();
+    let depth_cap = if full { u32::MAX } else { 6 };
+
+    let mut comps = Vec::new();
+    let mut lagom_speedups = Vec::new();
+    let mut autoccl_rel = Vec::new();
+    for cluster in [
+        ClusterSpec::cluster_a(1),
+        ClusterSpec::cluster_a(2),
+        ClusterSpec::cluster_b(1),
+        ClusterSpec::cluster_b(2),
+    ] {
+        let world = cluster.world_size();
+        for (mut model, mbs) in [
+            (ModelSpec::phi2(), 2u32),
+            (ModelSpec::llama3_8b(), 1),
+            (ModelSpec::mpt_7b(), 1),
+        ] {
+            model.layers = model.layers.min(depth_cap);
+            let w = Workload {
+                model,
+                par: Parallelism::Fsdp { world },
+                mbs,
+                gbs: 2 * world,
+            };
+            let c = compare_strategies(&w, &cluster, 42);
+            lagom_speedups.push(c.row("Lagom").speedup_vs_nccl);
+            autoccl_rel.push(c.speedup("Lagom", "AutoCCL"));
+            comps.push(c);
+        }
+    }
+    let t = comparison_table("Fig 7a — FSDP iteration time across models/clusters", &comps);
+    t.print();
+    save_table(&t);
+
+    let g_nccl = geomean(&lagom_speedups);
+    let g_auto = geomean(&autoccl_rel);
+    println!("\ngeomean Lagom vs NCCL   : {g_nccl:.3}x  (paper band 1.10-1.33x)");
+    println!("geomean Lagom vs AutoCCL: {g_auto:.3}x  (paper band 1.03-1.27x)");
+
+    // Shape assertions: Lagom never loses to NCCL; beats AutoCCL overall;
+    // AutoCCL underperforms NCCL somewhere (the paper's key inversion).
+    assert!(
+        lagom_speedups.iter().all(|&s| s > 0.97),
+        "Lagom must not lose to NCCL: {lagom_speedups:?}"
+    );
+    assert!(g_nccl > 1.02, "Lagom wins overall: {g_nccl}");
+    assert!(g_auto > 1.03, "Lagom beats AutoCCL: {g_auto}");
+    assert!(
+        comps.iter().any(|c| c.row("AutoCCL").speedup_vs_nccl < 1.0),
+        "AutoCCL should regress below NCCL in some computation-bound case"
+    );
+}

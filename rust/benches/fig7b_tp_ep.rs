@@ -1,0 +1,67 @@
+//! Fig 7b — TP (Domino batch-slicing) and EP (dual-batch) iteration time
+//! across strategies.
+//!
+//! Paper bands: TP 1.08–1.16× over NCCL, EP 1.07–1.08×; AutoCCL 1.03–1.09×
+//! but consistently below Lagom.
+
+use lagom::bench::{save_table, Table};
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{Parallelism, Workload};
+use lagom::report::{compare_strategies, comparison_table};
+use lagom::util::stats::geomean;
+
+fn main() {
+    let full = std::env::var("LAGOM_FULL").is_ok();
+    let depth_cap = if full { u32::MAX } else { 4 };
+
+    let mut comps = Vec::new();
+    let mut tp_speed = Vec::new();
+    let mut ep_speed = Vec::new();
+
+    // TP rows (Table 2): TP=8 on one node of each cluster; DP=2 on 16 GPUs.
+    for cluster in [ClusterSpec::cluster_a(1), ClusterSpec::cluster_b(1), ClusterSpec::cluster_a(2)] {
+        let dp = (cluster.world_size() / 8).max(1);
+        for (mut model, mbs, gbs) in [
+            (ModelSpec::phi2(), 8u32, 512u32),
+            (ModelSpec::llama3_8b(), 4, 256),
+            (ModelSpec::mpt_7b(), 2, 256),
+        ] {
+            model.layers = model.layers.min(depth_cap);
+            let w = Workload { model, par: Parallelism::TpDp { tp: 8, dp }, mbs, gbs };
+            let c = compare_strategies(&w, &cluster, 42);
+            tp_speed.push(c.row("Lagom").speedup_vs_nccl);
+            comps.push(c);
+        }
+    }
+
+    // EP rows: the two MoE models on one NVLink node.
+    for mut model in [ModelSpec::deepseek_moe_16b(), ModelSpec::olmoe_1b_7b()] {
+        model.layers = model.layers.min(depth_cap);
+        let w = Workload { model, par: Parallelism::Ep { ep: 8 }, mbs: 2, gbs: 16 };
+        let c = compare_strategies(&w, &ClusterSpec::cluster_a(1), 42);
+        ep_speed.push(c.row("Lagom").speedup_vs_nccl);
+        comps.push(c);
+    }
+
+    let t = comparison_table("Fig 7b — TP (Domino) and EP (dual-batch) iteration time", &comps);
+    t.print();
+    save_table(&t);
+
+    println!(
+        "\ngeomean Lagom vs NCCL — TP: {:.3}x (paper 1.08-1.16x), EP: {:.3}x (paper 1.07-1.08x)",
+        geomean(&tp_speed),
+        geomean(&ep_speed)
+    );
+    assert!(geomean(&tp_speed) > 1.0, "Lagom wins on TP");
+    assert!(geomean(&ep_speed) > 1.0, "Lagom wins on EP");
+    for c in &comps {
+        let lagom = c.row("Lagom").speedup_vs_nccl;
+        let auto = c.row("AutoCCL").speedup_vs_nccl;
+        assert!(
+            lagom >= auto * 0.98,
+            "Lagom should not lose to AutoCCL: {} ({lagom} vs {auto})",
+            c.workload
+        );
+    }
+}

@@ -1,0 +1,126 @@
+//! Fig 8a/8b — Phi-2 FSDP pattern breakdown on a single NVLink node
+//! (cluster A).
+//!
+//! Pattern 1 (forward, computation-bound): layer compute || next-layer
+//! parameter AllGather. Paper: NCCL NC=8/C=2MB; AutoCCL escalates to NC=61
+//! and *degrades* to 0.87×; Lagom picks NC=2/C=684KB → 1.35×.
+//!
+//! Pattern 2 (backward, multi-comm): layer bwd || {ReduceScatter grads,
+//! AllGather params}. Paper: Lagom prioritizes the ReduceScatter by H and
+//! reaches 1.43×.
+
+use lagom::bench::{save_table, Table};
+use lagom::graph::OverlapGroup;
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{build_schedule, Parallelism, Workload};
+use lagom::profiler::{ProfileBackend, SimProfiler};
+use lagom::sim::SimEnv;
+use lagom::tuner::{AutoCclTuner, LagomTuner, NcclTuner, Tuner};
+use lagom::util::units::fmt_bytes;
+
+fn tune_pattern(
+    name: &str,
+    group: &OverlapGroup,
+    cluster: &ClusterSpec,
+) -> (Table, Vec<f64>) {
+    let mut schedule = lagom::graph::IterationSchedule::new(name);
+    schedule.push(group.clone());
+
+    let mut t = Table::new(
+        format!("Fig 8 — {name}"),
+        &["strategy", "config(s)", "comm (ms)", "comp (ms)", "makespan (ms)", "vs NCCL"],
+    );
+    let mut makespans = Vec::new();
+    let mut nccl_z = 0.0;
+    for (label, mut tuner) in [
+        ("NCCL", Box::new(NcclTuner::new(cluster.clone())) as Box<dyn Tuner>),
+        ("AutoCCL", Box::new(AutoCclTuner::new(cluster.clone()))),
+        ("Lagom", Box::new(LagomTuner::new(cluster.clone()))),
+    ] {
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 42));
+        let r = tuner.tune_schedule(&schedule, &mut prof);
+        let mut eval = SimProfiler::with_reps(SimEnv::new(cluster.clone(), 7), 5);
+        let m = eval.profile_group(group, &r.configs);
+        if label == "NCCL" {
+            nccl_z = m.makespan;
+        }
+        let cfg_str = r
+            .configs
+            .iter()
+            .map(|c| format!("NC={} C={}", c.nc, fmt_bytes(c.chunk)))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        t.row(vec![
+            label.to_string(),
+            cfg_str,
+            format!("{:.2}", m.comm_total * 1e3),
+            format!("{:.2}", m.comp_total * 1e3),
+            format!("{:.2}", m.makespan * 1e3),
+            format!("{:.2}x", nccl_z / m.makespan),
+        ]);
+        makespans.push(m.makespan);
+    }
+    (t, makespans)
+}
+
+fn main() {
+    let cluster = ClusterSpec::cluster_a(1);
+    let w = Workload {
+        model: ModelSpec::phi2(),
+        par: Parallelism::Fsdp { world: 8 },
+        mbs: 2,
+        gbs: 16,
+    };
+    let schedule = build_schedule(&w, &cluster);
+
+    // Pattern 1: a mid-stack forward group (1 AllGather).
+    let p1 = schedule.groups.iter().find(|g| g.name == "fwd.l5").unwrap();
+    let (t1, z1) = tune_pattern("Pattern 1 (fwd: compute || AllGather)", p1, &cluster);
+    t1.print();
+    save_table(&t1);
+
+    // Pattern 2: a mid-stack backward group (ReduceScatter + AllGather).
+    let p2 = schedule.groups.iter().find(|g| g.name == "bwd.l16").unwrap();
+    assert_eq!(p2.comms.len(), 2, "Pattern 2 must have two comms");
+    let (t2, z2) = tune_pattern("Pattern 2 (bwd: compute || RS+AG)", p2, &cluster);
+    t2.print();
+    save_table(&t2);
+
+    // Shape checks vs the paper's story.
+    let (nccl1, auto1, lagom1) = (z1[0], z1[1], z1[2]);
+    assert!(lagom1 < nccl1, "Lagom beats NCCL on pattern 1");
+    assert!(auto1 > lagom1, "AutoCCL behind Lagom on pattern 1 (paper: 0.87x vs 1.35x)");
+    let (nccl2, _auto2, lagom2) = (z2[0], z2[1], z2[2]);
+    // Pattern 2's window is deeply computation-bound on our calibration, so
+    // the achievable gain is smaller than the paper's 1.43x; Lagom must at
+    // least never regress (see EXPERIMENTS.md for the deviation note).
+    assert!(lagom2 <= nccl2 * 1.01, "Lagom must not regress on pattern 2");
+    println!(
+        "\npattern 1: Lagom {:.2}x vs NCCL (paper 1.35x); AutoCCL {:.2}x (paper 0.87x)",
+        nccl1 / lagom1,
+        nccl1 / auto1
+    );
+    println!("pattern 2: Lagom {:.2}x vs NCCL (paper 1.43x)", nccl2 / lagom2);
+
+    // Coverage claim (Fig 8 caption: the two patterns cover ~90% of
+    // end-to-end time): measure the fraction of iteration time in fwd/bwd
+    // layer groups vs everything else.
+    let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 9));
+    let mut tn = NcclTuner::new(cluster.clone());
+    let cfg = tn.tune_schedule(&schedule, &mut prof);
+    let mut eval = SimProfiler::with_reps(SimEnv::new(cluster.clone(), 11), 3);
+    let (total, groups) = lagom::profiler::profile_schedule(&mut eval, &schedule, &cfg.configs);
+    let pattern_time: f64 = schedule
+        .groups
+        .iter()
+        .zip(&groups)
+        .filter(|(g, _)| g.name.starts_with("fwd.l") || g.name.starts_with("bwd.l"))
+        .map(|(_, m)| m.makespan)
+        .sum();
+    println!(
+        "patterns 1+2 cover {:.0}% of iteration time (paper: ~90%)",
+        pattern_time / total * 100.0
+    );
+    assert!(pattern_time / total > 0.75);
+}

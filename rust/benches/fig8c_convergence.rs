@@ -1,0 +1,80 @@
+//! Fig 8c — tuning convergence: AutoCCL vs Lagom on a 2-communication
+//! overlap.
+//!
+//! Paper: AutoCCL converges in ~16 iterations, Lagom in ~33 — a ≈1:2 ratio
+//! consistent with Lagom's *linear* complexity in the number of
+//! communications (Lagom co-tunes the joint overlap; AutoCCL tunes each
+//! comm's wire time independently).
+
+use lagom::bench::{save_table, Table};
+use lagom::comm::{CollectiveKind, CommOpDesc};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::profiler::SimProfiler;
+use lagom::sim::SimEnv;
+use lagom::tuner::{AutoCclTuner, LagomTuner, Tuner};
+use lagom::util::units::MIB;
+
+fn two_comm_group() -> OverlapGroup {
+    OverlapGroup::with(
+        "fig8c",
+        (0..7)
+            .map(|i| CompOpDesc::matmul(format!("mm{i}"), 2048, 2048, 2560, 2))
+            .collect(),
+        vec![
+            CommOpDesc::new("commA", CollectiveKind::AllReduce, 16 * MIB, 8),
+            CommOpDesc::new("commB", CollectiveKind::AllReduce, 96 * MIB, 8),
+        ],
+    )
+}
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let mut schedule = IterationSchedule::new("fig8c");
+    schedule.push(two_comm_group());
+
+    let mut t = Table::new(
+        "Fig 8c — convergence on a 2-comm overlap",
+        &["tuner", "iterations", "final makespan (ms)", "trajectory (iter@ms)"],
+    );
+    let mut iters = Vec::new();
+    for (label, mut tuner) in [
+        ("AutoCCL", Box::new(AutoCclTuner::new(cluster.clone())) as Box<dyn Tuner>),
+        ("Lagom", Box::new(LagomTuner::new(cluster.clone()))),
+    ] {
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 42));
+        let r = tuner.tune_schedule(&schedule, &mut prof);
+        let mut eval = SimProfiler::with_reps(SimEnv::new(cluster.clone(), 7), 5);
+        let z = lagom::profiler::ProfileBackend::profile_group(
+            &mut eval,
+            &schedule.groups[0],
+            &r.configs,
+        )
+        .makespan;
+        // Sample the trajectory at a few points.
+        let samples: Vec<String> = r
+            .trajectory
+            .iter()
+            .step_by((r.trajectory.len() / 6).max(1))
+            .map(|(i, m)| format!("{i}@{:.1}", m * 1e3))
+            .collect();
+        t.row(vec![
+            label.to_string(),
+            r.iterations.to_string(),
+            format!("{:.2}", z * 1e3),
+            samples.join(" "),
+        ]);
+        iters.push(r.iterations as f64);
+    }
+    t.print();
+    save_table(&t);
+
+    let ratio = iters[1] / iters[0];
+    println!(
+        "\nLagom/AutoCCL iteration ratio: {:.2} (paper: 33/16 ≈ 2.1); overhead negligible vs 1M+ training iterations"
+    , ratio);
+    // Lagom costs more iterations than a per-comm wire tuner, but within a
+    // small constant factor — not exponential.
+    assert!(ratio < 6.0, "Lagom stays within a small constant of AutoCCL: {ratio}");
+    assert!(iters[1] < 200.0, "linear, not exponential (grid^2 would be ~1296)");
+}

@@ -1,0 +1,71 @@
+//! Hot-path microbenchmarks (the §Perf numbers in EXPERIMENTS.md):
+//! simulator group execution, full-schedule simulation, comm cost model,
+//! and end-to-end tuning wall time. This is the criterion-replacement
+//! harness (`lagom::bench`).
+
+use lagom::bench::BenchRunner;
+use lagom::comm::{comm_time, CollectiveKind, CommConfig, CommOpDesc};
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{build_schedule, Parallelism, Workload};
+use lagom::profiler::SimProfiler;
+use lagom::sim::{simulate_group, simulate_schedule, SimEnv};
+use lagom::tuner::{LagomTuner, NcclTuner, Tuner};
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let mut runner = BenchRunner::new();
+
+    // Comm wire-cost model.
+    let op = CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 << 20, 8);
+    let cfg = CommConfig::default_ring();
+    let topo = cluster.topology.clone();
+    let gpu = cluster.gpu().clone();
+    runner.bench("comm_time(AllReduce 32MB)", || {
+        std::hint::black_box(comm_time(&op, &cfg, &topo, &gpu));
+    });
+
+    // Single overlap-group simulation (the tuning loop's inner cost).
+    let w = Workload {
+        model: ModelSpec::phi2(),
+        par: Parallelism::Fsdp { world: 8 },
+        mbs: 2,
+        gbs: 16,
+    };
+    let schedule = build_schedule(&w, &cluster);
+    let group = schedule.groups.iter().find(|g| g.name == "bwd.l16").unwrap().clone();
+    let mut nccl = NcclTuner::new(cluster.clone());
+    let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 1));
+    let cfgs = nccl.tune_schedule(&schedule, &mut prof).configs;
+    let gcfg: Vec<CommConfig> = cfgs[..group.comms.len()].to_vec();
+    let mut env = SimEnv::new(cluster.clone(), 2);
+    runner.bench("simulate_group(bwd layer, 2 comms)", || {
+        std::hint::black_box(simulate_group(&group, &gcfg, &mut env));
+    });
+
+    // Full 32-layer Phi-2 FSDP iteration.
+    let mut env2 = SimEnv::new(cluster.clone(), 3);
+    runner.bench("simulate_schedule(Phi-2 FSDP, 32 layers)", || {
+        std::hint::black_box(simulate_schedule(&schedule, &cfgs, &mut env2));
+    });
+
+    // End-to-end Lagom tuning of a truncated model (what a retune costs).
+    let mut small = ModelSpec::phi2();
+    small.layers = 4;
+    let ws = Workload { model: small, par: Parallelism::Fsdp { world: 8 }, mbs: 2, gbs: 16 };
+    let ssched = build_schedule(&ws, &cluster);
+    runner.bench("lagom_tune(Phi-2 FSDP, 4 layers)", || {
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), 4));
+        let mut tuner = LagomTuner::new(cluster.clone());
+        std::hint::black_box(tuner.tune_schedule(&ssched, &mut prof));
+    });
+
+    // Persist for EXPERIMENTS.md §Perf.
+    std::fs::create_dir_all("target").ok();
+    std::fs::write(
+        "target/microbench.json",
+        runner.to_json().to_pretty(),
+    )
+    .ok();
+    println!("\nwrote target/microbench.json");
+}

@@ -1,0 +1,249 @@
+//! Mini-criterion: a statistical micro/macro-benchmark harness (the
+//! `criterion` crate is not in the offline set).
+//!
+//! Two layers:
+//! * [`time_fn`] / [`BenchRunner`] — wall-clock timing with warmup,
+//!   adaptive iteration counts and outlier-robust summaries, used by
+//!   `rust/benches/microbench.rs` for hot-path timing.
+//! * [`Table`] — fixed-width result tables the figure benches print, with
+//!   JSON export for EXPERIMENTS.md bookkeeping.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    /// Per-iteration wall time summary (seconds).
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:40} {:>12}/iter  p50 {:>12}  p99 {:>12}  (±{:.1}%, n={})",
+            self.name,
+            crate::util::units::fmt_secs(self.summary.mean),
+            crate::util::units::fmt_secs(self.summary.p50),
+            crate::util::units::fmt_secs(self.summary.p99),
+            self.summary.rel_stddev() * 100.0,
+            self.samples,
+        )
+    }
+}
+
+/// Benchmark a closure: warm up, pick an iteration count targeting
+/// ~`sample_ms` per sample, collect `samples` samples.
+pub fn time_fn<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    time_fn_cfg(name, 12, 30.0, &mut f)
+}
+
+/// Configurable variant: `samples` samples of ≈`sample_ms` each.
+pub fn time_fn_cfg<F: FnMut()>(name: &str, samples: usize, sample_ms: f64, f: &mut F) -> BenchStats {
+    // Warmup + calibration: estimate cost of one call.
+    let t0 = Instant::now();
+    f();
+    let mut per_call = t0.elapsed().as_secs_f64().max(1e-9);
+    // Refine if very fast.
+    if per_call < 1e-4 {
+        let reps = (1e-3 / per_call).ceil() as u64;
+        let t = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        per_call = t.elapsed().as_secs_f64() / reps as f64;
+    }
+    let iters = ((sample_ms / 1e3) / per_call).ceil().max(1.0) as u64;
+
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        xs.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    BenchStats {
+        name: name.to_string(),
+        summary: Summary::of(&xs),
+        iters_per_sample: iters,
+        samples,
+    }
+}
+
+/// A collection of benchmark cases with uniform reporting.
+#[derive(Default)]
+pub struct BenchRunner {
+    pub results: Vec<BenchStats>,
+}
+
+impl BenchRunner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchStats {
+        let s = time_fn(name, f);
+        println!("{}", s.report_line());
+        self.results.push(s);
+        self.results.last().unwrap()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("mean_s", Json::num(r.summary.mean)),
+                        ("p50_s", Json::num(r.summary.p50)),
+                        ("p99_s", Json::num(r.summary.p99)),
+                        ("rel_stddev", Json::num(r.summary.rel_stddev())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Fixed-width table printer for figure/table reproductions.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Append a table's JSON to `target/bench_results.jsonl` (best-effort; used
+/// to assemble EXPERIMENTS.md).
+pub fn save_table(t: &Table) {
+    let _ = std::fs::create_dir_all("target");
+    let line = t.to_json().to_string();
+    use std::io::Write as _;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("target/bench_results.jsonl")
+    {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_sane_durations() {
+        let s = time_fn_cfg("spin", 4, 2.0, &mut || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.summary.mean > 0.0);
+        assert!(s.summary.mean < 1e-3, "1k adds should be fast: {}", s.summary.mean);
+        assert!(s.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new("Fig X", &["model", "speedup"]);
+        t.row(vec!["phi2".into(), "1.33x".into()]);
+        t.row(vec!["llama-3-8b".into(), "1.07x".into()]);
+        let r = t.render();
+        assert!(r.contains("Fig X"));
+        assert!(r.contains("1.33x"));
+        // Columns aligned: both rows same length.
+        let rows: Vec<&str> = r.lines().filter(|l| l.contains('x')).collect();
+        assert_eq!(rows[0].len(), rows[1].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["v".into()]);
+        let j = t.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str(), Some("t"));
+    }
+}

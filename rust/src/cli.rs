@@ -1,0 +1,139 @@
+//! Hand-rolled command-line argument parsing (no `clap` in the offline
+//! crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands; produces the usual "unknown flag" / "missing value" errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw token stream (no program name). Flags listed in
+    /// `bool_flags` never consume a following value.
+    pub fn parse(tokens: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = tokens
+                        .get(i)
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v.clone());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment (skipping argv[0]).
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&tokens, bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Reject any option not in `known` (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                return Err(format!("unknown flag --{f}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&toks("tune --model phi2 --cluster=b8 --verbose x y"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.command.as_deref(), Some("tune"));
+        assert_eq!(a.get("model"), Some("phi2"));
+        assert_eq!(a.get("cluster"), Some("b8"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["x", "y"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&toks("run --model"), &[]).is_err());
+    }
+
+    #[test]
+    fn numeric_getters() {
+        let a = Args::parse(&toks("x --steps 50 --sigma 0.02"), &[]).unwrap();
+        assert_eq!(a.get_u64("steps", 1).unwrap(), 50);
+        assert_eq!(a.get_f64("sigma", 0.0).unwrap(), 0.02);
+        assert_eq!(a.get_u64("absent", 7).unwrap(), 7);
+        assert!(a.get_u64("sigma", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let a = Args::parse(&toks("x --good 1 --bad 2"), &[]).unwrap();
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+}

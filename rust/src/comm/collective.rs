@@ -1,0 +1,130 @@
+//! Collective operation descriptors (what the schedules emit and the cost
+//! model prices).
+
+use crate::util::units::fmt_bytes;
+use std::fmt;
+
+/// The collective patterns used by the paper's parallelisms (§2.1):
+/// TP → AllReduce; FSDP → AllGather + ReduceScatter; EP → AllToAll;
+/// DP → AllReduce; plus Broadcast for config distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+}
+
+impl CollectiveKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduce => "AllReduce",
+            CollectiveKind::AllGather => "AllGather",
+            CollectiveKind::ReduceScatter => "ReduceScatter",
+            CollectiveKind::AllToAll => "AllToAll",
+            CollectiveKind::Broadcast => "Broadcast",
+        }
+    }
+
+    /// Bytes each rank moves over its bottleneck wire link for a ring
+    /// realization, as a multiple of the buffer size `s` over `p` ranks.
+    /// (The classic α-β model coefficients.)
+    pub fn wire_factor(self, p: u32) -> f64 {
+        let p = p as f64;
+        match self {
+            CollectiveKind::AllReduce => 2.0 * (p - 1.0) / p,
+            CollectiveKind::AllGather | CollectiveKind::ReduceScatter => (p - 1.0) / p,
+            CollectiveKind::AllToAll => (p - 1.0) / p,
+            CollectiveKind::Broadcast => 1.0,
+        }
+    }
+
+    /// Pipeline steps of the ring realization (latency multiplier).
+    pub fn ring_steps(self, p: u32) -> u32 {
+        match self {
+            CollectiveKind::AllReduce => 2 * (p.saturating_sub(1)),
+            CollectiveKind::AllGather | CollectiveKind::ReduceScatter => p.saturating_sub(1),
+            CollectiveKind::AllToAll => p.saturating_sub(1),
+            CollectiveKind::Broadcast => p.saturating_sub(1),
+        }
+    }
+
+    /// Whether the collective performs reduction arithmetic (costs extra
+    /// global-memory reads on each hop).
+    pub fn reduces(self) -> bool {
+        matches!(self, CollectiveKind::AllReduce | CollectiveKind::ReduceScatter)
+    }
+}
+
+impl fmt::Display for CollectiveKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A single collective instance inside an iteration schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommOpDesc {
+    /// Stable name for reports, e.g. `"layer3.ag_params"`.
+    pub name: String,
+    pub kind: CollectiveKind,
+    /// Total buffer bytes (the "32 MB" of `AllReduce(32MB)`).
+    pub bytes: u64,
+    /// Participating ranks (communicator size).
+    pub world: u32,
+    /// First rank of the communicator (consecutive-rank communicators).
+    pub base_rank: u32,
+}
+
+impl CommOpDesc {
+    pub fn new(name: impl Into<String>, kind: CollectiveKind, bytes: u64, world: u32) -> Self {
+        CommOpDesc { name: name.into(), kind, bytes, world, base_rank: 0 }
+    }
+}
+
+impl fmt::Display for CommOpDesc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}({}, p={})", self.kind, fmt_bytes(self.bytes), self.world)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_factors_alpha_beta() {
+        // AllReduce over 8 ranks moves 2*7/8 of the buffer per rank.
+        assert!((CollectiveKind::AllReduce.wire_factor(8) - 1.75).abs() < 1e-12);
+        assert!((CollectiveKind::AllGather.wire_factor(8) - 0.875).abs() < 1e-12);
+        assert!((CollectiveKind::Broadcast.wire_factor(8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_equals_rs_plus_ag() {
+        // Ring AllReduce = ReduceScatter + AllGather in both wire bytes and steps.
+        for p in [2u32, 4, 8, 16] {
+            let ar = CollectiveKind::AllReduce.wire_factor(p);
+            let rs = CollectiveKind::ReduceScatter.wire_factor(p);
+            let ag = CollectiveKind::AllGather.wire_factor(p);
+            assert!((ar - (rs + ag)).abs() < 1e-12);
+            assert_eq!(
+                CollectiveKind::AllReduce.ring_steps(p),
+                CollectiveKind::ReduceScatter.ring_steps(p) + CollectiveKind::AllGather.ring_steps(p)
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_single_rank() {
+        assert_eq!(CollectiveKind::AllReduce.ring_steps(1), 0);
+        assert_eq!(CollectiveKind::AllReduce.wire_factor(1), 0.0);
+    }
+
+    #[test]
+    fn display_formats() {
+        let op = CommOpDesc::new("ag0", CollectiveKind::AllGather, 32 * 1024 * 1024, 8);
+        assert_eq!(format!("{op}"), "AllGather(32 MB, p=8)");
+    }
+}

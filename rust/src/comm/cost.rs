@@ -1,0 +1,319 @@
+//! Wire-cost and resource-occupancy model of a collective under a given
+//! configuration — the externally-observable behaviour of the NCCL stand-in.
+//!
+//! Shapes this model must reproduce (validated in tests and in the Fig 3
+//! bench against the paper's measurements):
+//! * communication time falls with NC with diminishing returns, then rises
+//!   slightly at large NC (scheduling/fill overhead);
+//! * communication time falls with C (fewer per-chunk overheads), then rises
+//!   slightly at very large C (pipeline fill);
+//! * LL trades bandwidth for latency, Simple the reverse, LL128 in between;
+//! * the collective occupies `NC` SMs and draws global-memory bandwidth
+//!   proportional to its wire rate (x a copy factor) — the two contention
+//!   surfaces of §3.2.
+
+use super::collective::CommOpDesc;
+use super::params::{Algorithm, CommConfig, Protocol, Transport};
+use crate::hw::{GpuSpec, Topology};
+
+/// Resources a running collective holds, as seen by the contention model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommResources {
+    /// SMs occupied by persistent channel threadblocks (= min(NC, λ)).
+    pub sms: u32,
+    /// Global-memory bandwidth draw `V(NC, C)` in bytes/s while active.
+    pub mem_bw: f64,
+    /// Fraction of L2 the channels' working set covers (0..1) — secondary
+    /// contention term.
+    pub l2_frac: f64,
+}
+
+/// Per-protocol (bandwidth multiplier, per-chunk overhead seconds, per-step
+/// latency seconds).
+fn proto_params(p: Protocol) -> (f64, f64, f64) {
+    match p {
+        // LL: 8B data + 8B flag per 16B → 50% wire efficiency, and spin-wait
+        // stores keep effective bw lower still; virtually no sync latency.
+        Protocol::LL => (0.35, 0.4e-6, 0.6e-6),
+        // LL128: 120/128 bytes carry data on NVLink-class fabrics.
+        Protocol::LL128 => (0.92, 0.7e-6, 1.0e-6),
+        // Simple: full bandwidth, but chunk-granular synchronization.
+        Protocol::Simple => (1.0, 1.6e-6, 3.0e-6),
+    }
+}
+
+/// Per-transport (bandwidth multiplier, extra per-step latency, extra
+/// memory-copy factor for staging buffers).
+fn transport_params(t: Transport) -> (f64, f64, f64) {
+    match t {
+        Transport::P2p => (1.0, 0.0, 0.0),
+        // Host-staged: extra bounce buffer copy, lower effective bw.
+        Transport::Shm => (0.8, 2.0e-6, 1.0),
+        // NIC + proxy thread: slight bw tax, fixed proxy latency.
+        Transport::Net => (0.95, 5.0e-6, 0.5),
+    }
+}
+
+/// Channel-count saturation: fraction of link bandwidth achievable with NC
+/// channels. Calibrated so ~4 channels reach ≈63%, 8 ≈86%, 16 ≈98% —
+/// matching Fig 3b's diminishing returns.
+fn nc_saturation(nc: u32) -> f64 {
+    1.0 - (-(nc as f64) / 4.0).exp()
+}
+
+/// Per-channel launch/scheduling overhead (seconds). Produces the paper's
+/// "slight increases at larger values" of NC (Fig 3b) without ever making
+/// huge NC catastrophically slow for communication itself.
+const PER_CHANNEL_OVERHEAD: f64 = 1.5e-6;
+
+/// The slice a channel actually moves per pipeline step: the configured
+/// chunk, capped by the per-rank shard (a collective can't stage more than
+/// it owns).
+pub fn effective_chunk(op: &CommOpDesc, cfg: &CommConfig) -> f64 {
+    let shard = op.bytes as f64 / op.world.max(1) as f64;
+    (cfg.chunk as f64).min(shard).max(1024.0)
+}
+
+/// Chunk-size efficiency: small slices can't cover per-transfer setup. The
+/// half-saturation point is protocol-dependent — LL's fire-and-forget
+/// stores stay efficient at tiny slices, Simple's rendezvous does not.
+fn chunk_efficiency(c_eff: f64, proto: Protocol) -> f64 {
+    let half = match proto {
+        Protocol::LL => 2.0 * 1024.0,
+        Protocol::LL128 => 16.0 * 1024.0,
+        Protocol::Simple => 48.0 * 1024.0,
+    };
+    c_eff / (c_eff + half)
+}
+
+/// Effective aggregate wire bandwidth (bytes/s) for a config moving slices
+/// of `c_eff` bytes on a topology slice spanning `base..base+world`.
+pub fn effective_bandwidth(
+    topo: &Topology,
+    cfg: &CommConfig,
+    base_rank: u32,
+    world: u32,
+    c_eff: f64,
+) -> f64 {
+    let link = if topo.spans_nodes(base_rank, world) {
+        topo.bottleneck_link()
+    } else {
+        topo.intra
+    };
+    let (proto_bw, _, _) = proto_params(cfg.proto);
+    let (trans_bw, _, _) = transport_params(cfg.transport);
+    let algo_bw = match cfg.algo {
+        Algorithm::Ring => 1.0,
+        // Tree roughly halves per-link utilization on bandwidth-bound transfers.
+        Algorithm::Tree => 0.82,
+    };
+    link.bandwidth
+        * proto_bw
+        * trans_bw
+        * algo_bw
+        * nc_saturation(cfg.nc)
+        * chunk_efficiency(c_eff, cfg.proto)
+}
+
+/// Standalone (uncontended) execution time of a collective. This is the
+/// `x_j^{s_j}` of the cost model when nothing competes for the wire.
+pub fn comm_time(op: &CommOpDesc, cfg: &CommConfig, topo: &Topology, gpu: &GpuSpec) -> f64 {
+    if op.world <= 1 || op.bytes == 0 {
+        return gpu.launch_overhead;
+    }
+    let c_eff = effective_chunk(op, cfg);
+    let bw = effective_bandwidth(topo, cfg, op.base_rank, op.world, c_eff);
+    let wire_bytes = op.kind.wire_factor(op.world) * op.bytes as f64;
+
+    let steps = match cfg.algo {
+        Algorithm::Ring => op.kind.ring_steps(op.world) as f64,
+        Algorithm::Tree => 2.0 * (op.world as f64).log2().ceil(),
+    };
+    let (_, proto_chunk, proto_step) = proto_params(cfg.proto);
+    let (_, trans_lat, _) = transport_params(cfg.transport);
+
+    // Per-step latency: hop latency around the ring (or up/down the tree)
+    // plus protocol sync and transport fixed costs.
+    let hop_lat = topo.ring_hop_latency(op.base_rank, op.world) / (op.world as f64).max(1.0);
+    let lat_term = steps * (hop_lat + proto_step + trans_lat);
+
+    // Bandwidth term: wire bytes at effective aggregate bandwidth.
+    let bw_term = wire_bytes / bw;
+
+    // Chunking overhead: each channel processes its shard one slice at a
+    // time; every slice pays a protocol sync. Dominates at small C (Fig 3c
+    // left).
+    let chunks = (wire_bytes / (c_eff * cfg.nc as f64)).ceil().max(1.0);
+    let chunk_term = chunks * proto_chunk;
+
+    // Pipeline fill: the first slice must traverse `steps` hops before the
+    // pipeline is full; grows with C, producing the upturn at very large
+    // chunks (Fig 3c right).
+    let fill_term = steps * c_eff / bw;
+
+    // Channel setup/scheduling: slight upturn at very large NC (Fig 3b).
+    let sched_term = cfg.nc as f64 * PER_CHANNEL_OVERHEAD;
+
+    gpu.launch_overhead + lat_term + bw_term + chunk_term + fill_term + sched_term
+}
+
+/// GPU resources the collective occupies while running (§3.2's two
+/// contention surfaces). `duration` is the time the collective takes (so
+/// the bandwidth draw can be derived from bytes actually moved).
+pub fn comm_resources(
+    op: &CommOpDesc,
+    cfg: &CommConfig,
+    topo: &Topology,
+    gpu: &GpuSpec,
+    duration: f64,
+) -> CommResources {
+    if op.world <= 1 || op.bytes == 0 {
+        return CommResources { sms: 0, mem_bw: 0.0, l2_frac: 0.0 };
+    }
+    // Each channel = one persistent threadblock on one SM. NCCL never takes
+    // every SM; cap at λ - 1 so at least one SM always remains.
+    let sms = cfg.nc.min(gpu.sms.saturating_sub(1));
+
+    // Global-memory traffic: every wire byte is read from and written to
+    // HBM at least once on each rank; reductions read the accumulator too;
+    // staged transports copy through bounce buffers.
+    let wire_bytes = op.kind.wire_factor(op.world) * op.bytes as f64;
+    let (_, _, trans_copies) = transport_params(cfg.transport);
+    let mut copies = 2.0 + trans_copies;
+    if op.kind.reduces() {
+        copies += 1.0;
+    }
+    // LL's flag-interleaved format doubles the footprint of each byte.
+    if cfg.proto == Protocol::LL {
+        copies *= 1.6;
+    }
+    let mem_bw = (wire_bytes * copies / duration.max(1e-9)).min(gpu.mem_bw);
+
+    // Channel FIFO working set vs L2: NC channels × chunk-sized slots × 2
+    // (send+recv staging).
+    let footprint = (cfg.nc as u64 * cfg.chunk * 2) as f64;
+    let l2_frac = (footprint / gpu.l2_bytes as f64).min(1.0);
+
+    let _ = topo;
+    CommResources { sms, mem_bw, l2_frac }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collective::CollectiveKind;
+    use crate::hw::ClusterSpec;
+    use crate::util::units::{KIB, MIB};
+
+    fn fixture() -> (CommOpDesc, Topology, GpuSpec) {
+        let cl = ClusterSpec::cluster_b(1); // 8x A40 PCIe — Fig 3's testbed
+        (
+            CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8),
+            cl.topology.clone(),
+            cl.gpu().clone(),
+        )
+    }
+
+    fn cfg(nc: u32, c: u64) -> CommConfig {
+        CommConfig { nc, nt: 128, chunk: c, ..CommConfig::default_ring() }
+    }
+
+    #[test]
+    fn time_decreases_with_nc_then_flattens() {
+        let (op, topo, gpu) = fixture();
+        let t1 = comm_time(&op, &cfg(1, 512 * KIB), &topo, &gpu);
+        let t4 = comm_time(&op, &cfg(4, 512 * KIB), &topo, &gpu);
+        let t16 = comm_time(&op, &cfg(16, 512 * KIB), &topo, &gpu);
+        let t64 = comm_time(&op, &cfg(64, 512 * KIB), &topo, &gpu);
+        assert!(t1 > t4 && t4 > t16, "t1={t1} t4={t4} t16={t16}");
+        // Diminishing returns: 16→64 changes far less than 1→4.
+        assert!((t16 - t64).abs() < (t1 - t4) * 0.2, "t16={t16} t64={t64}");
+    }
+
+    #[test]
+    fn time_decreases_with_c_then_upturns() {
+        let (op, topo, gpu) = fixture();
+        let t16k = comm_time(&op, &cfg(4, 16 * KIB), &topo, &gpu);
+        let t512k = comm_time(&op, &cfg(4, 512 * KIB), &topo, &gpu);
+        let t16m = comm_time(&op, &cfg(4, 16 * MIB), &topo, &gpu);
+        assert!(t16k > t512k, "small chunks pay per-chunk overhead");
+        assert!(t16m > t512k, "huge chunks pay pipeline fill");
+    }
+
+    #[test]
+    fn ll_beats_simple_on_small_messages_only() {
+        let (_, topo, gpu) = fixture();
+        let small = CommOpDesc::new("s", CollectiveKind::AllReduce, 64 * KIB, 8);
+        let large = CommOpDesc::new("l", CollectiveKind::AllReduce, 256 * MIB, 8);
+        let ll = CommConfig { proto: Protocol::LL, ..cfg(4, 64 * KIB) };
+        let simple = cfg(4, 64 * KIB);
+        assert!(comm_time(&small, &ll, &topo, &gpu) < comm_time(&small, &simple, &topo, &gpu));
+        assert!(comm_time(&large, &ll, &topo, &gpu) > comm_time(&large, &simple, &topo, &gpu));
+    }
+
+    #[test]
+    fn tree_beats_ring_on_latency_bound_world() {
+        let cl = ClusterSpec::cluster_a(2);
+        let (topo, gpu) = (cl.topology.clone(), cl.gpu().clone());
+        let tiny = CommOpDesc::new("t", CollectiveKind::AllReduce, 32 * KIB, 16);
+        let ring = cfg(2, 16 * KIB);
+        let tree = CommConfig { algo: Algorithm::Tree, ..ring };
+        assert!(comm_time(&tiny, &tree, &topo, &gpu) < comm_time(&tiny, &ring, &topo, &gpu));
+    }
+
+    #[test]
+    fn nvlink_faster_than_pcie() {
+        let a = ClusterSpec::cluster_a(1);
+        let b = ClusterSpec::cluster_b(1);
+        let op = CommOpDesc::new("ar", CollectiveKind::AllReduce, 64 * MIB, 8);
+        let c = cfg(8, 2 * MIB);
+        let ta = comm_time(&op, &c, &a.topology, a.gpu());
+        let tb = comm_time(&op, &c, &b.topology, b.gpu());
+        assert!(ta < tb, "NVLink {ta} should beat PCIe {tb}");
+    }
+
+    #[test]
+    fn resources_scale_with_nc_and_c() {
+        let (op, topo, gpu) = fixture();
+        let t = comm_time(&op, &cfg(8, 128 * KIB), &topo, &gpu);
+        let r8 = comm_resources(&op, &cfg(8, 128 * KIB), &topo, &gpu, t);
+        let r32 = comm_resources(&op, &cfg(32, 128 * KIB), &topo, &gpu, t);
+        assert_eq!(r8.sms, 8);
+        assert_eq!(r32.sms, 32);
+        assert!(r32.l2_frac > r8.l2_frac, "more channels → bigger L2 footprint");
+        // Same duration, same wire bytes → same bw draw; but L2/SM pressure up.
+        assert!((r8.mem_bw - r32.mem_bw).abs() < 1.0);
+        // Chunk size also grows the footprint.
+        let rbig = comm_resources(&op, &cfg(8, 384 * KIB), &topo, &gpu, t);
+        assert!(rbig.l2_frac > r8.l2_frac);
+    }
+
+    #[test]
+    fn mem_bw_draw_bounded_by_hbm() {
+        let (op, topo, gpu) = fixture();
+        let r = comm_resources(&op, &cfg(8, 2 * MIB), &topo, &gpu, 1e-9);
+        assert!(r.mem_bw <= gpu.mem_bw);
+    }
+
+    #[test]
+    fn degenerate_world_one() {
+        let (_, topo, gpu) = fixture();
+        let op = CommOpDesc::new("x", CollectiveKind::AllReduce, MIB, 1);
+        assert_eq!(comm_time(&op, &cfg(8, MIB), &topo, &gpu), gpu.launch_overhead);
+        let r = comm_resources(&op, &cfg(8, MIB), &topo, &gpu, 1.0);
+        assert_eq!(r.sms, 0);
+    }
+
+    #[test]
+    fn same_comm_time_different_contention() {
+        // The paper's key §3.2 finding: NC=16 vs NC=32 can have nearly the
+        // same communication time but very different resource occupancy.
+        let (op, topo, gpu) = fixture();
+        let t16 = comm_time(&op, &cfg(16, 512 * KIB), &topo, &gpu);
+        let t32 = comm_time(&op, &cfg(32, 512 * KIB), &topo, &gpu);
+        assert!((t16 - t32).abs() / t16 < 0.05, "comm times near-equal");
+        let r16 = comm_resources(&op, &cfg(16, 512 * KIB), &topo, &gpu, t16);
+        let r32 = comm_resources(&op, &cfg(32, 512 * KIB), &topo, &gpu, t32);
+        assert!(r32.sms == 2 * r16.sms, "but SM occupancy doubles");
+    }
+}

@@ -1,0 +1,20 @@
+//! Collective-communication substrate (the NCCL stand-in).
+//!
+//! Lagom never modifies the collective library; it tunes the six parameters
+//! AutoCCL identified (§2.2): **Algorithm, Protocol, Transport** (the
+//! implementation-related subspace) and **Number of Channels (NC), Number of
+//! Threads (NT), Chunk size (C)** (the resource-related parameters). This
+//! module defines that parameter space, the collectives' wire-cost model,
+//! the resources a running collective occupies on the GPU (SMs + global
+//! memory bandwidth — the two contention surfaces of §3.2), and NCCL's
+//! default configuration heuristics (the paper's NCCL baseline).
+
+pub mod collective;
+pub mod cost;
+pub mod nccl;
+pub mod params;
+
+pub use collective::{CollectiveKind, CommOpDesc};
+pub use cost::{comm_resources, comm_time, CommResources};
+pub use nccl::nccl_default_config;
+pub use params::{Algorithm, CommConfig, ParamSpace, Protocol, Transport};

@@ -1,0 +1,126 @@
+//! NCCL's default configuration heuristics — the paper's NCCL baseline.
+//!
+//! NCCL (v2.18-era) picks Algorithm/Protocol from message size and topology
+//! via its internal tuning tables, and channel count from the fabric: more
+//! channels on NVLink (to saturate many links) than on PCIe. §4.2 notes
+//! "NCCL defaults to larger NC values to exploit the available bandwidth
+//! when GPUs are connected via NVLink, which significantly increases
+//! contention" — that behaviour is reproduced here. Fig 8 pins the default
+//! for the Phi-2 FSDP AllGather at NC=8, C=2MB on cluster A.
+
+use super::collective::CommOpDesc;
+use super::params::{Algorithm, CommConfig, Protocol, Transport};
+use crate::hw::{LinkKind, Topology};
+use crate::util::units::{KIB, MIB};
+
+/// Default configuration NCCL would choose for `op` on `topo`, oblivious to
+/// any concurrently running computation (that obliviousness is the point).
+pub fn nccl_default_config(op: &CommOpDesc, topo: &Topology) -> CommConfig {
+    let spans_net = topo.spans_nodes(op.base_rank, op.world);
+    let transport = if spans_net {
+        Transport::Net
+    } else {
+        match topo.intra.kind {
+            LinkKind::NvLink => Transport::P2p,
+            LinkKind::Pcie4 => Transport::P2p, // peer DMA available on the testbed
+            _ => Transport::Shm,
+        }
+    };
+
+    // Protocol thresholds (per-rank bytes), mirroring NCCL's tuning tables.
+    let per_rank = op.bytes / op.world.max(1) as u64;
+    let proto = if per_rank < 64 * KIB {
+        Protocol::LL
+    } else if per_rank < 2 * MIB && topo.intra.kind == LinkKind::NvLink {
+        Protocol::LL128
+    } else {
+        Protocol::Simple
+    };
+
+    // Small or deep (multi-node) reductions go tree; bandwidth-bound go ring.
+    let algo = if spans_net && op.bytes < 4 * MIB {
+        Algorithm::Tree
+    } else {
+        Algorithm::Ring
+    };
+
+    // Channel count: enough to saturate the fabric. NVLink mesh wants many
+    // channels; PCIe saturates with few. (Fig 8: NC=8 default on cluster A.)
+    let nc = match topo.intra.kind {
+        LinkKind::NvLink => {
+            if spans_net {
+                16
+            } else {
+                8
+            }
+        }
+        _ => {
+            if spans_net {
+                8
+            } else {
+                4
+            }
+        }
+    };
+
+    // NCCL's buffer-slice default: 4 MB buffer / 2 slices = 2 MB chunks for
+    // Simple; LL chunks are much smaller.
+    let chunk = match proto {
+        Protocol::Simple => 2 * MIB,
+        Protocol::LL128 => 512 * KIB,
+        Protocol::LL => 128 * KIB,
+    };
+
+    CommConfig { algo, proto, transport, nc, nt: 512, chunk }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collective::CollectiveKind;
+    use crate::hw::ClusterSpec;
+
+    #[test]
+    fn fig8_default_reproduced() {
+        // Cluster A single node, FSDP AllGather of a Phi-2 layer shard:
+        // paper says NCCL uses NC=8, C=2MB.
+        let cl = ClusterSpec::cluster_a(1);
+        let op = CommOpDesc::new("ag", CollectiveKind::AllGather, 60 * MIB, 8);
+        let cfg = nccl_default_config(&op, &cl.topology);
+        assert_eq!(cfg.nc, 8);
+        assert_eq!(cfg.chunk, 2 * MIB);
+        assert_eq!(cfg.proto, Protocol::Simple);
+        assert_eq!(cfg.algo, Algorithm::Ring);
+    }
+
+    #[test]
+    fn nvlink_uses_more_channels_than_pcie() {
+        let a = ClusterSpec::cluster_a(1);
+        let b = ClusterSpec::cluster_b(1);
+        let op = CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8);
+        assert!(
+            nccl_default_config(&op, &a.topology).nc > nccl_default_config(&op, &b.topology).nc
+        );
+    }
+
+    #[test]
+    fn small_messages_use_ll() {
+        let cl = ClusterSpec::cluster_a(1);
+        let op = CommOpDesc::new("tiny", CollectiveKind::AllReduce, 16 * KIB, 8);
+        assert_eq!(nccl_default_config(&op, &cl.topology).proto, Protocol::LL);
+    }
+
+    #[test]
+    fn inter_node_uses_net_transport() {
+        let cl = ClusterSpec::cluster_a(2);
+        let op = CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 16);
+        assert_eq!(nccl_default_config(&op, &cl.topology).transport, Transport::Net);
+    }
+
+    #[test]
+    fn small_multinode_prefers_tree() {
+        let cl = ClusterSpec::cluster_a(2);
+        let op = CommOpDesc::new("ar", CollectiveKind::AllReduce, 1 * MIB, 16);
+        assert_eq!(nccl_default_config(&op, &cl.topology).algo, Algorithm::Tree);
+    }
+}

@@ -1,0 +1,296 @@
+//! The tunable parameter space of a collective (AutoCCL's six parameters).
+
+use crate::util::units::{fmt_bytes, KIB, MIB};
+use std::fmt;
+
+/// Collective algorithm (implementation-related).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Algorithm {
+    /// Pipelined ring — bandwidth-optimal, latency linear in world size.
+    Ring,
+    /// Double binary tree — latency logarithmic, slightly lower bandwidth.
+    Tree,
+}
+
+/// Wire protocol (implementation-related).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Protocol {
+    /// Low-latency 8-byte flagged stores: tiny latency, ~35% bandwidth.
+    LL,
+    /// 128-byte cache-line protocol: ~92% bandwidth, small latency.
+    LL128,
+    /// Bulk copy + flags: full bandwidth, highest per-chunk latency.
+    Simple,
+}
+
+/// Data path between ranks (implementation-related).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Transport {
+    /// Direct GPU-to-GPU (NVLink / PCIe peer DMA).
+    P2p,
+    /// Staged through host shared memory (PCIe without peer access).
+    Shm,
+    /// Network (InfiniBand verbs) via the proxy thread.
+    Net,
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Algorithm::Ring => "Ring",
+            Algorithm::Tree => "Tree",
+        })
+    }
+}
+
+impl fmt::Display for Protocol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Protocol::LL => "LL",
+            Protocol::LL128 => "LL128",
+            Protocol::Simple => "Simple",
+        })
+    }
+}
+
+impl fmt::Display for Transport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Transport::P2p => "P2P",
+            Transport::Shm => "SHM",
+            Transport::Net => "NET",
+        })
+    }
+}
+
+/// One full configuration `s_j = (A, P, T, NC, NT, C)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CommConfig {
+    pub algo: Algorithm,
+    pub proto: Protocol,
+    pub transport: Transport,
+    /// NC — number of channels; each channel is one persistent threadblock
+    /// occupying one SM for the duration of the collective.
+    pub nc: u32,
+    /// NT — threads per channel threadblock.
+    pub nt: u32,
+    /// C — chunk size in bytes moved per channel per pipeline step.
+    pub chunk: u64,
+}
+
+impl fmt::Display for CommConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}/{}/{} NC={} NT={} C={}",
+            self.algo,
+            self.proto,
+            self.transport,
+            self.nc,
+            self.nt,
+            fmt_bytes(self.chunk)
+        )
+    }
+}
+
+impl CommConfig {
+    /// A neutral mid-range configuration (useful as a test fixture).
+    pub fn default_ring() -> CommConfig {
+        CommConfig {
+            algo: Algorithm::Ring,
+            proto: Protocol::Simple,
+            transport: Transport::P2p,
+            nc: 8,
+            nt: 512,
+            chunk: 2 * MIB,
+        }
+    }
+}
+
+/// Bounds + ladders of the resource-related parameters, and the enumeration
+/// of implementation-related subspaces (AutoCCL's divide-and-conquer axes).
+#[derive(Debug, Clone)]
+pub struct ParamSpace {
+    pub nc_min: u32,
+    /// NCCL's MAXCHANNELS; also capped by SM count at use sites.
+    pub nc_max: u32,
+    pub nt_ladder: Vec<u32>,
+    pub c_min: u64,
+    pub c_max: u64,
+    /// Chunk sizes are tuned at this granularity (NCCL buffers are
+    /// multiples of the line/slice size).
+    pub c_step: u64,
+}
+
+impl Default for ParamSpace {
+    fn default() -> Self {
+        ParamSpace {
+            nc_min: 1,
+            nc_max: 64,
+            nt_ladder: vec![64, 128, 256, 512, 640],
+            c_min: 16 * KIB,
+            c_max: 16 * MIB,
+            c_step: KIB,
+        }
+    }
+}
+
+impl ParamSpace {
+    /// Number of distinct (NC, NT, C) points — the paper quotes the joint
+    /// space as exceeding 10^6 per communication.
+    pub fn resource_space_size(&self) -> u64 {
+        let ncs = (self.nc_max - self.nc_min + 1) as u64;
+        let nts = self.nt_ladder.len() as u64;
+        let cs = (self.c_max - self.c_min) / self.c_step + 1;
+        ncs * nts * cs
+    }
+
+    /// Clamp a candidate config into the valid space.
+    pub fn clamp(&self, mut cfg: CommConfig) -> CommConfig {
+        cfg.nc = cfg.nc.clamp(self.nc_min, self.nc_max);
+        cfg.chunk = cfg.chunk.clamp(self.c_min, self.c_max);
+        // Snap C to the tuning granularity.
+        cfg.chunk = (cfg.chunk / self.c_step).max(1) * self.c_step;
+        // Snap NT to the nearest ladder entry.
+        cfg.nt = *self
+            .nt_ladder
+            .iter()
+            .min_by_key(|&&nt| (nt as i64 - cfg.nt as i64).abs())
+            .expect("nt ladder empty");
+        cfg
+    }
+
+    /// Minimal-resource starting point of Algorithm 2 (lines 1-3), keeping
+    /// the given implementation-related subspace.
+    pub fn minimal(&self, algo: Algorithm, proto: Protocol, transport: Transport) -> CommConfig {
+        CommConfig {
+            algo,
+            proto,
+            transport,
+            nc: self.nc_min,
+            nt: self.nt_ladder[0],
+            chunk: self.c_min,
+        }
+    }
+
+    /// Escalate (NC, NT, C) by relative learning rate `lr` (Alg 2 lines
+    /// 8-11): each parameter moves up its ladder proportionally to `lr`,
+    /// always by at least one step so progress is guaranteed.
+    pub fn escalate(&self, cfg: CommConfig, lr: f64) -> CommConfig {
+        let lr = lr.clamp(0.0, 1.0);
+        let mut next = cfg;
+        // NC: multiplicative growth, min +1.
+        let nc_grow = ((cfg.nc as f64) * (1.0 + lr)).ceil() as u32;
+        next.nc = nc_grow.max(cfg.nc + 1);
+        // NT: move up the ladder by round(lr * ladder_len) ≥ 1.
+        let pos = self.nt_ladder.iter().position(|&n| n >= cfg.nt).unwrap_or(0);
+        let jump = ((lr * self.nt_ladder.len() as f64).round() as usize).max(1);
+        let npos = (pos + jump).min(self.nt_ladder.len() - 1);
+        next.nt = self.nt_ladder[npos];
+        // C: multiplicative growth, min +1 step.
+        let c_grow = ((cfg.chunk as f64) * (1.0 + lr)).ceil() as u64;
+        next.chunk = c_grow.max(cfg.chunk + self.c_step);
+        self.clamp(next)
+    }
+
+    /// True iff `cfg` is already at the top of every resource ladder.
+    pub fn is_max(&self, cfg: &CommConfig) -> bool {
+        cfg.nc >= self.nc_max
+            && cfg.chunk >= self.c_max
+            && cfg.nt >= *self.nt_ladder.last().unwrap()
+    }
+
+    /// Enumerate the implementation-related subspaces valid for a topology
+    /// that `spans_net` (has inter-node hops) or not.
+    pub fn subspaces(&self, spans_net: bool) -> Vec<(Algorithm, Protocol, Transport)> {
+        let algos = [Algorithm::Ring, Algorithm::Tree];
+        let protos = [Protocol::Simple, Protocol::LL128, Protocol::LL];
+        let transports = if spans_net {
+            vec![Transport::Net]
+        } else {
+            vec![Transport::P2p, Transport::Shm]
+        };
+        let mut out = Vec::new();
+        for a in algos {
+            for p in protos {
+                for &t in &transports {
+                    out.push((a, p, t));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_exceeds_paper_quote() {
+        // §3.1: per-communication space exceeds r = 10^6 options.
+        assert!(ParamSpace::default().resource_space_size() > 1_000_000);
+    }
+
+    #[test]
+    fn clamp_snaps_to_ladders() {
+        let sp = ParamSpace::default();
+        let c = sp.clamp(CommConfig {
+            nc: 999,
+            nt: 300,
+            chunk: 5 * KIB,
+            ..CommConfig::default_ring()
+        });
+        assert_eq!(c.nc, 64);
+        assert_eq!(c.nt, 256);
+        assert_eq!(c.chunk, 16 * KIB);
+    }
+
+    #[test]
+    fn minimal_is_minimal() {
+        let sp = ParamSpace::default();
+        let m = sp.minimal(Algorithm::Ring, Protocol::Simple, Transport::P2p);
+        assert_eq!(m.nc, 1);
+        assert_eq!(m.nt, 64);
+        assert_eq!(m.chunk, 16 * KIB);
+        assert!(!sp.is_max(&m));
+    }
+
+    #[test]
+    fn escalate_strictly_grows_until_max() {
+        let sp = ParamSpace::default();
+        let mut cfg = sp.minimal(Algorithm::Ring, Protocol::Simple, Transport::P2p);
+        for _ in 0..200 {
+            let next = sp.escalate(cfg, 0.3);
+            if sp.is_max(&cfg) {
+                assert_eq!(next, cfg);
+                break;
+            }
+            assert!(
+                next.nc > cfg.nc || next.chunk > cfg.chunk || next.nt > cfg.nt,
+                "no growth from {cfg}"
+            );
+            cfg = next;
+        }
+        assert!(sp.is_max(&cfg), "escalation must reach the top of the ladders");
+    }
+
+    #[test]
+    fn escalate_zero_lr_still_steps() {
+        let sp = ParamSpace::default();
+        let cfg = sp.minimal(Algorithm::Ring, Protocol::Simple, Transport::P2p);
+        let next = sp.escalate(cfg, 0.0);
+        assert!(next.nc > cfg.nc);
+    }
+
+    #[test]
+    fn subspaces_respect_transport_validity() {
+        let sp = ParamSpace::default();
+        let intra = sp.subspaces(false);
+        assert!(intra.iter().all(|&(_, _, t)| t != Transport::Net));
+        assert_eq!(intra.len(), 12);
+        let inter = sp.subspaces(true);
+        assert!(inter.iter().all(|&(_, _, t)| t == Transport::Net));
+        assert_eq!(inter.len(), 6);
+    }
+}

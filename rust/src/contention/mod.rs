@@ -1,0 +1,20 @@
+//! Contention modeling — the paper's §3.2.
+//!
+//! Two surfaces:
+//! * **SM competition**: a collective's NC persistent channel threadblocks
+//!   occupy NC SMs, shrinking the compute pool from λ to λ−NC and raising
+//!   the wave count `g_ij` (Eq. 5).
+//! * **Global resource competition**: the collective draws `V(NC, C)` of
+//!   global-memory bandwidth (plus L2 footprint), stretching each wave's
+//!   data-transfer term `f_ij` (Eq. 6).
+//!
+//! [`model`] holds the per-wave cost used by both the simulator (ground
+//! truth, with noise and event interleaving) and [`predict`] (the paper's
+//! closed-form Eq. 4 stationary-mix approximation, used for validation and
+//! the model-fit ablation).
+
+pub mod model;
+pub mod predict;
+
+pub use model::{comp_time_contended, wave_plan, wave_time, CompContext};
+pub use predict::{predict_group, GroupPrediction};

@@ -1,0 +1,211 @@
+//! Per-wave computation cost under communication contention (Eqs 4–6).
+
+use crate::comm::CommResources;
+use crate::graph::CompOpDesc;
+use crate::hw::GpuSpec;
+
+/// How much of the channels' L2 footprint shows up as extra transfer
+/// latency (L2 thrash on top of raw bandwidth stealing).
+const L2_TAX: f64 = 0.35;
+
+/// Compute-phase interference: channel threadblocks spin on LD/ST units
+/// and evict L2 lines, stalling co-resident compute blocks even when the
+/// kernel is FLOP-bound. Scales with the channels' L2 coverage and their
+/// bandwidth draw. Together with the wave-count term (Eq. 5) this is
+/// calibrated to Fig 3a: NC=8/C=2MB costs an FFN ≈25-35%, NC=16 vs NC=32
+/// differ by ≈30%, light configs (NC≤2, C≤128KB) cost ≤10%.
+const THETA_L2: f64 = 0.15;
+const THETA_BW: f64 = 0.20;
+
+/// Floor on the bandwidth available to computation, as a fraction of B̄ —
+/// the memory system arbitrates; communication cannot starve compute
+/// entirely.
+const COMP_BW_FLOOR: f64 = 0.15;
+
+/// Precomputed per-op contention context (hoisted out of the wave loop).
+#[derive(Debug, Clone, Copy)]
+pub struct CompContext {
+    /// Resident threadblocks per SM for this op (TB_i).
+    pub tb_per_sm: u32,
+    /// FLOPs per threadblock.
+    pub flops_per_tb: f64,
+    /// D_i — bytes per threadblock.
+    pub bytes_per_tb: f64,
+    /// Effective FLOP/s of the kernel.
+    pub flop_rate: f64,
+    /// θ — duration of one wave's compute phase. A threadblock's runtime is
+    /// fixed by its work and its SM share (`TB_i` blocks co-resident), so a
+    /// wave lasts one block-time no matter how many SMs participate — losing
+    /// SMs to communication costs extra *waves* (Eq. 5), not slower blocks.
+    pub block_time: f64,
+}
+
+impl CompContext {
+    pub fn new(comp: &CompOpDesc, gpu: &GpuSpec) -> Self {
+        let tb_per_sm = comp.tb_per_sm(gpu);
+        let flops_per_tb = comp.flops / comp.threadblocks.max(1) as f64;
+        let flop_rate = gpu.flops_at(comp.flops_eff).max(1.0);
+        // Per-SM FLOP rate is flop_rate/λ, shared by TB_i resident blocks.
+        let block_time = flops_per_tb * tb_per_sm as f64 * gpu.sms as f64 / flop_rate;
+        CompContext { tb_per_sm, flops_per_tb, bytes_per_tb: comp.bytes_per_tb(), flop_rate, block_time }
+    }
+}
+
+/// SMs left for computation when a collective occupies `comm_sms` of them.
+/// At least one SM is always available (the driver time-slices if needed).
+#[inline]
+pub fn sms_available(gpu: &GpuSpec, comm_sms: u32) -> u32 {
+    gpu.sms.saturating_sub(comm_sms).max(1)
+}
+
+/// Bandwidth available to computation under a draw of `V` bytes/s (Eq. 6's
+/// denominator `B̄ − V`), floored so the model stays finite.
+#[inline]
+pub fn bw_available(gpu: &GpuSpec, v: f64) -> f64 {
+    (gpu.mem_bw - v).max(gpu.mem_bw * COMP_BW_FLOOR)
+}
+
+/// Threadblock counts per wave for `comp` when `comm_sms` SMs are taken:
+/// Eq. (5)'s `g_ij = ceil(μ_i / ((λ − NC_j) · TB_i))` expanded into the
+/// actual wave sizes (the last wave is usually partial).
+pub fn wave_plan(comp: &CompOpDesc, gpu: &GpuSpec, comm_sms: u32) -> Vec<u64> {
+    let ctx = CompContext::new(comp, gpu);
+    let capacity = sms_available(gpu, comm_sms) as u64 * ctx.tb_per_sm as u64;
+    let mut remaining = comp.threadblocks.max(1);
+    let mut waves = Vec::with_capacity(((remaining + capacity - 1) / capacity) as usize);
+    while remaining > 0 {
+        let w = remaining.min(capacity);
+        waves.push(w);
+        remaining -= w;
+    }
+    waves
+}
+
+/// Duration of one wave of `wave_tbs` threadblocks under the given
+/// communication resources (Eq. 6):
+/// `f_ij = θ_ij + (wave TBs) · D_i / (B̄ − V)`, with the L2-thrash tax.
+pub fn wave_time(
+    ctx: &CompContext,
+    wave_tbs: u64,
+    gpu: &GpuSpec,
+    res: Option<&CommResources>,
+) -> f64 {
+    let (v, l2) = match res {
+        Some(r) => (r.mem_bw, r.l2_frac),
+        None => (0.0, 0.0),
+    };
+    // θ_ij: one block-time per wave (see CompContext::block_time), inflated
+    // by channel interference on issue slots / L2.
+    let theta = ctx.block_time * (1.0 + THETA_L2 * l2 + THETA_BW * v / gpu.mem_bw);
+    let bw = bw_available(gpu, v) / (1.0 + L2_TAX * l2);
+    let transfer = wave_tbs as f64 * ctx.bytes_per_tb / bw;
+    theta + transfer
+}
+
+/// Full contended time of a computation op when a single communication with
+/// resources `res` is active throughout (Eq. 4 with one j):
+/// `y_i = Σ_waves f · 1` = launch + Σ wave_time.
+pub fn comp_time_contended(
+    comp: &CompOpDesc,
+    gpu: &GpuSpec,
+    res: Option<&CommResources>,
+) -> f64 {
+    let ctx = CompContext::new(comp, gpu);
+    let comm_sms = res.map(|r| r.sms).unwrap_or(0);
+    let mut t = gpu.launch_overhead;
+    for w in wave_plan(comp, gpu, comm_sms) {
+        t += wave_time(&ctx, w, gpu, res);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{comm_resources, comm_time, CollectiveKind, CommConfig, CommOpDesc};
+    use crate::hw::ClusterSpec;
+    use crate::util::units::{KIB, MIB};
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::a40()
+    }
+
+    fn ffn() -> CompOpDesc {
+        // Fig 3's contended operator: an FFN sized to a few waves.
+        CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2)
+    }
+
+    fn res_for(nc: u32, chunk: u64) -> CommResources {
+        let cl = ClusterSpec::cluster_b(1);
+        let op = CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8);
+        let cfg = CommConfig { nc, nt: 128, chunk, ..CommConfig::default_ring() };
+        let d = comm_time(&op, &cfg, &cl.topology, cl.gpu());
+        comm_resources(&op, &cfg, &cl.topology, cl.gpu(), d)
+    }
+
+    #[test]
+    fn wave_plan_counts_match_eq5() {
+        let comp = ffn();
+        let g = gpu();
+        let tb = comp.tb_per_sm(&g) as u64; // 2 on A40
+        for comm_sms in [0u32, 8, 32, 61] {
+            let lam = sms_available(&g, comm_sms) as u64;
+            let waves = wave_plan(&comp, &g, comm_sms);
+            let expect = (comp.threadblocks + lam * tb - 1) / (lam * tb);
+            assert_eq!(waves.len() as u64, expect, "comm_sms={comm_sms}");
+            assert_eq!(waves.iter().sum::<u64>(), comp.threadblocks);
+            // All but the last wave are full.
+            for w in &waves[..waves.len() - 1] {
+                assert_eq!(*w, lam * tb);
+            }
+        }
+    }
+
+    #[test]
+    fn more_channels_slower_compute() {
+        let comp = ffn();
+        let g = gpu();
+        let t0 = comp_time_contended(&comp, &g, None);
+        let t8 = comp_time_contended(&comp, &g, Some(&res_for(8, 512 * KIB)));
+        let t32 = comp_time_contended(&comp, &g, Some(&res_for(32, 512 * KIB)));
+        assert!(t0 < t8 && t8 < t32, "t0={t0} t8={t8} t32={t32}");
+    }
+
+    #[test]
+    fn bigger_chunks_slower_compute() {
+        let comp = ffn();
+        let g = gpu();
+        let t_small = comp_time_contended(&comp, &g, Some(&res_for(8, 64 * KIB)));
+        let t_big = comp_time_contended(&comp, &g, Some(&res_for(8, 8 * MIB)));
+        assert!(t_small < t_big, "t_small={t_small} t_big={t_big}");
+    }
+
+    #[test]
+    fn fig3_magnitude_band() {
+        // Fig 3a: worst configs degrade FFN by up to ~35%+; mild configs few %.
+        let comp = ffn();
+        let g = gpu();
+        let t0 = comp_time_contended(&comp, &g, None);
+        let mild = comp_time_contended(&comp, &g, Some(&res_for(2, 64 * KIB)));
+        let harsh = comp_time_contended(&comp, &g, Some(&res_for(48, 8 * MIB)));
+        let mild_slow = mild / t0 - 1.0;
+        let harsh_slow = harsh / t0 - 1.0;
+        assert!(mild_slow < 0.10, "mild slowdown {mild_slow}");
+        assert!(harsh_slow > 0.30, "harsh slowdown {harsh_slow}");
+        assert!(harsh_slow < 2.0, "harsh slowdown sane {harsh_slow}");
+    }
+
+    #[test]
+    fn bw_floor_keeps_model_finite() {
+        let g = gpu();
+        assert!(bw_available(&g, g.mem_bw * 10.0) > 0.0);
+        assert_eq!(bw_available(&g, 0.0), g.mem_bw);
+    }
+
+    #[test]
+    fn sms_never_zero() {
+        let g = gpu();
+        assert_eq!(sms_available(&g, 10_000), 1);
+        assert_eq!(sms_available(&g, 0), g.sms);
+    }
+}

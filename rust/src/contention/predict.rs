@@ -1,0 +1,163 @@
+//! Closed-form overlap predictor — the paper's Eq. (4) under a
+//! stationary-mixing approximation.
+//!
+//! Eq. (4) writes `y_i = Σ_{j=l..k} f_ij · g_ij`: computation `i` is split
+//! across the communications `l..k` that are active while it runs. Knowing
+//! *which* comm overlaps *which* wave requires executing the timeline (the
+//! simulator's job). The closed form instead assumes each communication `j`
+//! is active for a fraction `w_j = x_j / X` of the window and mixes the
+//! per-comm contended times by those weights. This is exactly the model a
+//! tuner could evaluate without a testbed; `ablation_model_fit` measures
+//! its error against the simulator.
+
+use super::model::comp_time_contended;
+use crate::comm::{comm_resources, comm_time, CommConfig};
+use crate::graph::OverlapGroup;
+use crate::hw::ClusterSpec;
+
+/// Predicted group timing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupPrediction {
+    /// Σ communication times (uncontended wire model), X.
+    pub comm_total: f64,
+    /// Σ computation times under the stationary comm mix, Y.
+    pub comp_total: f64,
+    /// Predicted makespan Z = max(X, Y).
+    pub makespan: f64,
+    /// Per-comm predicted times.
+    pub comm_times: Vec<f64>,
+    /// Per-comp predicted times.
+    pub comp_times: Vec<f64>,
+}
+
+/// Predict the makespan of one overlap group given one config per comm op.
+pub fn predict_group(
+    group: &OverlapGroup,
+    configs: &[CommConfig],
+    cluster: &ClusterSpec,
+) -> GroupPrediction {
+    assert_eq!(
+        configs.len(),
+        group.comms.len(),
+        "one config per communication op required"
+    );
+    let gpu = cluster.gpu();
+    let topo = &cluster.topology;
+
+    // X and the per-comm resource profiles.
+    let mut comm_times = Vec::with_capacity(group.comms.len());
+    let mut resources = Vec::with_capacity(group.comms.len());
+    for (op, cfg) in group.comms.iter().zip(configs) {
+        let t = comm_time(op, cfg, topo, gpu);
+        resources.push(comm_resources(op, cfg, topo, gpu, t));
+        comm_times.push(t);
+    }
+    let comm_total: f64 = comm_times.iter().sum();
+
+    // Y under the stationary mix: weight each comm's contention by its
+    // share of the communication window; if X is (or may become) shorter
+    // than Y, the uncovered tail runs uncontended.
+    let mut comp_times = Vec::with_capacity(group.comps.len());
+    let mut comp_total = 0.0;
+    for comp in &group.comps {
+        let free = comp_time_contended(comp, gpu, None);
+        let t = if comm_total <= 0.0 {
+            free
+        } else {
+            let mixed: f64 = group
+                .comms
+                .iter()
+                .enumerate()
+                .map(|(j, _)| {
+                    let w = comm_times[j] / comm_total;
+                    w * comp_time_contended(comp, gpu, Some(&resources[j]))
+                })
+                .sum();
+            mixed
+        };
+        comp_times.push(t);
+        comp_total += t;
+    }
+
+    // Second pass: if computation outlasts communication, the tail fraction
+    // of Y runs uncontended — blend accordingly (one refinement step).
+    if comp_total > comm_total && comm_total > 0.0 {
+        let covered = comm_total / comp_total; // fraction of Y overlapped
+        let mut refined = 0.0;
+        for (i, comp) in group.comps.iter().enumerate() {
+            let free = comp_time_contended(comp, gpu, None);
+            let t = covered * comp_times[i] + (1.0 - covered) * free;
+            comp_times[i] = t;
+            refined += t;
+        }
+        comp_total = refined;
+    }
+
+    GroupPrediction {
+        comm_total,
+        comp_total,
+        makespan: comm_total.max(comp_total),
+        comm_times,
+        comp_times,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{nccl_default_config, CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::util::units::MIB;
+
+    fn fixture() -> (OverlapGroup, ClusterSpec) {
+        let cl = ClusterSpec::cluster_b(1);
+        let g = OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        (g, cl)
+    }
+
+    #[test]
+    fn makespan_is_max_of_streams() {
+        let (g, cl) = fixture();
+        let cfg = nccl_default_config(&g.comms[0], &cl.topology);
+        let p = predict_group(&g, &[cfg], &cl);
+        assert!((p.makespan - p.comm_total.max(p.comp_total)).abs() < 1e-12);
+        assert!(p.comp_total > 0.0 && p.comm_total > 0.0);
+    }
+
+    #[test]
+    fn no_comm_means_uncontended() {
+        let (mut g, cl) = fixture();
+        g.comms.clear();
+        let p = predict_group(&g, &[], &cl);
+        let free = comp_time_contended(&g.comps[0], cl.gpu(), None);
+        assert!((p.comp_total - free).abs() < 1e-12);
+        assert_eq!(p.comm_total, 0.0);
+    }
+
+    #[test]
+    fn heavier_comm_config_raises_comp_prediction() {
+        let (g, cl) = fixture();
+        let base = nccl_default_config(&g.comms[0], &cl.topology);
+        let light = CommConfig { nc: 2, chunk: 64 * 1024, ..base };
+        let heavy = CommConfig { nc: 48, chunk: 8 * MIB, ..base };
+        let pl = predict_group(&g, &[light], &cl);
+        let ph = predict_group(&g, &[heavy], &cl);
+        assert!(
+            ph.comp_times[0] > pl.comp_times[0],
+            "heavy {:?} vs light {:?}",
+            ph.comp_times,
+            pl.comp_times
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "one config per communication")]
+    fn config_arity_checked() {
+        let (g, cl) = fixture();
+        predict_group(&g, &[], &cl);
+    }
+}

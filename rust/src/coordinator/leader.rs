@@ -1,0 +1,326 @@
+//! Leader: spawns worker ranks, broadcasts jobs, aggregates reports, and
+//! exposes the distributed measurement path as a [`ProfileBackend`].
+
+use super::msg::{FaultPlan, JobId, LeaderMsg, ReportPayload, WorkerReport};
+use super::worker::worker_main;
+use crate::comm::CommConfig;
+use crate::graph::OverlapGroup;
+use crate::hw::ClusterSpec;
+use crate::profiler::{GroupMeasurement, ProfileBackend};
+use crate::sim::SimEnv;
+use crate::util::prng::Prng;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Leader-side coordination state.
+pub struct Coordinator {
+    txs: Vec<Sender<LeaderMsg>>,
+    rx: Receiver<WorkerReport>,
+    handles: Vec<JoinHandle<()>>,
+    /// Ranks considered alive (a timed-out rank is marked dead and skipped).
+    alive: Vec<bool>,
+    next_job: JobId,
+    /// Committed active config set (Fig 6 step d).
+    committed: Vec<CommConfig>,
+    commit_epoch: u64,
+    /// Per-job reply timeout.
+    pub timeout: Duration,
+}
+
+impl Coordinator {
+    /// Spawn one worker thread per rank of `cluster`, seeding each rank's
+    /// simulator noise independently. `faults[r]` injects failures.
+    pub fn spawn(cluster: &ClusterSpec, seed: u64, faults: &[FaultPlan]) -> Coordinator {
+        let world = cluster.world_size() as usize;
+        assert!(faults.is_empty() || faults.len() == world, "one fault plan per rank");
+        let (report_tx, report_rx) = channel::<WorkerReport>();
+        let mut txs = Vec::with_capacity(world);
+        let mut handles = Vec::with_capacity(world);
+        let mut root = Prng::new(seed);
+        for rank in 0..world {
+            let (tx, rx) = channel::<LeaderMsg>();
+            let env = SimEnv {
+                cluster: cluster.clone(),
+                noise_sigma: 0.015,
+                prng: root.fork(rank as u64),
+            };
+            let fault = faults.get(rank).copied().unwrap_or_else(FaultPlan::healthy);
+            let rtx = report_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_main(rank as u32, env, fault, rx, rtx)
+            }));
+            txs.push(tx);
+        }
+        Coordinator {
+            txs,
+            rx: report_rx,
+            handles,
+            alive: vec![true; world],
+            next_job: 1,
+            committed: Vec::new(),
+            commit_epoch: 0,
+            timeout: Duration::from_secs(5),
+        }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn alive_ranks(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    pub fn committed_configs(&self) -> &[CommConfig] {
+        &self.committed
+    }
+
+    pub fn commit_epoch(&self) -> u64 {
+        self.commit_epoch
+    }
+
+    fn broadcast(&mut self, make: impl Fn(JobId) -> LeaderMsg) -> JobId {
+        let job = self.next_job;
+        self.next_job += 1;
+        for (r, tx) in self.txs.iter().enumerate() {
+            if self.alive[r] {
+                // A send failure means the thread is gone: mark dead.
+                if tx.send(make(job)).is_err() {
+                    self.alive[r] = false;
+                }
+            }
+        }
+        job
+    }
+
+    /// Collect one report per alive rank for `job`; ranks that miss the
+    /// timeout are marked dead (the paper's setting assumes fail-stop).
+    fn collect(&mut self, job: JobId) -> Vec<WorkerReport> {
+        let expect = self.alive_ranks();
+        let mut got: Vec<WorkerReport> = Vec::with_capacity(expect);
+        let mut seen = vec![false; self.txs.len()];
+        while got.len() < expect {
+            match self.rx.recv_timeout(self.timeout) {
+                Ok(rep) if rep.job == job => {
+                    if !seen[rep.rank as usize] {
+                        seen[rep.rank as usize] = true;
+                        got.push(rep);
+                    }
+                }
+                Ok(_) => continue, // stale report from a previous job
+                Err(_) => {
+                    // Timeout: every alive rank that hasn't reported is dead.
+                    for (r, alive) in self.alive.iter_mut().enumerate() {
+                        if *alive && !seen[r] {
+                            *alive = false;
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        got
+    }
+
+    /// Broadcast a profile job and aggregate the rank measurements.
+    /// Collectives complete when their slowest rank does, so per-op comm
+    /// times and totals aggregate with `max` across ranks.
+    pub fn profile(
+        &mut self,
+        group: &Arc<OverlapGroup>,
+        configs: &Arc<Vec<CommConfig>>,
+        reps: u32,
+    ) -> Option<GroupMeasurement> {
+        let g = Arc::clone(group);
+        let c = Arc::clone(configs);
+        let job = self.broadcast(move |job| LeaderMsg::Profile {
+            job,
+            group: Arc::clone(&g),
+            configs: Arc::clone(&c),
+            reps,
+        });
+        let reports = self.collect(job);
+        let mut agg: Option<GroupMeasurement> = None;
+        for rep in reports {
+            if let ReportPayload::Measurement(m) = rep.payload {
+                agg = Some(match agg {
+                    None => m,
+                    Some(mut a) => {
+                        for (t, u) in a.comm_times.iter_mut().zip(&m.comm_times) {
+                            *t = t.max(*u);
+                        }
+                        a.comp_total = a.comp_total.max(m.comp_total);
+                        a.comm_total = a.comm_total.max(m.comm_total);
+                        a.makespan = a.makespan.max(m.makespan);
+                        a
+                    }
+                });
+            }
+        }
+        agg
+    }
+
+    /// Commit a config set to all ranks and wait for acknowledgements;
+    /// returns the number of ranks that acked.
+    pub fn commit(&mut self, configs: Vec<CommConfig>) -> usize {
+        let arc = Arc::new(configs.clone());
+        let job = self.broadcast(move |job| LeaderMsg::Commit { job, configs: Arc::clone(&arc) });
+        let acks = self
+            .collect(job)
+            .into_iter()
+            .filter(|r| matches!(r.payload, ReportPayload::Ack { .. }))
+            .count();
+        if acks > 0 {
+            self.committed = configs;
+            self.commit_epoch += 1;
+        }
+        acks
+    }
+
+    /// Ping all ranks; returns how many replied.
+    pub fn ping(&mut self) -> usize {
+        let job = self.broadcast(|job| LeaderMsg::Ping { job });
+        self.collect(job).len()
+    }
+
+    /// Orderly shutdown; joins worker threads.
+    pub fn shutdown(mut self) {
+        for (r, tx) in self.txs.iter().enumerate() {
+            if self.alive[r] {
+                let _ = tx.send(LeaderMsg::Shutdown);
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// [`ProfileBackend`] over the coordinator: tuners run unchanged on the
+/// distributed measurement path.
+pub struct DistributedProfiler {
+    pub coord: Coordinator,
+    pub reps: u32,
+    calls: u64,
+}
+
+impl DistributedProfiler {
+    pub fn new(coord: Coordinator) -> Self {
+        DistributedProfiler { coord, reps: 3, calls: 0 }
+    }
+}
+
+impl ProfileBackend for DistributedProfiler {
+    fn profile_group(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> GroupMeasurement {
+        self.calls += 1;
+        let g = Arc::new(group.clone());
+        let c = Arc::new(configs.to_vec());
+        self.coord
+            .profile(&g, &c, self.reps)
+            .expect("all ranks failed during profiling")
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::util::units::MIB;
+
+    fn group() -> OverlapGroup {
+        OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::ffn("ffn", 1024, 1024, 4096, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 8 * MIB, 8)],
+        )
+    }
+
+    #[test]
+    fn profile_aggregates_across_ranks() {
+        let cl = ClusterSpec::cluster_b(1);
+        let mut coord = Coordinator::spawn(&cl, 42, &[]);
+        assert_eq!(coord.world_size(), 8);
+        let g = Arc::new(group());
+        let c = Arc::new(vec![CommConfig::default_ring()]);
+        let m = coord.profile(&g, &c, 2).unwrap();
+        assert!(m.makespan > 0.0);
+        assert_eq!(m.comm_times.len(), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn straggler_dominates_aggregate() {
+        let cl = ClusterSpec::cluster_b(1);
+        let mut faults = vec![FaultPlan::healthy(); 8];
+        faults[3] = FaultPlan::straggler(2.0);
+        let mut slow = Coordinator::spawn(&cl, 42, &faults);
+        let mut fast = Coordinator::spawn(&cl, 42, &[]);
+        let g = Arc::new(group());
+        let c = Arc::new(vec![CommConfig::default_ring()]);
+        let ms = slow.profile(&g, &c, 2).unwrap();
+        let mf = fast.profile(&g, &c, 2).unwrap();
+        assert!(
+            ms.makespan > mf.makespan * 1.5,
+            "straggler {} vs healthy {}",
+            ms.makespan,
+            mf.makespan
+        );
+        slow.shutdown();
+        fast.shutdown();
+    }
+
+    #[test]
+    fn commit_updates_state_and_epoch() {
+        let cl = ClusterSpec::cluster_b(1);
+        let mut coord = Coordinator::spawn(&cl, 1, &[]);
+        assert_eq!(coord.commit_epoch(), 0);
+        let acks = coord.commit(vec![CommConfig::default_ring()]);
+        assert_eq!(acks, 8);
+        assert_eq!(coord.commit_epoch(), 1);
+        assert_eq!(coord.committed_configs().len(), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dead_worker_detected_and_excluded() {
+        let cl = ClusterSpec::cluster_b(1);
+        let mut faults = vec![FaultPlan::healthy(); 8];
+        faults[5] = FaultPlan::dies_after(1);
+        let mut coord = Coordinator::spawn(&cl, 2, &faults);
+        coord.timeout = Duration::from_millis(300);
+        let g = Arc::new(group());
+        let c = Arc::new(vec![CommConfig::default_ring()]);
+        // Job 1 succeeds on all ranks.
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert_eq!(coord.alive_ranks(), 8);
+        // Job 2: rank 5 is dead → timeout marks it, 7 remain.
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert_eq!(coord.alive_ranks(), 7);
+        // Job 3 proceeds without waiting on the dead rank.
+        let t0 = std::time::Instant::now();
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert!(t0.elapsed() < Duration::from_millis(250), "no timeout on healthy path");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn distributed_profiler_backs_tuners() {
+        use crate::tuner::{LagomTuner, Tuner};
+        let cl = ClusterSpec::cluster_b(1);
+        let coord = Coordinator::spawn(&cl, 3, &[]);
+        let mut backend = DistributedProfiler::new(coord);
+        let mut s = crate::graph::IterationSchedule::new("t");
+        s.push(group());
+        let r = LagomTuner::new(cl).tune_schedule(&s, &mut backend);
+        assert_eq!(r.configs.len(), 1);
+        assert!(backend.calls() > 0);
+        backend.coord.shutdown();
+    }
+}

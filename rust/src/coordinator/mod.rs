@@ -1,0 +1,21 @@
+//! Leader/worker coordination runtime — the Fig 6 workflow.
+//!
+//! The paper's tuner runs inside a distributed training job: a leader picks
+//! the next communication to tune (argmin H), **broadcasts** the candidate
+//! config set to every rank (step c), all ranks execute the overlap and
+//! report timings (step e), the leader aggregates (collectives finish with
+//! the slowest rank) and updates H (step f).
+//!
+//! Here every rank is an OS thread owning its own simulator instance with
+//! rank-specific noise; the message protocol, config state machine,
+//! aggregation and failure handling are the real thing. The leader exposes
+//! [`DistributedProfiler`], a [`ProfileBackend`] — so any tuner can run
+//! either locally or over the coordinator unchanged.
+
+pub mod leader;
+pub mod msg;
+pub mod worker;
+
+pub use leader::{Coordinator, DistributedProfiler};
+pub use msg::{FaultPlan, JobId, LeaderMsg, WorkerReport};
+pub use worker::worker_main;

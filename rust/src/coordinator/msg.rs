@@ -1,0 +1,67 @@
+//! Message protocol between leader and workers.
+
+use crate::comm::CommConfig;
+use crate::graph::OverlapGroup;
+use crate::profiler::GroupMeasurement;
+use std::sync::Arc;
+
+pub type JobId = u64;
+
+/// Leader → worker.
+#[derive(Debug, Clone)]
+pub enum LeaderMsg {
+    /// Execute `group` under `configs`, report a measurement (Fig 6 step
+    /// c→e: broadcast candidate configs, run, measure).
+    Profile {
+        job: JobId,
+        group: Arc<OverlapGroup>,
+        configs: Arc<Vec<CommConfig>>,
+        /// Averaging repetitions on the worker.
+        reps: u32,
+    },
+    /// Commit a tuned config set as the active state (Fig 6 step d: the
+    /// accepted config is appended to the communication's config list).
+    Commit { job: JobId, configs: Arc<Vec<CommConfig>> },
+    /// Liveness probe.
+    Ping { job: JobId },
+    /// Orderly shutdown.
+    Shutdown,
+}
+
+/// Worker → leader.
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub job: JobId,
+    pub rank: u32,
+    pub payload: ReportPayload,
+}
+
+#[derive(Debug, Clone)]
+pub enum ReportPayload {
+    Measurement(GroupMeasurement),
+    /// Acknowledgement of Commit/Ping, echoing the worker's config epoch.
+    Ack { epoch: u64 },
+}
+
+/// Failure-injection plan for a worker (tests + robustness benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Worker stops responding after this many jobs (None = healthy).
+    pub die_after_jobs: Option<u64>,
+    /// Multiplies this rank's measured times (straggler).
+    pub straggle_factor: f64,
+}
+
+impl FaultPlan {
+    pub fn healthy() -> FaultPlan {
+        FaultPlan { die_after_jobs: None, straggle_factor: 1.0 }
+    }
+
+    pub fn straggler(factor: f64) -> FaultPlan {
+        FaultPlan { die_after_jobs: None, straggle_factor: factor }
+    }
+
+    pub fn dies_after(jobs: u64) -> FaultPlan {
+        FaultPlan { die_after_jobs: Some(jobs), straggle_factor: 1.0 }
+    }
+}

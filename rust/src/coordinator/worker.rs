@@ -1,0 +1,82 @@
+//! Worker rank: owns a simulator instance, executes profile jobs, tracks
+//! the committed config epoch.
+
+use super::msg::{FaultPlan, LeaderMsg, ReportPayload, WorkerReport};
+use crate::profiler::GroupMeasurement;
+use crate::sim::{simulate_group, SimEnv};
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Worker thread main loop. Returns when `Shutdown` arrives, the channel
+/// closes, or the fault plan kills it.
+pub fn worker_main(
+    rank: u32,
+    mut env: SimEnv,
+    fault: FaultPlan,
+    rx: Receiver<LeaderMsg>,
+    tx: Sender<WorkerReport>,
+) {
+    let mut jobs_done = 0u64;
+    let mut epoch = 0u64;
+    while let Ok(msg) = rx.recv() {
+        if let Some(limit) = fault.die_after_jobs {
+            if jobs_done >= limit {
+                // Simulated crash: stop replying (leader times out on us).
+                return;
+            }
+        }
+        match msg {
+            LeaderMsg::Profile { job, group, configs, reps } => {
+                jobs_done += 1;
+                let reps = reps.max(1);
+                let mut comm_times = vec![0.0; group.comms.len()];
+                let mut comp_total = 0.0;
+                let mut comm_total = 0.0;
+                let mut makespan = 0.0;
+                for _ in 0..reps {
+                    let r = simulate_group(&group, &configs, &mut env);
+                    for (acc, t) in comm_times.iter_mut().zip(&r.comm_times) {
+                        *acc += t;
+                    }
+                    comp_total += r.comp_total();
+                    comm_total += r.comm_total();
+                    makespan += r.makespan;
+                }
+                let n = reps as f64 / fault.straggle_factor.max(1e-6);
+                for t in &mut comm_times {
+                    *t /= n;
+                }
+                let m = GroupMeasurement {
+                    comm_times,
+                    comp_total: comp_total / n,
+                    comm_total: comm_total / n,
+                    makespan: makespan / n,
+                };
+                if tx
+                    .send(WorkerReport { job, rank, payload: ReportPayload::Measurement(m) })
+                    .is_err()
+                {
+                    return; // leader gone
+                }
+            }
+            LeaderMsg::Commit { job, configs: _ } => {
+                jobs_done += 1;
+                epoch += 1;
+                if tx
+                    .send(WorkerReport { job, rank, payload: ReportPayload::Ack { epoch } })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            LeaderMsg::Ping { job } => {
+                if tx
+                    .send(WorkerReport { job, rank, payload: ReportPayload::Ack { epoch } })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            LeaderMsg::Shutdown => return,
+        }
+    }
+}

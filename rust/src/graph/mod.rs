@@ -1,0 +1,13 @@
+//! Operator-level IR of a training iteration.
+//!
+//! Schedules (`crate::parallel`) lower a model + parallelism into a
+//! sequence of [`OverlapGroup`]s: within a group, computation operators run
+//! serialized on the compute stream while communication operators run
+//! serialized on the comm stream (the paper's §3.1 setting). The simulator
+//! executes groups; tuners pick a [`crate::comm::CommConfig`] per comm op.
+
+pub mod comp;
+pub mod overlap;
+
+pub use comp::CompOpDesc;
+pub use overlap::{IterationSchedule, OverlapGroup};

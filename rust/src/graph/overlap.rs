@@ -1,0 +1,133 @@
+//! Overlap groups and iteration schedules — the unit the tuners optimize.
+
+use super::comp::CompOpDesc;
+use crate::comm::CommOpDesc;
+
+/// One overlap window: `M` computation ops serialized on the compute stream
+/// concurrent with `N` communication ops serialized on the comm stream.
+/// This is exactly the setting of the paper's Eq. (1).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OverlapGroup {
+    /// Human-readable label, e.g. `"fsdp.fwd.layer3"` or `"pattern1"`.
+    pub name: String,
+    pub comps: Vec<CompOpDesc>,
+    pub comms: Vec<CommOpDesc>,
+}
+
+impl OverlapGroup {
+    pub fn new(name: impl Into<String>) -> Self {
+        OverlapGroup { name: name.into(), comps: Vec::new(), comms: Vec::new() }
+    }
+
+    pub fn with(
+        name: impl Into<String>,
+        comps: Vec<CompOpDesc>,
+        comms: Vec<CommOpDesc>,
+    ) -> Self {
+        OverlapGroup { name: name.into(), comps, comms }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.comps.is_empty() && self.comms.is_empty()
+    }
+
+    /// Total FLOPs on the compute stream (for reports).
+    pub fn total_flops(&self) -> f64 {
+        self.comps.iter().map(|c| c.flops).sum()
+    }
+
+    /// Total bytes on the comm stream (for reports).
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.comms.iter().map(|c| c.bytes).sum()
+    }
+}
+
+/// A full training iteration: an ordered list of overlap groups. Groups are
+/// separated by stream-sync points (the dependency structure the schedules
+/// encode), so makespans add: `T_iter = Σ_g Z_g`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct IterationSchedule {
+    pub name: String,
+    pub groups: Vec<OverlapGroup>,
+}
+
+impl IterationSchedule {
+    pub fn new(name: impl Into<String>) -> Self {
+        IterationSchedule { name: name.into(), groups: Vec::new() }
+    }
+
+    pub fn push(&mut self, g: OverlapGroup) {
+        if !g.is_empty() {
+            self.groups.push(g);
+        }
+    }
+
+    /// Total number of communication ops across all groups (the `N` whose
+    /// joint space is exponential, §2.3).
+    pub fn num_comms(&self) -> usize {
+        self.groups.iter().map(|g| g.comms.len()).sum()
+    }
+
+    pub fn num_comps(&self) -> usize {
+        self.groups.iter().map(|g| g.comps.len()).sum()
+    }
+
+    /// Iterate over `(group_index, comm_index_within_group)` pairs in
+    /// schedule order — the flat comm-op indexing tuners use.
+    pub fn comm_indices(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (gi, g) in self.groups.iter().enumerate() {
+            for ci in 0..g.comms.len() {
+                out.push((gi, ci));
+            }
+        }
+        out
+    }
+
+    pub fn comm_at(&self, idx: (usize, usize)) -> &CommOpDesc {
+        &self.groups[idx.0].comms[idx.1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CollectiveKind;
+
+    fn group(nc_comps: usize, nc_comms: usize) -> OverlapGroup {
+        let comps = (0..nc_comps)
+            .map(|i| CompOpDesc::matmul(format!("mm{i}"), 512, 512, 512, 2))
+            .collect();
+        let comms = (0..nc_comms)
+            .map(|i| CommOpDesc::new(format!("ar{i}"), CollectiveKind::AllReduce, 1 << 20, 8))
+            .collect();
+        OverlapGroup::with("g", comps, comms)
+    }
+
+    #[test]
+    fn empty_groups_dropped() {
+        let mut s = IterationSchedule::new("it");
+        s.push(OverlapGroup::new("empty"));
+        s.push(group(1, 1));
+        assert_eq!(s.groups.len(), 1);
+    }
+
+    #[test]
+    fn comm_indexing_flat_order() {
+        let mut s = IterationSchedule::new("it");
+        s.push(group(1, 2));
+        s.push(group(2, 1));
+        let idx = s.comm_indices();
+        assert_eq!(idx, vec![(0, 0), (0, 1), (1, 0)]);
+        assert_eq!(s.num_comms(), 3);
+        assert_eq!(s.num_comps(), 3);
+        assert_eq!(s.comm_at((1, 0)).name, "ar0");
+    }
+
+    #[test]
+    fn totals() {
+        let g = group(2, 2);
+        assert!(g.total_flops() > 0.0);
+        assert_eq!(g.total_comm_bytes(), 2 << 20);
+    }
+}

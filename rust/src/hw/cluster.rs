@@ -1,0 +1,102 @@
+//! Cluster presets matching the paper's §4.1 hardware infrastructure.
+
+use super::gpu::GpuSpec;
+use super::topology::{infiniband, nvlink_400gbps, pcie4, Topology};
+
+/// One node: a GPU model replicated `gpus` times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub gpus: u32,
+}
+
+/// A full cluster: homogeneous nodes + interconnect topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub node: NodeSpec,
+    pub topology: Topology,
+}
+
+impl ClusterSpec {
+    /// Paper Cluster A: 2 nodes × 8×A40, NVLink 400 Gbps intra,
+    /// 2×400 Gbps InfiniBand inter.
+    pub fn cluster_a(nodes: u32) -> ClusterSpec {
+        ClusterSpec {
+            name: format!("A/{}x8xA40-NVLink", nodes),
+            node: NodeSpec { gpu: GpuSpec::a40(), gpus: 8 },
+            topology: Topology {
+                gpus_per_node: 8,
+                nodes,
+                intra: nvlink_400gbps(),
+                inter: if nodes > 1 { Some(infiniband(800.0)) } else { None },
+            },
+        }
+    }
+
+    /// Paper Cluster B: 2 nodes × 8×A40, PCIe 4.0 intra, 100 Gbps IB inter.
+    pub fn cluster_b(nodes: u32) -> ClusterSpec {
+        ClusterSpec {
+            name: format!("B/{}x8xA40-PCIe", nodes),
+            node: NodeSpec { gpu: GpuSpec::a40(), gpus: 8 },
+            topology: Topology {
+                gpus_per_node: 8,
+                nodes,
+                intra: pcie4(),
+                inter: if nodes > 1 { Some(infiniband(100.0)) } else { None },
+            },
+        }
+    }
+
+    /// Look up a preset by name used on the CLI: `a8`, `a16`, `b8`, `b16`.
+    pub fn by_name(name: &str) -> Option<ClusterSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "a8" | "a" => Some(Self::cluster_a(1)),
+            "a16" => Some(Self::cluster_a(2)),
+            "b8" | "b" => Some(Self::cluster_b(1)),
+            "b16" => Some(Self::cluster_b(2)),
+            _ => None,
+        }
+    }
+
+    pub fn world_size(&self) -> u32 {
+        self.topology.world_size()
+    }
+
+    pub fn gpu(&self) -> &GpuSpec {
+        &self.node.gpu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::topology::LinkKind;
+
+    #[test]
+    fn presets_match_paper() {
+        let a = ClusterSpec::cluster_a(2);
+        assert_eq!(a.world_size(), 16);
+        assert_eq!(a.topology.intra.kind, LinkKind::NvLink);
+        assert_eq!(a.topology.inter.unwrap().kind, LinkKind::InfiniBand);
+
+        let b = ClusterSpec::cluster_b(2);
+        assert_eq!(b.topology.intra.kind, LinkKind::Pcie4);
+        // 100 Gbps IB ≈ 11.25 GB/s effective
+        assert!((b.topology.inter.unwrap().bandwidth - 100e9 / 8.0 * 0.9).abs() < 1.0);
+    }
+
+    #[test]
+    fn single_node_has_no_inter() {
+        let a = ClusterSpec::cluster_a(1);
+        assert!(a.topology.inter.is_none());
+        assert_eq!(a.world_size(), 8);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(ClusterSpec::by_name("a16").unwrap().world_size(), 16);
+        assert_eq!(ClusterSpec::by_name("B8").unwrap().world_size(), 8);
+        assert!(ClusterSpec::by_name("c").is_none());
+    }
+}

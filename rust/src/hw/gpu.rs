@@ -1,0 +1,120 @@
+//! Per-GPU architectural parameters (the λ, B̄ of the paper's Table 1).
+
+/// Static description of one GPU.
+///
+/// Calibrated defaults model the NVIDIA A40 (GA102): 84 SMs, 696 GB/s GDDR6
+/// global bandwidth, 149.7 TF/s bf16 tensor-core throughput (training
+/// kernels run on tensor cores), 6 MB L2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name, e.g. "A40".
+    pub name: String,
+    /// λ — total streaming multiprocessors.
+    pub sms: u32,
+    /// Peak global memory bandwidth B̄, bytes/second.
+    pub mem_bw: f64,
+    /// Peak dense-matmul throughput used by compute ops, FLOP/s.
+    pub peak_flops: f64,
+    /// L2 cache size in bytes (secondary contention surface).
+    pub l2_bytes: u64,
+    /// Max resident threadblocks per SM (occupancy ceiling); constrains how
+    /// many computation TBs share an SM, i.e. `TB_i` in Eq. (5).
+    pub max_tb_per_sm: u32,
+    /// Max resident threads per SM (1536 on GA102); with threadblock sizes
+    /// this forms the multi-constraint occupancy bound that makes NT's
+    /// impact on SM competition negligible (§3.2).
+    pub max_threads_per_sm: u32,
+    /// Shared memory per SM in bytes.
+    pub smem_per_sm: u64,
+    /// Kernel launch overhead in seconds (per wave fixed cost θ floor).
+    pub launch_overhead: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A40 — the paper's GPU on both clusters.
+    pub fn a40() -> GpuSpec {
+        GpuSpec {
+            name: "A40".to_string(),
+            sms: 84,
+            mem_bw: 696e9,
+            peak_flops: 149.7e12, // bf16 tensor core
+
+            l2_bytes: 6 * 1024 * 1024,
+            max_tb_per_sm: 16,
+            max_threads_per_sm: 1536,
+            smem_per_sm: 100 * 1024,
+            launch_overhead: 4e-6,
+        }
+    }
+
+    /// A100-SXM4-80G — used for generality tests beyond the paper's testbed.
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "A100".to_string(),
+            sms: 108,
+            mem_bw: 2039e9,
+            peak_flops: 312e12, // bf16 tensor core
+            l2_bytes: 40 * 1024 * 1024,
+            max_tb_per_sm: 32,
+            max_threads_per_sm: 2048,
+            smem_per_sm: 164 * 1024,
+            launch_overhead: 3e-6,
+        }
+    }
+
+    /// Effective matmul throughput for a kernel that achieves `eff` of peak.
+    pub fn flops_at(&self, eff: f64) -> f64 {
+        self.peak_flops * eff.clamp(0.0, 1.0)
+    }
+
+    /// How many computation threadblocks fit per SM given a per-TB thread
+    /// count and shared-memory demand — the "multi-constraint bottleneck"
+    /// of §3.2 that caps occupancy regardless of NT.
+    pub fn tb_per_sm(&self, threads_per_tb: u32, smem_per_tb: u64) -> u32 {
+        let by_tb = self.max_tb_per_sm;
+        let by_threads = if threads_per_tb == 0 {
+            self.max_tb_per_sm
+        } else {
+            self.max_threads_per_sm / threads_per_tb
+        };
+        let by_smem = if smem_per_tb == 0 {
+            self.max_tb_per_sm
+        } else {
+            (self.smem_per_sm / smem_per_tb) as u32
+        };
+        by_tb.min(by_threads).min(by_smem).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a40_matches_ga102() {
+        let g = GpuSpec::a40();
+        assert_eq!(g.sms, 84);
+        assert!((g.mem_bw - 696e9).abs() < 1.0);
+        assert!((g.peak_flops - 149.7e12).abs() < 1e9, "bf16 tensor-core rate");
+    }
+
+    #[test]
+    fn occupancy_multi_constraint() {
+        let g = GpuSpec::a40();
+        // 256-thread TBs: thread-bound at 6/SM.
+        assert_eq!(g.tb_per_sm(256, 0), 6);
+        // Huge smem demand: smem-bound.
+        assert_eq!(g.tb_per_sm(128, 50 * 1024), 2);
+        // Tiny TBs: capped by max_tb_per_sm.
+        assert_eq!(g.tb_per_sm(32, 0), 16);
+        // Degenerate inputs still yield >= 1.
+        assert_eq!(g.tb_per_sm(4096, 0), 1);
+    }
+
+    #[test]
+    fn flops_at_clamps() {
+        let g = GpuSpec::a40();
+        assert_eq!(g.flops_at(2.0), g.peak_flops);
+        assert_eq!(g.flops_at(-1.0), 0.0);
+    }
+}

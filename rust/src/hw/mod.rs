@@ -1,0 +1,18 @@
+//! Hardware description substrate.
+//!
+//! The paper's testbeds are two 2-node clusters of 8×NVIDIA A40 each:
+//! * **Cluster A** — intra-node NVLink (400 Gbps full connectivity),
+//!   inter-node 2×400 Gbps InfiniBand.
+//! * **Cluster B** — intra-node PCIe 4.0, inter-node 100 Gbps InfiniBand.
+//!
+//! Everything the contention/cost models need is parametric here: SM count
+//! (λ), peak global-memory bandwidth (B̄), link bandwidths/latencies, and
+//! the topology mapping ranks → nodes → links.
+
+pub mod cluster;
+pub mod gpu;
+pub mod topology;
+
+pub use cluster::{ClusterSpec, NodeSpec};
+pub use gpu::GpuSpec;
+pub use topology::{LinkKind, Topology};

@@ -1,0 +1,195 @@
+//! Interconnect topology: link kinds, their bandwidth/latency, and the
+//! rank → node mapping that decides which links a collective traverses.
+
+/// Kind of interconnect between two GPUs (or between nodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Intra-node NVLink (cluster A): high bandwidth, low latency.
+    NvLink,
+    /// Intra-node PCIe 4.0 x16 (cluster B): shared host bridge.
+    Pcie4,
+    /// Inter-node InfiniBand.
+    InfiniBand,
+    /// Same-GPU (degenerate; no transfer).
+    Local,
+}
+
+impl LinkKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LinkKind::NvLink => "NVLink",
+            LinkKind::Pcie4 => "PCIe4",
+            LinkKind::InfiniBand => "IB",
+            LinkKind::Local => "local",
+        }
+    }
+}
+
+/// Physical properties of one link class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub kind: LinkKind,
+    /// Unidirectional peak bandwidth in bytes/second (per GPU pair for
+    /// NVLink/PCIe; per NIC for IB).
+    pub bandwidth: f64,
+    /// Per-hop base latency in seconds.
+    pub latency: f64,
+}
+
+/// Cluster interconnect description.
+///
+/// We model the two levels the paper's clusters expose: a uniform intra-node
+/// fabric and a uniform inter-node fabric. Ring construction and transport
+/// selection key off this.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    /// GPUs per node.
+    pub gpus_per_node: u32,
+    /// Number of nodes.
+    pub nodes: u32,
+    /// Intra-node link (NVLink or PCIe).
+    pub intra: LinkSpec,
+    /// Inter-node link (InfiniBand), `None` for single-node topologies.
+    pub inter: Option<LinkSpec>,
+}
+
+impl Topology {
+    pub fn world_size(&self) -> u32 {
+        self.gpus_per_node * self.nodes
+    }
+
+    /// Node index of a rank.
+    pub fn node_of(&self, rank: u32) -> u32 {
+        rank / self.gpus_per_node
+    }
+
+    /// Link kind between two ranks.
+    pub fn link_between(&self, a: u32, b: u32) -> LinkKind {
+        if a == b {
+            LinkKind::Local
+        } else if self.node_of(a) == self.node_of(b) {
+            self.intra.kind
+        } else {
+            self.inter.expect("inter-node traffic on single-node topology").kind
+        }
+    }
+
+    /// Spec of the link class a ring built over all ranks is limited by:
+    /// the *slowest* traversed link bounds a ring collective.
+    pub fn bottleneck_link(&self) -> LinkSpec {
+        if self.nodes > 1 {
+            let inter = self.inter.expect("multi-node topology missing inter link");
+            if inter.bandwidth < self.intra.bandwidth {
+                inter
+            } else {
+                self.intra
+            }
+        } else {
+            self.intra
+        }
+    }
+
+    /// Whether any inter-node hop exists for a communicator spanning
+    /// `world` consecutive ranks starting at rank `base`.
+    pub fn spans_nodes(&self, base: u32, world: u32) -> bool {
+        world > 0 && self.node_of(base) != self.node_of(base + world - 1)
+    }
+
+    /// Sum of hop latencies around a ring over `world` consecutive ranks:
+    /// `world - crossings` intra hops and `crossings` inter hops.
+    pub fn ring_hop_latency(&self, base: u32, world: u32) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let mut intra_hops = 0u32;
+        let mut inter_hops = 0u32;
+        for i in 0..world {
+            let a = base + i;
+            let b = base + (i + 1) % world;
+            if self.node_of(a) == self.node_of(b) {
+                intra_hops += 1;
+            } else {
+                inter_hops += 1;
+            }
+        }
+        let inter_lat = self.inter.map(|l| l.latency).unwrap_or(0.0);
+        intra_hops as f64 * self.intra.latency + inter_hops as f64 * inter_lat
+    }
+}
+
+/// NVLink full-mesh at 400 Gbps signaling ≈ 50 GB/s usable per direction
+/// per pair (the paper quotes "400 Gbps full connectivity").
+pub fn nvlink_400gbps() -> LinkSpec {
+    LinkSpec { kind: LinkKind::NvLink, bandwidth: 50e9, latency: 2e-6 }
+}
+
+/// PCIe 4.0 x16 ≈ 32 GB/s raw, ~26 GB/s effective, shared root complex.
+pub fn pcie4() -> LinkSpec {
+    LinkSpec { kind: LinkKind::Pcie4, bandwidth: 26e9, latency: 5e-6 }
+}
+
+/// InfiniBand at `gbps` signaling (e.g. 2×400 for cluster A, 100 for B).
+pub fn infiniband(gbps: f64) -> LinkSpec {
+    LinkSpec { kind: LinkKind::InfiniBand, bandwidth: gbps * 1e9 / 8.0 * 0.9, latency: 8e-6 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo2x8() -> Topology {
+        Topology {
+            gpus_per_node: 8,
+            nodes: 2,
+            intra: nvlink_400gbps(),
+            inter: Some(infiniband(800.0)),
+        }
+    }
+
+    #[test]
+    fn rank_mapping() {
+        let t = topo2x8();
+        assert_eq!(t.world_size(), 16);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.link_between(0, 3), LinkKind::NvLink);
+        assert_eq!(t.link_between(0, 9), LinkKind::InfiniBand);
+        assert_eq!(t.link_between(4, 4), LinkKind::Local);
+    }
+
+    #[test]
+    fn bottleneck_is_slowest_traversed() {
+        let t = topo2x8();
+        // 2x400G IB = 90 GB/s effective > 50 GB/s NVLink → NVLink bottleneck.
+        assert_eq!(t.bottleneck_link().kind, LinkKind::NvLink);
+
+        let slow = Topology {
+            gpus_per_node: 8,
+            nodes: 2,
+            intra: pcie4(),
+            inter: Some(infiniband(100.0)),
+        };
+        assert_eq!(slow.bottleneck_link().kind, LinkKind::InfiniBand);
+    }
+
+    #[test]
+    fn ring_latency_counts_crossings() {
+        let t = topo2x8();
+        // Full 16-rank ring: 14 intra hops + 2 inter hops.
+        let lat = t.ring_hop_latency(0, 16);
+        let expect = 14.0 * t.intra.latency + 2.0 * t.inter.unwrap().latency;
+        assert!((lat - expect).abs() < 1e-12);
+        // Single-node sub-ring: all intra.
+        let lat1 = t.ring_hop_latency(0, 8);
+        assert!((lat1 - 8.0 * t.intra.latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spans_nodes_detection() {
+        let t = topo2x8();
+        assert!(!t.spans_nodes(0, 8));
+        assert!(t.spans_nodes(4, 8));
+        assert!(t.spans_nodes(0, 16));
+    }
+}

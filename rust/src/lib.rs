@@ -1,0 +1,37 @@
+//! # Lagom
+//!
+//! Reproduction of *"Lagom: Unleashing the Power of Communication and
+//! Computation Overlapping for Distributed LLM Training"* (CS.DC 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a collective-parameter
+//!   co-tuner ([`tuner::LagomTuner`]) plus every substrate it needs (GPU
+//!   cluster model, NCCL-equivalent collectives, contention physics,
+//!   discrete-event simulator, parallelism schedules, leader/worker
+//!   coordinator) and a PJRT runtime that executes AOT-compiled JAX/Pallas
+//!   artifacts for real end-to-end training.
+//! * **L2 (`python/compile/model.py`)** — transformer fwd/bwd + optimizer in
+//!   JAX, lowered once to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels (fused FFN) under
+//!   `interpret=True`, validated against a pure-jnp oracle.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod contention;
+pub mod coordinator;
+pub mod graph;
+pub mod hw;
+pub mod models;
+pub mod parallel;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod train;
+pub mod tuner;
+pub mod util;

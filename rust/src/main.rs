@@ -1,0 +1,279 @@
+//! `lagom` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `workloads` — list the Table-2 workload presets.
+//! * `tune` — tune one workload with a chosen strategy, print configs.
+//! * `compare` — NCCL vs AutoCCL vs Lagom on a workload (Fig 7 protocol).
+//! * `breakdown` — computation- vs communication-bound split (Fig 8).
+//! * `trace` — export a chrome trace of the tuned schedule.
+//! * `train` — end-to-end training on the AOT artifacts (see EXPERIMENTS.md).
+
+use lagom::bench::Table;
+use lagom::cli::Args;
+use lagom::comm::CommConfig;
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{build_schedule, table2_workloads, Parallelism, Workload};
+use lagom::profiler::SimProfiler;
+use lagom::report::{bound_breakdown, compare_strategies, comparison_table, evaluate};
+use lagom::sim::{simulate_schedule, SimEnv, TraceBuilder};
+use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
+use lagom::util::units::fmt_secs;
+
+fn main() {
+    let args = match Args::from_env(&["help", "verbose"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("verbose") {
+        lagom::util::logging::set_level(lagom::util::logging::Level::Debug);
+    }
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    let code = match cmd.as_str() {
+        "workloads" => cmd_workloads(&args),
+        "tune" => cmd_tune(&args),
+        "compare" => cmd_compare(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "trace" => cmd_trace(&args),
+        "train" => cmd_train(&args),
+        "help" | _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "lagom — communication/computation overlap co-tuning (paper reproduction)
+
+USAGE: lagom <command> [options]
+
+COMMANDS:
+  workloads                         list Table-2 workload presets
+  tune      --model M --par P       tune one workload, print chosen configs
+  compare   --model M --par P       NCCL vs AutoCCL vs Lagom iteration times
+  breakdown --model M --par P       comp- vs comm-bound time split
+  trace     --model M --par P       write chrome trace of tuned schedule
+  train     --steps N               end-to-end training on AOT artifacts
+
+COMMON OPTIONS:
+  --cluster a8|a16|b8|b16           cluster preset (default b8)
+  --model phi2|llama3|mpt|deepseek-moe|olmoe
+  --par fsdp|tp|ep|dp               parallelism (default fsdp)
+  --strategy lagom|autoccl|nccl|liger (tune only; default lagom)
+  --mbs N  --seed N  --out PATH  --layers N (truncate model for speed)
+"
+    );
+}
+
+fn parse_workload(args: &Args, cluster: &ClusterSpec) -> Result<Workload, String> {
+    let model_name = args.get_or("model", "phi2");
+    let mut model =
+        ModelSpec::by_name(model_name).ok_or_else(|| format!("unknown model {model_name}"))?;
+    if let Some(l) = args.get("layers") {
+        model.layers = l.parse().map_err(|_| "--layers expects int".to_string())?;
+    }
+    let world = cluster.world_size();
+    let par = match args.get_or("par", "fsdp") {
+        "fsdp" => Parallelism::Fsdp { world },
+        "tp" => Parallelism::TpDp { tp: 8, dp: (world / 8).max(1) },
+        "ep" => Parallelism::Ep { ep: 8 },
+        "dp" => Parallelism::Dp { world },
+        other => return Err(format!("unknown parallelism {other}")),
+    };
+    let mbs = args.get_u64("mbs", 2)? as u32;
+    Ok(Workload { model, par, mbs, gbs: 2 * world * mbs })
+}
+
+fn cluster_of(args: &Args) -> Result<ClusterSpec, String> {
+    let name = args.get_or("cluster", "b8");
+    ClusterSpec::by_name(name).ok_or_else(|| format!("unknown cluster {name}"))
+}
+
+fn run_or_exit<T>(r: Result<T, String>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_workloads(_args: &Args) -> i32 {
+    let mut t = Table::new(
+        "Table 2 — workload presets",
+        &["model", "parallelism", "MBS", "GBS", "micro-steps", "params"],
+    );
+    for world in [8u32, 16] {
+        for w in table2_workloads(world) {
+            t.row(vec![
+                w.model.name.clone(),
+                format!("{}", w.par),
+                w.mbs.to_string(),
+                w.gbs.to_string(),
+                w.micro_steps().to_string(),
+                format!("{:.1}B", w.model.total_params() as f64 / 1e9),
+            ]);
+        }
+    }
+    t.print();
+    0
+}
+
+fn cmd_tune(args: &Args) -> i32 {
+    let cluster = run_or_exit(cluster_of(args));
+    let w = run_or_exit(parse_workload(args, &cluster));
+    let seed = run_or_exit(args.get_u64("seed", 42).map_err(|e| e));
+    let schedule = build_schedule(&w, &cluster);
+    println!(
+        "workload {} on {}: {} groups, {} comms",
+        w.label(),
+        cluster.name,
+        schedule.groups.len(),
+        schedule.num_comms()
+    );
+    let strategy = args.get_or("strategy", "lagom").to_string();
+    let mut tuner: Box<dyn Tuner> = match strategy.as_str() {
+        "lagom" => Box::new(LagomTuner::new(cluster.clone())),
+        "autoccl" => Box::new(AutoCclTuner::new(cluster.clone())),
+        "nccl" => Box::new(NcclTuner::new(cluster.clone())),
+        "liger" => Box::new(LigerTuner::new(cluster.clone())),
+        other => {
+            eprintln!("unknown strategy {other}");
+            return 2;
+        }
+    };
+    let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), seed));
+    let t0 = std::time::Instant::now();
+    let r = tuner.tune_schedule(&schedule, &mut prof);
+    let iter = evaluate(&schedule, &r.configs, &cluster, w.micro_steps(), seed ^ 1);
+    println!(
+        "{}: tuned in {} ({} tuning iterations, {} profile calls)",
+        tuner.name(),
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        r.iterations,
+        r.profile_calls
+    );
+    println!("iteration time: {}", fmt_secs(iter));
+    // Distinct configs chosen:
+    let mut seen: Vec<(&CommConfig, usize)> = Vec::new();
+    for c in &r.configs {
+        if let Some(e) = seen.iter_mut().find(|(k, _)| *k == c) {
+            e.1 += 1;
+        } else {
+            seen.push((c, 1));
+        }
+    }
+    println!("distinct configs:");
+    for (c, n) in seen {
+        println!("  {n:4}x  {c}");
+    }
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let cluster = run_or_exit(cluster_of(args));
+    let w = run_or_exit(parse_workload(args, &cluster));
+    let seed = run_or_exit(args.get_u64("seed", 42));
+    let c = compare_strategies(&w, &cluster, seed);
+    comparison_table("strategy comparison", &[c]).print();
+    0
+}
+
+fn cmd_breakdown(args: &Args) -> i32 {
+    let cluster = run_or_exit(cluster_of(args));
+    let w = run_or_exit(parse_workload(args, &cluster));
+    let seed = run_or_exit(args.get_u64("seed", 42));
+    let schedule = build_schedule(&w, &cluster);
+    let mut t = Table::new(
+        format!("{} breakdown (comp-bound vs comm-bound time)", w.label()),
+        &["strategy", "comp-bound", "comm-bound", "total"],
+    );
+    for (name, mut tuner) in [
+        ("NCCL", Box::new(NcclTuner::new(cluster.clone())) as Box<dyn Tuner>),
+        ("AutoCCL", Box::new(AutoCclTuner::new(cluster.clone()))),
+        ("Lagom", Box::new(LagomTuner::new(cluster.clone()))),
+    ] {
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), seed));
+        let r = tuner.tune_schedule(&schedule, &mut prof);
+        let (comp_b, comm_b) = bound_breakdown(&schedule, &r.configs, &cluster, seed ^ 2);
+        t.row(vec![
+            name.to_string(),
+            fmt_secs(comp_b),
+            fmt_secs(comm_b),
+            fmt_secs(comp_b + comm_b),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let cluster = run_or_exit(cluster_of(args));
+    let w = run_or_exit(parse_workload(args, &cluster));
+    let seed = run_or_exit(args.get_u64("seed", 42));
+    let out = args.get_or("out", "target/lagom_trace.json").to_string();
+    let schedule = build_schedule(&w, &cluster);
+    let mut tuner = LagomTuner::new(cluster.clone());
+    let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), seed));
+    let r = tuner.tune_schedule(&schedule, &mut prof);
+    let mut env = SimEnv::new(cluster, seed ^ 3);
+    let result = simulate_schedule(&schedule, &r.configs, &mut env);
+    let mut tb = TraceBuilder::new();
+    tb.push_iter(&schedule, &result);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = std::fs::write(&out, tb.finish().to_pretty()) {
+        eprintln!("error writing {out}: {e}");
+        return 1;
+    }
+    println!("wrote chrome trace to {out} (open in chrome://tracing or Perfetto)");
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let steps = run_or_exit(args.get_u64("steps", 100)) as u32;
+    let seed = run_or_exit(args.get_u64("seed", 42));
+    let rt = match lagom::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT init failed: {e:#}");
+            return 1;
+        }
+    };
+    if !rt.has_artifact("train_step") {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return 1;
+    }
+    let mut trainer = match lagom::train::Trainer::new(rt, seed) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trainer init failed: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "training {} params, vocab {}, batch {}x{} for {} steps",
+        trainer.meta.param_count, trainer.meta.vocab, trainer.meta.batch, trainer.meta.seq, steps
+    );
+    let res = trainer.run(steps, |r| {
+        if r.step % 10 == 0 || r.step + 1 == steps {
+            println!("step {:4}  loss {:.4}  ({})", r.step, r.loss, fmt_secs(r.wall_secs));
+        }
+    });
+    if let Err(e) = res {
+        eprintln!("training failed: {e:#}");
+        return 1;
+    }
+    if let Some((first, last)) = trainer.loss_drop(5) {
+        println!("loss: first-5 mean {first:.4} → last-5 mean {last:.4}");
+    }
+    0
+}

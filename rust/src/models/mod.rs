@@ -1,0 +1,9 @@
+//! Model zoo — the Table 2 workloads as architectural specs.
+//!
+//! A [`ModelSpec`] carries exactly what the schedules need to derive
+//! operator shapes and communication volumes: depth, widths, vocabulary,
+//! sequence length, and the MoE structure for the expert-parallel models.
+
+pub mod zoo;
+
+pub use zoo::{ModelSpec, MoeSpec};

@@ -1,0 +1,241 @@
+//! Architectural specifications of the paper's evaluation models (§4.1).
+
+/// Mixture-of-Experts structure of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoeSpec {
+    /// Routed experts per MoE layer.
+    pub experts: u32,
+    /// Experts activated per token.
+    pub top_k: u32,
+    /// FFN intermediate width of one expert.
+    pub d_ff_expert: u32,
+    /// Always-active shared experts (DeepSeek-MoE style).
+    pub shared_experts: u32,
+}
+
+/// Transformer architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: u32,
+    pub d_model: u32,
+    pub heads: u32,
+    /// Dense FFN intermediate width (dense layers / dense models).
+    pub d_ff: u32,
+    pub vocab: u32,
+    /// Training sequence length.
+    pub seq: u32,
+    /// MoE structure, `None` for dense models.
+    pub moe: Option<MoeSpec>,
+    /// Bytes per parameter/activation element (2 = bf16).
+    pub dtype_bytes: u32,
+    /// Gated (SwiGLU-style) FFN: three projections instead of two.
+    pub gated_ffn: bool,
+}
+
+impl ModelSpec {
+    /// Phi-2 (2.7B): 32 layers, d=2560, 32 heads, 4×d FFN, 51.2k vocab.
+    pub fn phi2() -> ModelSpec {
+        ModelSpec {
+            name: "Phi-2-2B".into(),
+            gated_ffn: false,
+            layers: 32,
+            d_model: 2560,
+            heads: 32,
+            d_ff: 10240,
+            vocab: 51200,
+            seq: 2048,
+            moe: None,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Llama-3-8B: 32 layers, d=4096, 32 heads (8 KV), 14336 FFN, 128k vocab.
+    pub fn llama3_8b() -> ModelSpec {
+        ModelSpec {
+            name: "Llama-3-8B".into(),
+            gated_ffn: true,
+            layers: 32,
+            d_model: 4096,
+            heads: 32,
+            d_ff: 14336,
+            vocab: 128256,
+            seq: 4096,
+            moe: None,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// MPT-7B: 32 layers, d=4096, 32 heads, 4×d FFN, 50.4k vocab.
+    pub fn mpt_7b() -> ModelSpec {
+        ModelSpec {
+            name: "MPT-7B".into(),
+            gated_ffn: false,
+            layers: 32,
+            d_model: 4096,
+            heads: 32,
+            d_ff: 16384,
+            vocab: 50432,
+            seq: 2048,
+            moe: None,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// DeepSeek-MoE-16B: 28 layers, d=2048, 64 routed experts (top-6) of
+    /// width 1408 + 2 shared.
+    pub fn deepseek_moe_16b() -> ModelSpec {
+        ModelSpec {
+            name: "DeepSeek-MoE-16B".into(),
+            gated_ffn: true,
+            layers: 28,
+            d_model: 2048,
+            heads: 16,
+            d_ff: 10944, // dense first layer width
+            vocab: 102400,
+            seq: 2048,
+            moe: Some(MoeSpec { experts: 64, top_k: 6, d_ff_expert: 1408, shared_experts: 2 }),
+            dtype_bytes: 2,
+        }
+    }
+
+    /// OLMoE-1B-7B: 16 layers, d=2048, 64 experts (top-8) of width 1024.
+    pub fn olmoe_1b_7b() -> ModelSpec {
+        ModelSpec {
+            name: "OLMoE-1B-7B".into(),
+            gated_ffn: true,
+            layers: 16,
+            d_model: 2048,
+            heads: 16,
+            d_ff: 1024,
+            vocab: 50304,
+            seq: 2048,
+            moe: Some(MoeSpec { experts: 64, top_k: 8, d_ff_expert: 1024, shared_experts: 0 }),
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Look up by the short CLI names used across benches.
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "phi2" | "phi22b" => Some(Self::phi2()),
+            "llama3" | "llama38b" => Some(Self::llama3_8b()),
+            "mpt" | "mpt7b" => Some(Self::mpt_7b()),
+            "deepseekmoe" | "deepseekmoe16b" => Some(Self::deepseek_moe_16b()),
+            "olmoe" | "olmoe1b7b" => Some(Self::olmoe_1b_7b()),
+            _ => None,
+        }
+    }
+
+    /// All Table-2 models.
+    pub fn all() -> Vec<ModelSpec> {
+        vec![
+            Self::phi2(),
+            Self::llama3_8b(),
+            Self::mpt_7b(),
+            Self::deepseek_moe_16b(),
+            Self::olmoe_1b_7b(),
+        ]
+    }
+
+    /// Attention parameter count of one layer (QKVO projections).
+    pub fn attn_params(&self) -> u64 {
+        4 * self.d_model as u64 * self.d_model as u64
+    }
+
+    /// FFN parameter count of one *dense* layer (2 projections, or 3 when
+    /// gated/SwiGLU).
+    pub fn ffn_params(&self) -> u64 {
+        self.ffn_projections() * self.d_model as u64 * self.d_ff as u64
+    }
+
+    /// Number of FFN projection matrices (3 for SwiGLU-style gated FFNs).
+    pub fn ffn_projections(&self) -> u64 {
+        if self.gated_ffn { 3 } else { 2 }
+    }
+
+    /// Parameter count of one layer including MoE experts if present.
+    pub fn layer_params(&self) -> u64 {
+        let norm = 4 * self.d_model as u64;
+        match self.moe {
+            None => self.attn_params() + self.ffn_params() + norm,
+            Some(m) => {
+                let expert = self.ffn_projections() * self.d_model as u64 * m.d_ff_expert as u64;
+                let router = self.d_model as u64 * m.experts as u64;
+                self.attn_params()
+                    + expert * (m.experts + m.shared_experts) as u64
+                    + router
+                    + norm
+            }
+        }
+    }
+
+    /// Total parameters (embeddings + layers; tied LM head).
+    pub fn total_params(&self) -> u64 {
+        self.vocab as u64 * self.d_model as u64 + self.layers as u64 * self.layer_params()
+    }
+
+    /// Per-layer parameter bytes (what FSDP AllGather/ReduceScatter move).
+    pub fn layer_param_bytes(&self) -> u64 {
+        self.layer_params() * self.dtype_bytes as u64
+    }
+
+    /// Activation bytes of one microbatch boundary tensor `[mbs, seq, d]`.
+    pub fn act_bytes(&self, mbs: u32) -> u64 {
+        mbs as u64 * self.seq as u64 * self.d_model as u64 * self.dtype_bytes as u64
+    }
+
+    /// Tokens per microbatch.
+    pub fn tokens(&self, mbs: u32) -> u64 {
+        mbs as u64 * self.seq as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_param_counts_near_marketing_sizes() {
+        // Phi-2 "2.7B"
+        let p = ModelSpec::phi2().total_params() as f64 / 1e9;
+        assert!((2.2..3.2).contains(&p), "phi2 {p}B");
+        // Llama-3-8B
+        let l = ModelSpec::llama3_8b().total_params() as f64 / 1e9;
+        assert!((6.5..9.0).contains(&l), "llama {l}B");
+        // MPT-7B
+        let m = ModelSpec::mpt_7b().total_params() as f64 / 1e9;
+        assert!((6.0..8.0).contains(&m), "mpt {m}B");
+    }
+
+    #[test]
+    fn moe_param_counts() {
+        let d = ModelSpec::deepseek_moe_16b().total_params() as f64 / 1e9;
+        assert!((12.0..20.0).contains(&d), "deepseek {d}B");
+        let o = ModelSpec::olmoe_1b_7b().total_params() as f64 / 1e9;
+        assert!((4.0..9.0).contains(&o), "olmoe {o}B");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ModelSpec::by_name("phi-2").unwrap().name, "Phi-2-2B");
+        assert_eq!(ModelSpec::by_name("Llama-3-8B").unwrap().d_model, 4096);
+        assert!(ModelSpec::by_name("gpt5").is_none());
+        assert_eq!(ModelSpec::all().len(), 5);
+    }
+
+    #[test]
+    fn fsdp_comm_sizes_plausible() {
+        // Phi-2 layer ≈ 78.6M params ≈ 157 MB in bf16: the right magnitude
+        // for the Fig 8 AllGather story.
+        let b = ModelSpec::phi2().layer_param_bytes() as f64 / 1e6;
+        assert!((100.0..250.0).contains(&b), "layer bytes {b} MB");
+    }
+
+    #[test]
+    fn act_and_token_helpers() {
+        let m = ModelSpec::phi2();
+        assert_eq!(m.tokens(2), 4096);
+        assert_eq!(m.act_bytes(1), 2048 * 2560 * 2);
+    }
+}

@@ -1,0 +1,142 @@
+//! Pure data-parallel schedule: bucketed gradient AllReduce overlapping
+//! backward compute (the classic PyTorch-DDP overlap, §2.1).
+
+use crate::comm::{CollectiveKind, CommOpDesc};
+use crate::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use crate::models::ModelSpec;
+use crate::util::units::MIB;
+
+/// DDP's default bucket size.
+pub const BUCKET_BYTES: u64 = 25 * MIB;
+
+/// Build the DP schedule (one fwd+bwd micro-step + optimizer).
+pub fn schedule(m: &ModelSpec, world: u32, mbs: u32) -> IterationSchedule {
+    let mut s = IterationSchedule::new(format!("{}-dp{}", m.name, world));
+    let tokens = m.tokens(mbs);
+    let d = m.d_model as u64;
+
+    // Forward: no communication to hide.
+    let mut fwd_comps = vec![CompOpDesc::elementwise("embed", tokens * d, m.dtype_bytes as u64, 2.0)];
+    for l in 0..m.layers {
+        fwd_comps.push(CompOpDesc::attention(
+            format!("l{l}.attn"),
+            mbs as u64,
+            m.seq as u64,
+            d,
+            m.heads as u64,
+            m.dtype_bytes as u64,
+        ));
+        fwd_comps.push(CompOpDesc::ffn(
+            format!("l{l}.ffn"),
+            tokens,
+            d,
+            m.d_ff as u64,
+            m.dtype_bytes as u64,
+        ));
+    }
+    fwd_comps.push(CompOpDesc::matmul("lm_head", tokens, m.vocab as u64, d, m.dtype_bytes as u64));
+    s.push(OverlapGroup::with("fwd", fwd_comps, vec![]));
+
+    // Backward: accumulate layer gradients into 25 MB buckets; each full
+    // bucket's AllReduce overlaps the next layers' backward compute.
+    let mut pending_bytes = 0u64;
+    let mut bucket_id = 0u32;
+    let mut group_comps: Vec<CompOpDesc> = Vec::new();
+    let mut group_comms: Vec<CommOpDesc> = Vec::new();
+    for l in (0..m.layers).rev() {
+        group_comps.push(
+            CompOpDesc::attention(
+                format!("l{l}.attn.bwd"),
+                mbs as u64,
+                m.seq as u64,
+                d,
+                m.heads as u64,
+                m.dtype_bytes as u64,
+            )
+            .scaled(format!("l{l}.attn.bwd"), 2.0),
+        );
+        group_comps.push(
+            CompOpDesc::ffn(format!("l{l}.ffn.bwd"), tokens, d, m.d_ff as u64, m.dtype_bytes as u64)
+                .scaled(format!("l{l}.ffn.bwd"), 2.0),
+        );
+        pending_bytes += m.layer_param_bytes();
+        if pending_bytes >= BUCKET_BYTES {
+            group_comms.push(CommOpDesc::new(
+                format!("grads.bucket{bucket_id}"),
+                CollectiveKind::AllReduce,
+                pending_bytes,
+                world,
+            ));
+            bucket_id += 1;
+            pending_bytes = 0;
+            s.push(OverlapGroup::with(
+                format!("bwd.b{bucket_id}"),
+                std::mem::take(&mut group_comps),
+                std::mem::take(&mut group_comms),
+            ));
+        }
+    }
+    // Remainder bucket (embeddings + leftover layers).
+    pending_bytes += m.vocab as u64 * d * m.dtype_bytes as u64;
+    group_comms.push(CommOpDesc::new(
+        format!("grads.bucket{bucket_id}"),
+        CollectiveKind::AllReduce,
+        pending_bytes,
+        world,
+    ));
+    s.push(OverlapGroup::with(
+        "bwd.tail",
+        std::mem::take(&mut group_comps),
+        group_comms,
+    ));
+
+    s.push(OverlapGroup::with(
+        "opt",
+        vec![CompOpDesc::elementwise("adamw", m.total_params(), 4, 6.0)],
+        vec![],
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cover_all_params() {
+        let m = ModelSpec::phi2();
+        let s = schedule(&m, 8, 2);
+        let total: u64 = s
+            .groups
+            .iter()
+            .flat_map(|g| g.comms.iter())
+            .map(|c| c.bytes)
+            .sum();
+        let expect = m.total_params() * m.dtype_bytes as u64;
+        let ratio = total as f64 / expect as f64;
+        assert!((0.98..1.02).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn buckets_at_least_bucket_size_except_tail() {
+        let m = ModelSpec::phi2();
+        let s = schedule(&m, 8, 2);
+        let buckets: Vec<u64> = s
+            .groups
+            .iter()
+            .flat_map(|g| g.comms.iter())
+            .map(|c| c.bytes)
+            .collect();
+        for b in &buckets[..buckets.len() - 1] {
+            assert!(*b >= BUCKET_BYTES);
+        }
+        assert!(buckets.len() >= 2);
+    }
+
+    #[test]
+    fn forward_has_no_comm() {
+        let s = schedule(&ModelSpec::phi2(), 8, 2);
+        assert!(s.groups[0].comms.is_empty());
+        assert!(!s.groups[0].comps.is_empty());
+    }
+}

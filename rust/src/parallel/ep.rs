@@ -1,0 +1,210 @@
+//! Expert-parallel schedule with dual-batch overlapping (§2.1, [12, 30]).
+//!
+//! Each MoE layer needs an AllToAll to dispatch tokens to their experts'
+//! ranks and another to combine the results. The dual-batch method splits
+//! the microbatch into two chunks: chunk c's AllToAll overlaps the other
+//! chunk's attention/expert compute, forming a 4-group chain per layer.
+
+use crate::comm::{CollectiveKind, CommOpDesc};
+use crate::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use crate::models::{ModelSpec, MoeSpec};
+
+fn a2a(name: String, tokens_chunk: u64, m: &ModelSpec, moe: &MoeSpec, ep: u32) -> CommOpDesc {
+    // Each token is routed to top_k experts; tokens leave the rank for
+    // remote experts ((ep-1)/ep of them on average — the wire factor
+    // handles that), carrying d_model activations.
+    let bytes = tokens_chunk * moe.top_k as u64 * m.d_model as u64 * m.dtype_bytes as u64;
+    CommOpDesc::new(name, CollectiveKind::AllToAll, bytes, ep)
+}
+
+fn attn_chunk(m: &ModelSpec, l: u32, c: u32, mbs_chunk: u64, bwd: bool) -> CompOpDesc {
+    let tag = if bwd { ".bwd" } else { "" };
+    let op = CompOpDesc::attention(
+        format!("l{l}.attn.c{c}{tag}"),
+        mbs_chunk,
+        m.seq as u64,
+        m.d_model as u64,
+        m.heads as u64,
+        m.dtype_bytes as u64,
+    );
+    if bwd {
+        op.scaled(format!("l{l}.attn.c{c}{tag}"), 2.0)
+    } else {
+        op
+    }
+}
+
+/// Expert FFN work landing on this rank for one chunk (balanced routing).
+fn expert_chunk(
+    m: &ModelSpec,
+    moe: &MoeSpec,
+    l: u32,
+    c: u32,
+    tokens_chunk: u64,
+    ep: u32,
+    bwd: bool,
+) -> CompOpDesc {
+    let tag = if bwd { ".bwd" } else { "" };
+    // Token-expert pairs per rank: the whole EP group emits
+    // ep · tokens_chunk · top_k pairs, spread over ep ranks.
+    let pairs = (tokens_chunk * moe.top_k as u64).max(1);
+    let op = CompOpDesc::ffn(
+        format!("l{l}.experts.c{c}{tag}"),
+        pairs,
+        m.d_model as u64,
+        moe.d_ff_expert as u64,
+        m.dtype_bytes as u64,
+    );
+    let _ = ep;
+    if bwd {
+        op.scaled(format!("l{l}.experts.c{c}{tag}"), 2.0)
+    } else {
+        op
+    }
+}
+
+/// Build the EP schedule (one fwd+bwd micro-step + optimizer).
+pub fn schedule(m: &ModelSpec, ep: u32, mbs: u32) -> IterationSchedule {
+    let moe = m
+        .moe
+        .expect("expert parallelism requires a MoE model (DeepSeek-MoE / OLMoE)");
+    let mut s = IterationSchedule::new(format!("{}-ep{}", m.name, ep));
+    let mbs_chunk = (mbs as u64 + 1) / 2;
+    let tokens_chunk = mbs_chunk * m.seq as u64;
+
+    for bwd in [false, true] {
+        let phase = if bwd { "bwd" } else { "fwd" };
+        let mut carry: Option<CommOpDesc> = None;
+        let layer_order: Vec<u32> = if bwd {
+            (0..m.layers).rev().collect()
+        } else {
+            (0..m.layers).collect()
+        };
+        for l in layer_order {
+            // attn(c0) overlaps the previous layer's combine(c1).
+            s.push(OverlapGroup::with(
+                format!("{phase}.l{l}.attn0"),
+                vec![attn_chunk(m, l, 0, mbs_chunk, bwd)],
+                carry.take().into_iter().collect(),
+            ));
+            // attn(c1) + shared experts(c0) overlap dispatch(c0).
+            let mut comps = vec![attn_chunk(m, l, 1, mbs_chunk, bwd)];
+            if moe.shared_experts > 0 {
+                comps.push(CompOpDesc::ffn(
+                    format!("l{l}.shared.c0"),
+                    tokens_chunk,
+                    m.d_model as u64,
+                    (moe.d_ff_expert * moe.shared_experts) as u64,
+                    m.dtype_bytes as u64,
+                ));
+            }
+            s.push(OverlapGroup::with(
+                format!("{phase}.l{l}.attn1"),
+                comps,
+                vec![a2a(format!("{phase}.l{l}.dispatch.c0"), tokens_chunk, m, &moe, ep)],
+            ));
+            // experts(c0) overlap dispatch(c1).
+            s.push(OverlapGroup::with(
+                format!("{phase}.l{l}.exp0"),
+                vec![expert_chunk(m, &moe, l, 0, tokens_chunk, ep, bwd)],
+                vec![a2a(format!("{phase}.l{l}.dispatch.c1"), tokens_chunk, m, &moe, ep)],
+            ));
+            // experts(c1) overlap combine(c0).
+            s.push(OverlapGroup::with(
+                format!("{phase}.l{l}.exp1"),
+                vec![expert_chunk(m, &moe, l, 1, tokens_chunk, ep, bwd)],
+                vec![a2a(format!("{phase}.l{l}.combine.c0"), tokens_chunk, m, &moe, ep)],
+            ));
+            carry = Some(a2a(format!("{phase}.l{l}.combine.c1"), tokens_chunk, m, &moe, ep));
+        }
+        // The last combine is exposed against the head / embedding grad.
+        let tail_comp = if bwd {
+            CompOpDesc::elementwise("embed.grad", m.tokens(mbs) * m.d_model as u64, 4, 2.0)
+        } else {
+            CompOpDesc::matmul(
+                "lm_head",
+                m.tokens(mbs),
+                m.vocab as u64,
+                m.d_model as u64,
+                m.dtype_bytes as u64,
+            )
+        };
+        s.push(OverlapGroup::with(
+            format!("{phase}.tail"),
+            vec![tail_comp],
+            carry.take().into_iter().collect(),
+        ));
+    }
+
+    // Optimizer (experts sharded across EP ranks).
+    s.push(OverlapGroup::with(
+        "opt",
+        vec![CompOpDesc::elementwise("adamw", m.total_params() / ep as u64, 4, 6.0)],
+        vec![],
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_groups_per_layer_per_phase() {
+        let m = ModelSpec::olmoe_1b_7b();
+        let s = schedule(&m, 8, 2);
+        // 2 phases × (4·L + tail) + opt
+        assert_eq!(s.groups.len() as u32, 2 * (4 * m.layers + 1) + 1);
+    }
+
+    #[test]
+    fn a2a_sizes_scale_with_topk() {
+        let dsk = ModelSpec::deepseek_moe_16b(); // top-6
+        let olm = ModelSpec::olmoe_1b_7b(); // top-8
+        let sd = schedule(&dsk, 8, 2);
+        let so = schedule(&olm, 8, 2);
+        let a2a_d = sd.groups.iter().flat_map(|g| &g.comms).next().unwrap();
+        let a2a_o = so.groups.iter().flat_map(|g| &g.comms).next().unwrap();
+        // bytes per token-chunk: top_k × d × 2; same d, 6 vs 8.
+        assert_eq!(a2a_d.bytes / 6, a2a_o.bytes / 8);
+        assert_eq!(a2a_d.kind, CollectiveKind::AllToAll);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a MoE model")]
+    fn dense_model_rejected() {
+        schedule(&ModelSpec::phi2(), 8, 2);
+    }
+
+    #[test]
+    fn shared_experts_only_for_deepseek() {
+        let sd = schedule(&ModelSpec::deepseek_moe_16b(), 8, 2);
+        assert!(sd
+            .groups
+            .iter()
+            .any(|g| g.comps.iter().any(|c| c.name.contains("shared"))));
+        let so = schedule(&ModelSpec::olmoe_1b_7b(), 8, 2);
+        assert!(!so
+            .groups
+            .iter()
+            .any(|g| g.comps.iter().any(|c| c.name.contains("shared"))));
+    }
+
+    #[test]
+    fn bwd_phase_heavier() {
+        let s = schedule(&ModelSpec::olmoe_1b_7b(), 8, 2);
+        let fwd: f64 = s
+            .groups
+            .iter()
+            .filter(|g| g.name.starts_with("fwd.l0"))
+            .map(|g| g.total_flops())
+            .sum();
+        let bwd: f64 = s
+            .groups
+            .iter()
+            .filter(|g| g.name.starts_with("bwd.l0"))
+            .map(|g| g.total_flops())
+            .sum();
+        assert!(bwd > 1.8 * fwd);
+    }
+}

@@ -1,0 +1,234 @@
+//! FSDP schedule: per-layer parameter AllGather / gradient ReduceScatter
+//! interleaved with layer compute (§2.1, Fig 2, Fig 8 patterns).
+//!
+//! Forward (**Pattern 1**): while layer *l* computes, the next layer's
+//! parameters are AllGathered. Backward (**Pattern 2**): while layer *l*
+//! back-propagates, the previous layer's parameters are re-AllGathered
+//! (reshard-after-forward) *and* the following layer's gradients are
+//! ReduceScattered — the multi-communication overlap group of Fig 8b.
+
+use crate::comm::{CollectiveKind, CommOpDesc};
+use crate::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use crate::models::ModelSpec;
+
+/// Forward compute ops of one layer for `mbs` sequences.
+fn layer_fwd_ops(m: &ModelSpec, l: u32, mbs: u32) -> Vec<CompOpDesc> {
+    let tokens = m.tokens(mbs);
+    let d = m.d_model as u64;
+    let mut ops = vec![
+        CompOpDesc::attention(
+            format!("l{l}.attn"),
+            mbs as u64,
+            m.seq as u64,
+            d,
+            m.heads as u64,
+            m.dtype_bytes as u64,
+        ),
+        CompOpDesc::elementwise(format!("l{l}.norm"), tokens * d, m.dtype_bytes as u64, 3.0),
+    ];
+    match m.moe {
+        None => ops.push(CompOpDesc::ffn(
+            format!("l{l}.ffn"),
+            tokens,
+            d,
+            m.d_ff as u64,
+            m.dtype_bytes as u64,
+        )),
+        Some(moe) => {
+            // Under FSDP the experts are sharded like any other parameters;
+            // compute is the activated experts' FFN work.
+            let pairs = tokens * moe.top_k as u64;
+            ops.push(CompOpDesc::ffn(
+                format!("l{l}.moe"),
+                pairs,
+                d,
+                moe.d_ff_expert as u64,
+                m.dtype_bytes as u64,
+            ));
+            if moe.shared_experts > 0 {
+                ops.push(CompOpDesc::ffn(
+                    format!("l{l}.shared"),
+                    tokens,
+                    d,
+                    (moe.d_ff_expert * moe.shared_experts) as u64,
+                    m.dtype_bytes as u64,
+                ));
+            }
+        }
+    }
+    ops
+}
+
+/// Backward ops ≈ 2× forward work.
+fn layer_bwd_ops(m: &ModelSpec, l: u32, mbs: u32) -> Vec<CompOpDesc> {
+    layer_fwd_ops(m, l, mbs)
+        .into_iter()
+        .map(|op| {
+            let name = format!("{}.bwd", op.name);
+            op.scaled(name, 2.0)
+        })
+        .collect()
+}
+
+fn ag(m: &ModelSpec, l: u32, world: u32) -> CommOpDesc {
+    CommOpDesc::new(
+        format!("l{l}.ag_params"),
+        CollectiveKind::AllGather,
+        m.layer_param_bytes(),
+        world,
+    )
+}
+
+fn rs(m: &ModelSpec, l: u32, world: u32) -> CommOpDesc {
+    CommOpDesc::new(
+        format!("l{l}.rs_grads"),
+        CollectiveKind::ReduceScatter,
+        m.layer_param_bytes(),
+        world,
+    )
+}
+
+/// Build the FSDP iteration schedule (one fwd+bwd micro-step + optimizer).
+pub fn schedule(m: &ModelSpec, world: u32, mbs: u32) -> IterationSchedule {
+    let mut s = IterationSchedule::new(format!("{}-fsdp{}", m.name, world));
+    let tokens = m.tokens(mbs);
+    let d = m.d_model as u64;
+    let l_last = m.layers - 1;
+
+    // Embedding lookup overlaps the first layer's parameter AllGather.
+    s.push(OverlapGroup::with(
+        "fwd.embed",
+        vec![CompOpDesc::elementwise("embed", tokens * d, m.dtype_bytes as u64, 2.0)],
+        vec![ag(m, 0, world)],
+    ));
+
+    // Forward: layer l computes while layer l+1's params gather (Pattern 1).
+    for l in 0..m.layers {
+        let comms = if l < l_last { vec![ag(m, l + 1, world)] } else { vec![] };
+        s.push(OverlapGroup::with(
+            format!("fwd.l{l}"),
+            layer_fwd_ops(m, l, mbs),
+            comms,
+        ));
+    }
+
+    // LM head (tied embedding): big vocab GEMM, no comm to hide.
+    s.push(OverlapGroup::with(
+        "fwd.head",
+        vec![CompOpDesc::matmul(
+            "lm_head",
+            tokens,
+            m.vocab as u64,
+            d,
+            m.dtype_bytes as u64,
+        )],
+        vec![],
+    ));
+
+    // Head backward overlaps re-gathering the last layer's params.
+    s.push(OverlapGroup::with(
+        "bwd.head",
+        vec![CompOpDesc::matmul(
+            "lm_head.bwd",
+            tokens,
+            d,
+            m.vocab as u64,
+            m.dtype_bytes as u64,
+        )
+        .scaled("lm_head.bwd", 2.0)],
+        vec![ag(m, l_last, world)],
+    ));
+
+    // Backward: layer l computes while params of l-1 gather and grads of
+    // l+1 reduce-scatter (Pattern 2: two comms per group).
+    for l in (0..m.layers).rev() {
+        let mut comms = Vec::with_capacity(2);
+        if l < l_last {
+            comms.push(rs(m, l + 1, world));
+        }
+        if l > 0 {
+            comms.push(ag(m, l - 1, world));
+        }
+        s.push(OverlapGroup::with(
+            format!("bwd.l{l}"),
+            layer_bwd_ops(m, l, mbs),
+            comms,
+        ));
+    }
+
+    // Tail: layer 0 gradients reduce-scatter while the (sharded) optimizer
+    // step runs.
+    let shard_elems = (m.total_params() / world as u64).max(1);
+    s.push(OverlapGroup::with(
+        "opt",
+        vec![CompOpDesc::elementwise("adamw", shard_elems, 4, 6.0)],
+        vec![rs(m, 0, world)],
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_matches_patterns() {
+        let m = ModelSpec::phi2();
+        let s = schedule(&m, 8, 2);
+        // embed + L fwd + head + head.bwd + L bwd + opt
+        assert_eq!(s.groups.len() as u32, 2 * m.layers + 4);
+        // Pattern 1 groups: exactly one AllGather.
+        let fwd0 = s.groups.iter().find(|g| g.name == "fwd.l0").unwrap();
+        assert_eq!(fwd0.comms.len(), 1);
+        assert_eq!(fwd0.comms[0].kind, CollectiveKind::AllGather);
+        // Pattern 2 groups: RS + AG.
+        let bwd_mid = s.groups.iter().find(|g| g.name == "bwd.l16").unwrap();
+        assert_eq!(bwd_mid.comms.len(), 2);
+        assert_eq!(bwd_mid.comms[0].kind, CollectiveKind::ReduceScatter);
+        assert_eq!(bwd_mid.comms[1].kind, CollectiveKind::AllGather);
+    }
+
+    #[test]
+    fn comm_volume_is_3x_params() {
+        // FSDP moves each layer's params twice (fwd AG + bwd AG) and grads
+        // once (RS) per micro-step — 3× layer bytes (± head/embed).
+        let m = ModelSpec::phi2();
+        let s = schedule(&m, 8, 2);
+        let total: u64 = s
+            .groups
+            .iter()
+            .flat_map(|g| g.comms.iter())
+            .map(|c| c.bytes)
+            .sum();
+        let expect = 3 * m.layers as u64 * m.layer_param_bytes();
+        let ratio = total as f64 / expect as f64;
+        assert!((0.95..1.05).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn bwd_groups_heavier_than_fwd() {
+        let m = ModelSpec::phi2();
+        let s = schedule(&m, 8, 2);
+        let fwd = s.groups.iter().find(|g| g.name == "fwd.l5").unwrap();
+        let bwd = s.groups.iter().find(|g| g.name == "bwd.l5").unwrap();
+        assert!(bwd.total_flops() > 1.9 * fwd.total_flops());
+    }
+
+    #[test]
+    fn moe_model_builds_under_fsdp() {
+        let m = ModelSpec::olmoe_1b_7b();
+        let s = schedule(&m, 16, 2);
+        assert!(s.num_comms() > 0);
+        assert!(s.groups.iter().any(|g| g.comps.iter().any(|c| c.name.contains("moe"))));
+    }
+
+    #[test]
+    fn all_comms_world_matches() {
+        let s = schedule(&ModelSpec::phi2(), 16, 2);
+        for g in &s.groups {
+            for c in &g.comms {
+                assert_eq!(c.world, 16);
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Parallelism schedule generators (§2.1).
+//!
+//! Each generator lowers a [`ModelSpec`] + parallelization into an
+//! [`IterationSchedule`] — the sequence of overlap groups a training
+//! iteration exposes on every rank. These encode *where* communication
+//! overlaps computation for each strategy:
+//!
+//! * **FSDP** — layer compute overlaps next-layer parameter AllGather
+//!   (forward, the paper's Pattern 1) and ReduceScatter of gradients +
+//!   AllGather of earlier params (backward, Pattern 2).
+//! * **TP (Domino)** — batch is split in half; each half's post-attention /
+//!   post-FFN AllReduce overlaps the other half's compute.
+//! * **EP (dual-batch)** — each half-batch's AllToAll dispatch/combine
+//!   overlaps the other half's attention/expert compute.
+//! * **DP** — bucketed gradient AllReduce overlaps backward compute.
+//! * **PP (1F1B)** — stage-boundary activation transfers overlap the
+//!   steady-state one-forward-one-backward compute.
+
+pub mod dp;
+pub mod ep;
+pub mod fsdp;
+pub mod pp;
+pub mod tp;
+
+use crate::graph::IterationSchedule;
+use crate::hw::ClusterSpec;
+use crate::models::ModelSpec;
+use std::fmt;
+
+/// A parallelization strategy instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Fully-sharded data parallel over `world` ranks.
+    Fsdp { world: u32 },
+    /// Megatron tensor parallel (`tp` ranks, Domino batch-slicing) combined
+    /// with `dp`-way data parallelism.
+    TpDp { tp: u32, dp: u32 },
+    /// Expert parallel over `ep` ranks (dual-batch overlapping).
+    Ep { ep: u32 },
+    /// Pure data parallel with bucketed gradient AllReduce.
+    Dp { world: u32 },
+    /// Pipeline parallel, 1F1B, `stages` stages × `microbatches`.
+    Pp { stages: u32, microbatches: u32 },
+}
+
+impl Parallelism {
+    /// Total ranks the strategy occupies.
+    pub fn world(&self) -> u32 {
+        match *self {
+            Parallelism::Fsdp { world } | Parallelism::Dp { world } => world,
+            Parallelism::TpDp { tp, dp } => tp * dp,
+            Parallelism::Ep { ep } => ep,
+            Parallelism::Pp { stages, .. } => stages,
+        }
+    }
+}
+
+impl fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Parallelism::Fsdp { world } => write!(f, "FSDP{world}"),
+            Parallelism::TpDp { tp, dp } => write!(f, "TP{tp}xDP{dp}"),
+            Parallelism::Ep { ep } => write!(f, "EP{ep}"),
+            Parallelism::Dp { world } => write!(f, "DP{world}"),
+            Parallelism::Pp { stages, microbatches } => write!(f, "PP{stages}x{microbatches}mb"),
+        }
+    }
+}
+
+/// One Table-2 row: a model under a strategy with batch sizes.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub model: ModelSpec,
+    pub par: Parallelism,
+    /// Micro batch size (sequences per rank per micro-step).
+    pub mbs: u32,
+    /// Global batch size (sequences per optimizer step).
+    pub gbs: u32,
+}
+
+impl Workload {
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.model.name, self.par)
+    }
+
+    /// Gradient-accumulation micro-steps per iteration.
+    pub fn micro_steps(&self) -> u32 {
+        let replicas = match self.par {
+            Parallelism::Fsdp { world } | Parallelism::Dp { world } => world,
+            Parallelism::TpDp { dp, .. } => dp,
+            Parallelism::Ep { ep } => ep, // EP ranks each carry their own batch
+            Parallelism::Pp { .. } => 1,
+        };
+        (self.gbs / (self.mbs * replicas)).max(1)
+    }
+}
+
+/// The paper's Table 2 for a cluster of `world` GPUs (8 or 16).
+pub fn table2_workloads(world: u32) -> Vec<Workload> {
+    let mut out = Vec::new();
+    // FSDP rows: GBS = 2 × world, dense models.
+    for (m, mbs) in [
+        (ModelSpec::phi2(), 2u32),
+        (ModelSpec::llama3_8b(), 1),
+        (ModelSpec::mpt_7b(), 1),
+    ] {
+        out.push(Workload {
+            model: m,
+            par: Parallelism::Fsdp { world },
+            mbs,
+            gbs: 2 * world,
+        });
+    }
+    // TP rows: TP=8, DP = world/8.
+    let dp = (world / 8).max(1);
+    for (m, mbs, gbs) in [
+        (ModelSpec::phi2(), 8u32, 512u32),
+        (ModelSpec::llama3_8b(), 4, 256),
+        (ModelSpec::mpt_7b(), 2, 256),
+    ] {
+        out.push(Workload { model: m, par: Parallelism::TpDp { tp: 8, dp }, mbs, gbs });
+    }
+    // EP rows: EP=8 (single-node MoE).
+    if world >= 8 {
+        for m in [ModelSpec::deepseek_moe_16b(), ModelSpec::olmoe_1b_7b()] {
+            out.push(Workload { model: m, par: Parallelism::Ep { ep: 8 }, mbs: 2, gbs: 16 });
+        }
+    }
+    out
+}
+
+/// Lower a workload into the per-rank iteration schedule on `cluster`.
+pub fn build_schedule(w: &Workload, cluster: &ClusterSpec) -> IterationSchedule {
+    assert!(
+        w.par.world() <= cluster.world_size(),
+        "workload world {} exceeds cluster {}",
+        w.par.world(),
+        cluster.world_size()
+    );
+    match w.par {
+        Parallelism::Fsdp { world } => fsdp::schedule(&w.model, world, w.mbs),
+        Parallelism::TpDp { tp, dp } => tp::schedule(&w.model, tp, dp, w.mbs, cluster),
+        Parallelism::Ep { ep } => ep::schedule(&w.model, ep, w.mbs),
+        Parallelism::Dp { world } => dp::schedule(&w.model, world, w.mbs),
+        Parallelism::Pp { stages, microbatches } => {
+            pp::schedule(&w.model, stages, microbatches, w.mbs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::ClusterSpec;
+
+    #[test]
+    fn table2_has_all_rows() {
+        let w8 = table2_workloads(8);
+        assert_eq!(w8.len(), 8); // 3 FSDP + 3 TP + 2 EP
+        let w16 = table2_workloads(16);
+        assert!(w16.iter().any(|w| matches!(w.par, Parallelism::TpDp { dp: 2, .. })));
+    }
+
+    #[test]
+    fn micro_steps_match_table() {
+        // Phi-2 TP row: MBS 8, GBS 512, DP 1 → 64 micro-steps.
+        let w = Workload {
+            model: ModelSpec::phi2(),
+            par: Parallelism::TpDp { tp: 8, dp: 1 },
+            mbs: 8,
+            gbs: 512,
+        };
+        assert_eq!(w.micro_steps(), 64);
+        // FSDP Phi-2 on 8 GPUs: MBS 2, GBS 16 → 1 micro-step.
+        let f = Workload {
+            model: ModelSpec::phi2(),
+            par: Parallelism::Fsdp { world: 8 },
+            mbs: 2,
+            gbs: 16,
+        };
+        assert_eq!(f.micro_steps(), 1);
+    }
+
+    #[test]
+    fn every_table2_workload_builds() {
+        let cl = ClusterSpec::cluster_a(2);
+        for w in table2_workloads(16) {
+            let s = build_schedule(&w, &cl);
+            assert!(!s.groups.is_empty(), "{} empty", w.label());
+            assert!(s.num_comms() > 0, "{} no comms", w.label());
+            assert!(s.num_comps() > 0, "{} no comps", w.label());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds cluster")]
+    fn oversubscription_rejected() {
+        let cl = ClusterSpec::cluster_a(1);
+        let w = Workload {
+            model: ModelSpec::phi2(),
+            par: Parallelism::Fsdp { world: 16 },
+            mbs: 1,
+            gbs: 32,
+        };
+        build_schedule(&w, &cl);
+    }
+
+    #[test]
+    fn display_labels() {
+        assert_eq!(format!("{}", Parallelism::TpDp { tp: 8, dp: 2 }), "TP8xDP2");
+        assert_eq!(format!("{}", Parallelism::Fsdp { world: 16 }), "FSDP16");
+    }
+}

@@ -1,0 +1,131 @@
+//! Pipeline-parallel (1F1B) schedule — an extension substrate (§2.1 lists
+//! PP as combined with the evaluated parallelisms).
+//!
+//! We model one stage's view: warmup forwards, steady-state 1F1B pairs,
+//! cooldown backwards. Stage-boundary activation transfers are modeled as
+//! world-2 Broadcasts (point-to-point) overlapping the stage compute.
+
+use crate::comm::{CollectiveKind, CommOpDesc};
+use crate::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use crate::models::ModelSpec;
+
+fn stage_fwd(m: &ModelSpec, layers: u32, mb: u32, mbs: u32) -> Vec<CompOpDesc> {
+    let tokens = m.tokens(mbs);
+    let d = m.d_model as u64;
+    let mut ops = Vec::new();
+    for l in 0..layers {
+        ops.push(CompOpDesc::attention(
+            format!("mb{mb}.l{l}.attn"),
+            mbs as u64,
+            m.seq as u64,
+            d,
+            m.heads as u64,
+            m.dtype_bytes as u64,
+        ));
+        ops.push(CompOpDesc::ffn(
+            format!("mb{mb}.l{l}.ffn"),
+            tokens,
+            d,
+            m.d_ff as u64,
+            m.dtype_bytes as u64,
+        ));
+    }
+    ops
+}
+
+fn act_xfer(m: &ModelSpec, name: String, mbs: u32) -> CommOpDesc {
+    CommOpDesc::new(name, CollectiveKind::Broadcast, m.act_bytes(mbs), 2)
+}
+
+/// Build one stage's 1F1B schedule.
+pub fn schedule(m: &ModelSpec, stages: u32, microbatches: u32, mbs: u32) -> IterationSchedule {
+    assert!(stages >= 2, "pipeline needs >= 2 stages");
+    let layers_per_stage = (m.layers / stages).max(1);
+    let mut s = IterationSchedule::new(format!("{}-pp{}x{}", m.name, stages, microbatches));
+    let warmup = (stages - 1).min(microbatches);
+
+    // Warmup: forward-only, each overlapping the previous microbatch's
+    // activation send.
+    for mb in 0..warmup {
+        let comms = if mb > 0 {
+            vec![act_xfer(m, format!("mb{}.send_act", mb - 1), mbs)]
+        } else {
+            vec![]
+        };
+        s.push(OverlapGroup::with(
+            format!("warmup.mb{mb}"),
+            stage_fwd(m, layers_per_stage, mb, mbs),
+            comms,
+        ));
+    }
+
+    // Steady state: 1F1B — each group does one fwd + one bwd while the
+    // boundary tensors (activation fwd, gradient bwd) transfer.
+    for mb in warmup..microbatches {
+        let mut comps = stage_fwd(m, layers_per_stage, mb, mbs);
+        comps.extend(
+            stage_fwd(m, layers_per_stage, mb - warmup, mbs)
+                .into_iter()
+                .map(|op| op.scaled(format!("{}.bwd", op.name), 2.0)),
+        );
+        s.push(OverlapGroup::with(
+            format!("steady.mb{mb}"),
+            comps,
+            vec![
+                act_xfer(m, format!("mb{mb}.send_act"), mbs),
+                act_xfer(m, format!("mb{}.send_grad", mb - warmup), mbs),
+            ],
+        ));
+    }
+
+    // Cooldown: backward-only.
+    for mb in (microbatches - warmup..microbatches).rev() {
+        s.push(OverlapGroup::with(
+            format!("cooldown.mb{mb}"),
+            stage_fwd(m, layers_per_stage, mb, mbs)
+                .into_iter()
+                .map(|op| op.scaled(format!("{}.bwd", op.name), 2.0))
+                .collect(),
+            vec![act_xfer(m, format!("mb{mb}.send_grad"), mbs)],
+        ));
+    }
+
+    s.push(OverlapGroup::with(
+        "opt",
+        vec![CompOpDesc::elementwise(
+            "adamw",
+            m.total_params() / stages as u64,
+            4,
+            6.0,
+        )],
+        vec![],
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_counts_1f1b() {
+        let m = ModelSpec::phi2();
+        let s = schedule(&m, 4, 8, 1);
+        // 3 warmup + 5 steady + 3 cooldown + opt
+        assert_eq!(s.groups.len(), 3 + 5 + 3 + 1);
+    }
+
+    #[test]
+    fn steady_groups_carry_two_transfers() {
+        let s = schedule(&ModelSpec::phi2(), 4, 8, 1);
+        let steady = s.groups.iter().find(|g| g.name.starts_with("steady")).unwrap();
+        assert_eq!(steady.comms.len(), 2);
+        assert!(steady.comms.iter().all(|c| c.world == 2));
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 2 stages")]
+    fn single_stage_rejected() {
+        schedule(&ModelSpec::phi2(), 1, 8, 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! Tensor-parallel schedule with Domino-style batch-slice overlapping
+//! (§2.1, [27]) optionally combined with data parallelism.
+//!
+//! Megatron TP puts an AllReduce after the attention output projection and
+//! after the FFN down-projection. Domino splits the microbatch into two
+//! halves: while half *b* communicates, half *1−b* computes, producing a
+//! chain of overlap groups whose comm is the *previous* half's AllReduce.
+//! With DP > 1, bucketed gradient AllReduces additionally overlap backward
+//! compute.
+
+use crate::comm::{CollectiveKind, CommOpDesc};
+use crate::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use crate::hw::ClusterSpec;
+use crate::models::ModelSpec;
+
+/// Per-rank attention compute for half a microbatch under TP sharding.
+fn attn_half(m: &ModelSpec, l: u32, half: u32, mbs_half: u64, tp: u32, bwd: bool) -> CompOpDesc {
+    let tag = if bwd { ".bwd" } else { "" };
+    let op = CompOpDesc::attention(
+        format!("l{l}.attn.h{half}{tag}"),
+        mbs_half,
+        m.seq as u64,
+        m.d_model as u64,
+        m.heads as u64,
+        m.dtype_bytes as u64,
+    );
+    let factor = if bwd { 2.0 } else { 1.0 } / tp as f64;
+    op.scaled(format!("l{l}.attn.h{half}{tag}"), factor)
+}
+
+/// Per-rank FFN compute for half a microbatch under TP sharding.
+fn ffn_half(m: &ModelSpec, l: u32, half: u32, tokens_half: u64, tp: u32, bwd: bool) -> CompOpDesc {
+    let tag = if bwd { ".bwd" } else { "" };
+    let op = CompOpDesc::ffn(
+        format!("l{l}.ffn.h{half}{tag}"),
+        tokens_half,
+        m.d_model as u64,
+        (m.d_ff / tp) as u64,
+        m.dtype_bytes as u64,
+    );
+    if bwd {
+        op.scaled(format!("l{l}.ffn.h{half}{tag}"), 2.0)
+    } else {
+        op
+    }
+}
+
+/// Activation AllReduce of one half-batch across the TP group.
+fn ar_act(m: &ModelSpec, name: String, tokens_half: u64, tp: u32) -> CommOpDesc {
+    CommOpDesc::new(
+        name,
+        CollectiveKind::AllReduce,
+        tokens_half * m.d_model as u64 * m.dtype_bytes as u64,
+        tp,
+    )
+}
+
+/// Bucketed DP gradient AllReduce spanning replicas (crosses nodes when
+/// dp > 1 on a 2-node cluster — base_rank picked so the communicator
+/// straddles the node boundary).
+fn dp_grad_bucket(name: String, bytes: u64, dp: u32, cluster: &ClusterSpec) -> CommOpDesc {
+    let mut op = CommOpDesc::new(name, CollectiveKind::AllReduce, bytes, dp);
+    if cluster.topology.nodes > 1 {
+        op.base_rank = cluster.topology.gpus_per_node - 1;
+    }
+    op
+}
+
+/// Build the TP(+DP) schedule for one micro-step.
+pub fn schedule(
+    m: &ModelSpec,
+    tp: u32,
+    dp: u32,
+    mbs: u32,
+    cluster: &ClusterSpec,
+) -> IterationSchedule {
+    assert!(tp >= 2, "TP degree must be >= 2");
+    let mut s = IterationSchedule::new(format!("{}-tp{}dp{}", m.name, tp, dp));
+    let mbs_half = (mbs as u64 + 1) / 2;
+    let tokens_half = mbs_half * m.seq as u64;
+
+    // ---- Forward: Domino chain. `carry` is the comm launched by the
+    // previous group, overlapped by this group's compute.
+    let mut carry: Option<CommOpDesc> = None;
+    for l in 0..m.layers {
+        // attn(h0) overlaps previous layer's ffn AR(h1).
+        s.push(OverlapGroup::with(
+            format!("fwd.l{l}.a0"),
+            vec![attn_half(m, l, 0, mbs_half, tp, false)],
+            carry.take().into_iter().collect(),
+        ));
+        // attn(h1) overlaps AR of attn out (h0).
+        s.push(OverlapGroup::with(
+            format!("fwd.l{l}.a1"),
+            vec![attn_half(m, l, 1, mbs_half, tp, false)],
+            vec![ar_act(m, format!("l{l}.ar_attn.h0"), tokens_half, tp)],
+        ));
+        // ffn(h0) overlaps AR of attn out (h1).
+        s.push(OverlapGroup::with(
+            format!("fwd.l{l}.f0"),
+            vec![ffn_half(m, l, 0, tokens_half, tp, false)],
+            vec![ar_act(m, format!("l{l}.ar_attn.h1"), tokens_half, tp)],
+        ));
+        // ffn(h1) overlaps AR of ffn out (h0).
+        s.push(OverlapGroup::with(
+            format!("fwd.l{l}.f1"),
+            vec![ffn_half(m, l, 1, tokens_half, tp, false)],
+            vec![ar_act(m, format!("l{l}.ar_ffn.h0"), tokens_half, tp)],
+        ));
+        carry = Some(ar_act(m, format!("l{l}.ar_ffn.h1"), tokens_half, tp));
+    }
+    // Exposed tail AR of the last layer + LM head compute.
+    s.push(OverlapGroup::with(
+        "fwd.head",
+        vec![CompOpDesc::matmul(
+            "lm_head",
+            m.tokens(mbs),
+            (m.vocab / tp) as u64,
+            m.d_model as u64,
+            m.dtype_bytes as u64,
+        )],
+        carry.take().into_iter().collect(),
+    ));
+
+    // ---- Backward: mirrored chain (2× compute), plus DP gradient buckets.
+    let grad_bucket_bytes = if dp > 1 {
+        // One bucket per layer: this layer's shard of parameters.
+        (m.layer_params() / tp as u64) * m.dtype_bytes as u64
+    } else {
+        0
+    };
+    let mut carry: Option<CommOpDesc> = None;
+    for l in (0..m.layers).rev() {
+        let mut g_comms: Vec<CommOpDesc> = carry.take().into_iter().collect();
+        s.push(OverlapGroup::with(
+            format!("bwd.l{l}.f1"),
+            vec![ffn_half(m, l, 1, tokens_half, tp, true)],
+            g_comms.drain(..).collect::<Vec<_>>(),
+        ));
+        s.push(OverlapGroup::with(
+            format!("bwd.l{l}.f0"),
+            vec![ffn_half(m, l, 0, tokens_half, tp, true)],
+            vec![ar_act(m, format!("l{l}.ar_gffn.h1"), tokens_half, tp)],
+        ));
+        s.push(OverlapGroup::with(
+            format!("bwd.l{l}.a1"),
+            vec![attn_half(m, l, 1, mbs_half, tp, true)],
+            vec![ar_act(m, format!("l{l}.ar_gffn.h0"), tokens_half, tp)],
+        ));
+        let mut comms = vec![ar_act(m, format!("l{l}.ar_gattn.h1"), tokens_half, tp)];
+        if dp > 1 {
+            comms.push(dp_grad_bucket(
+                format!("l{l}.dp_grads"),
+                grad_bucket_bytes,
+                dp,
+                cluster,
+            ));
+        }
+        s.push(OverlapGroup::with(
+            format!("bwd.l{l}.a0"),
+            vec![attn_half(m, l, 0, mbs_half, tp, true)],
+            comms,
+        ));
+        carry = Some(ar_act(m, format!("l{l}.ar_gattn.h0"), tokens_half, tp));
+    }
+
+    // Optimizer tail (params sharded over TP).
+    let mut tail: Vec<CommOpDesc> = carry.take().into_iter().collect();
+    if dp > 1 {
+        tail.push(dp_grad_bucket(
+            "embed.dp_grads".into(),
+            (m.vocab as u64 * m.d_model as u64 / tp as u64) * m.dtype_bytes as u64,
+            dp,
+            cluster,
+        ));
+    }
+    s.push(OverlapGroup::with(
+        "opt",
+        vec![CompOpDesc::elementwise(
+            "adamw",
+            m.total_params() / tp as u64,
+            4,
+            6.0,
+        )],
+        tail,
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::ClusterSpec;
+
+    #[test]
+    fn domino_chain_structure() {
+        let m = ModelSpec::phi2();
+        let cl = ClusterSpec::cluster_a(1);
+        let s = schedule(&m, 8, 1, 8, &cl);
+        // 4 fwd + 4 bwd groups per layer + head + opt.
+        assert_eq!(s.groups.len() as u32, 8 * m.layers + 2);
+        // First group has no comm to hide (pipe is empty).
+        assert!(s.groups[0].comms.is_empty());
+        // Second group overlaps exactly the h0 attention AllReduce.
+        assert_eq!(s.groups[1].comms.len(), 1);
+        assert!(s.groups[1].comms[0].name.contains("ar_attn.h0"));
+    }
+
+    #[test]
+    fn ar_bytes_are_half_batch_activations() {
+        let m = ModelSpec::phi2();
+        let cl = ClusterSpec::cluster_a(1);
+        let s = schedule(&m, 8, 1, 8, &cl);
+        let ar = &s.groups[1].comms[0];
+        assert_eq!(ar.bytes, 4 * m.seq as u64 * m.d_model as u64 * 2);
+        assert_eq!(ar.world, 8);
+    }
+
+    #[test]
+    fn dp2_adds_grad_buckets_spanning_nodes() {
+        let m = ModelSpec::phi2();
+        let cl = ClusterSpec::cluster_a(2);
+        let s = schedule(&m, 8, 2, 8, &cl);
+        let buckets: Vec<&CommOpDesc> = s
+            .groups
+            .iter()
+            .flat_map(|g| g.comms.iter())
+            .filter(|c| c.name.contains("dp_grads"))
+            .collect();
+        assert_eq!(buckets.len() as u32, m.layers + 1);
+        for b in buckets {
+            assert_eq!(b.world, 2);
+            assert!(cl.topology.spans_nodes(b.base_rank, b.world), "bucket must cross nodes");
+        }
+    }
+
+    #[test]
+    fn dp1_has_no_grad_buckets() {
+        let m = ModelSpec::phi2();
+        let cl = ClusterSpec::cluster_a(1);
+        let s = schedule(&m, 8, 1, 8, &cl);
+        assert!(!s
+            .groups
+            .iter()
+            .flat_map(|g| g.comms.iter())
+            .any(|c| c.name.contains("dp_grads")));
+    }
+
+    #[test]
+    fn compute_is_tp_sharded() {
+        let m = ModelSpec::phi2();
+        let cl = ClusterSpec::cluster_a(1);
+        let s2 = schedule(&m, 2, 1, 8, &cl);
+        let s8 = schedule(&m, 8, 1, 8, &cl);
+        let f2: f64 = s2.groups.iter().map(|g| g.total_flops()).sum();
+        let f8: f64 = s8.groups.iter().map(|g| g.total_flops()).sum();
+        assert!(f8 < f2 * 0.5, "8-way shards do less work per rank: {f8} vs {f2}");
+    }
+}

@@ -1,0 +1,168 @@
+//! `ProfileTime` — the measurement interface between tuners and the world.
+//!
+//! On the paper's testbed this is an instrumented training iteration; here
+//! it executes the overlap group on the cluster simulator. Tuners are
+//! restricted to this interface (they never see simulator internals), and
+//! every call is counted — the tuning-cost currency of Fig 8c.
+
+use crate::comm::CommConfig;
+use crate::graph::{IterationSchedule, OverlapGroup};
+use crate::sim::{simulate_group, SimEnv};
+
+/// One measured execution of an overlap group (possibly averaged reps).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupMeasurement {
+    /// Measured wall duration of each communication, `x_j`.
+    pub comm_times: Vec<f64>,
+    /// Y — total computation time of the group.
+    pub comp_total: f64,
+    /// X — total communication time of the group.
+    pub comm_total: f64,
+    /// Z — measured makespan.
+    pub makespan: f64,
+}
+
+/// Anything that can run an overlap group and report times: the local
+/// simulator here, or the leader/worker coordinator in
+/// [`crate::coordinator`] (same trait, measurements aggregated across
+/// ranks).
+pub trait ProfileBackend {
+    /// Execute `group` under `configs` and measure.
+    fn profile_group(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> GroupMeasurement;
+
+    /// Number of profile executions so far (Fig 8c's x-axis).
+    fn calls(&self) -> u64;
+}
+
+/// Local profiler over the cluster simulator.
+pub struct SimProfiler {
+    pub env: SimEnv,
+    /// Repetitions averaged per measurement (noise control).
+    pub reps: u32,
+    calls: u64,
+}
+
+impl SimProfiler {
+    pub fn new(env: SimEnv) -> Self {
+        SimProfiler { env, reps: 3, calls: 0 }
+    }
+
+    pub fn with_reps(env: SimEnv, reps: u32) -> Self {
+        SimProfiler { env, reps: reps.max(1), calls: 0 }
+    }
+}
+
+impl ProfileBackend for SimProfiler {
+    fn profile_group(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> GroupMeasurement {
+        self.calls += 1;
+        let mut comm_times = vec![0.0; group.comms.len()];
+        let mut comp_total = 0.0;
+        let mut comm_total = 0.0;
+        let mut makespan = 0.0;
+        for _ in 0..self.reps {
+            let r = simulate_group(group, configs, &mut self.env);
+            for (acc, t) in comm_times.iter_mut().zip(&r.comm_times) {
+                *acc += t;
+            }
+            comp_total += r.comp_total();
+            comm_total += r.comm_total();
+            makespan += r.makespan;
+        }
+        let n = self.reps as f64;
+        for t in &mut comm_times {
+            *t /= n;
+        }
+        GroupMeasurement {
+            comm_times,
+            comp_total: comp_total / n,
+            comm_total: comm_total / n,
+            makespan: makespan / n,
+        }
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+/// Measure a whole schedule under a flat config vector; returns the summed
+/// iteration time and per-group measurements.
+pub fn profile_schedule(
+    backend: &mut dyn ProfileBackend,
+    schedule: &IterationSchedule,
+    configs: &[CommConfig],
+) -> (f64, Vec<GroupMeasurement>) {
+    assert_eq!(configs.len(), schedule.num_comms());
+    let mut total = 0.0;
+    let mut out = Vec::with_capacity(schedule.groups.len());
+    let mut cursor = 0;
+    for g in &schedule.groups {
+        let n = g.comms.len();
+        let m = backend.profile_group(g, &configs[cursor..cursor + n]);
+        cursor += n;
+        total += m.makespan;
+        out.push(m);
+    }
+    (total, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::hw::ClusterSpec;
+    use crate::util::units::MIB;
+
+    fn fixture() -> (OverlapGroup, SimProfiler) {
+        let g = OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        let p = SimProfiler::new(SimEnv::new(ClusterSpec::cluster_b(1), 42));
+        (g, p)
+    }
+
+    #[test]
+    fn measurement_is_consistent() {
+        let (g, mut p) = fixture();
+        let m = p.profile_group(&g, &[CommConfig::default_ring()]);
+        assert_eq!(m.comm_times.len(), 1);
+        assert!((m.comm_total - m.comm_times.iter().sum::<f64>()).abs() < 1e-12);
+        assert!(m.makespan >= m.comp_total.max(m.comm_total) * 0.95);
+        assert_eq!(p.calls(), 1);
+    }
+
+    #[test]
+    fn reps_reduce_variance() {
+        let (g, _) = fixture();
+        let sample = |reps: u32, seed: u64| -> Vec<f64> {
+            let mut p =
+                SimProfiler::with_reps(SimEnv::new(ClusterSpec::cluster_b(1), seed), reps);
+            (0..24)
+                .map(|_| p.profile_group(&g, &[CommConfig::default_ring()]).makespan)
+                .collect()
+        };
+        let sd = |xs: &[f64]| {
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt() / m
+        };
+        let one = sd(&sample(1, 1));
+        let eight = sd(&sample(8, 2));
+        assert!(eight < one, "averaging reduces noise: {eight} vs {one}");
+    }
+
+    #[test]
+    fn schedule_profile_counts_calls_per_group() {
+        let (g, mut p) = fixture();
+        let mut s = IterationSchedule::new("it");
+        s.push(g.clone());
+        s.push(g);
+        let cfgs = vec![CommConfig::default_ring(); 2];
+        let (total, ms) = profile_schedule(&mut p, &s, &cfgs);
+        assert_eq!(ms.len(), 2);
+        assert_eq!(p.calls(), 2);
+        assert!((total - ms.iter().map(|m| m.makespan).sum::<f64>()).abs() < 1e-12);
+    }
+}

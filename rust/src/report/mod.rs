@@ -1,0 +1,201 @@
+//! Experiment drivers shared by the figure benches, the CLI and the
+//! examples: run a workload under every strategy and report iteration
+//! times + speedups the way the paper's evaluation section does.
+
+use crate::bench::Table;
+use crate::comm::CommConfig;
+use crate::graph::IterationSchedule;
+use crate::hw::ClusterSpec;
+use crate::parallel::{build_schedule, Workload};
+use crate::profiler::{profile_schedule, SimProfiler};
+use crate::sim::SimEnv;
+use crate::tuner::{AutoCclTuner, LagomTuner, NcclTuner, Tuner};
+
+/// One strategy's outcome on a workload.
+#[derive(Debug, Clone)]
+pub struct StrategyRow {
+    pub strategy: String,
+    /// Mean time of one tuned training iteration (micro-steps included).
+    pub iter_time: f64,
+    /// Speedup vs the NCCL baseline row.
+    pub speedup_vs_nccl: f64,
+    pub tuning_iterations: u64,
+    pub configs: Vec<CommConfig>,
+}
+
+/// Full comparison for a workload on a cluster.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub workload: String,
+    pub cluster: String,
+    pub rows: Vec<StrategyRow>,
+}
+
+impl Comparison {
+    pub fn row(&self, strategy: &str) -> &StrategyRow {
+        self.rows
+            .iter()
+            .find(|r| r.strategy == strategy)
+            .unwrap_or_else(|| panic!("strategy {strategy} missing"))
+    }
+
+    pub fn speedup(&self, a: &str, b: &str) -> f64 {
+        self.row(b).iter_time / self.row(a).iter_time
+    }
+}
+
+/// Evaluate a tuned config on fresh (differently-seeded) simulator noise:
+/// tuning must not get credit for overfitting one noise stream.
+pub fn evaluate(
+    schedule: &IterationSchedule,
+    configs: &[CommConfig],
+    cluster: &ClusterSpec,
+    micro_steps: u32,
+    seed: u64,
+) -> f64 {
+    let mut eval = SimProfiler::with_reps(SimEnv::new(cluster.clone(), seed), 5);
+    let (t, _) = profile_schedule(&mut eval, schedule, configs);
+    t * micro_steps as f64
+}
+
+/// Run NCCL / AutoCCL / Lagom on one workload (the Fig 7 protocol).
+pub fn compare_strategies(w: &Workload, cluster: &ClusterSpec, seed: u64) -> Comparison {
+    let schedule = build_schedule(w, cluster);
+    let micro = w.micro_steps();
+
+    let mut tuners: Vec<Box<dyn Tuner>> = vec![
+        Box::new(NcclTuner::new(cluster.clone())),
+        Box::new(AutoCclTuner::new(cluster.clone())),
+        Box::new(LagomTuner::new(cluster.clone())),
+    ];
+
+    let mut rows = Vec::new();
+    for t in tuners.iter_mut() {
+        let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), seed ^ 0xfeed));
+        let r = t.tune_schedule(&schedule, &mut prof);
+        let iter_time = evaluate(&schedule, &r.configs, cluster, micro, seed ^ 0xbeef);
+        rows.push(StrategyRow {
+            strategy: t.name(),
+            iter_time,
+            speedup_vs_nccl: 0.0,
+            tuning_iterations: r.iterations,
+            configs: r.configs,
+        });
+    }
+    let nccl_t = rows[0].iter_time;
+    for r in &mut rows {
+        r.speedup_vs_nccl = nccl_t / r.iter_time;
+    }
+    Comparison {
+        workload: w.label(),
+        cluster: cluster.name.clone(),
+        rows,
+    }
+}
+
+/// Format a set of comparisons as a Fig-7-style table.
+pub fn comparison_table(title: &str, comps: &[Comparison]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "cluster",
+            "workload",
+            "NCCL iter",
+            "AutoCCL iter",
+            "Lagom iter",
+            "AutoCCL vs NCCL",
+            "Lagom vs NCCL",
+            "Lagom vs AutoCCL",
+        ],
+    );
+    for c in comps {
+        let n = c.row("NCCL");
+        let a = c.row("AutoCCL");
+        let l = c.row("Lagom");
+        t.row(vec![
+            c.cluster.clone(),
+            c.workload.clone(),
+            crate::util::units::fmt_secs(n.iter_time),
+            crate::util::units::fmt_secs(a.iter_time),
+            crate::util::units::fmt_secs(l.iter_time),
+            format!("{:.2}x", a.speedup_vs_nccl),
+            format!("{:.2}x", l.speedup_vs_nccl),
+            format!("{:.2}x", c.speedup("Lagom", "AutoCCL")),
+        ]);
+    }
+    t
+}
+
+/// Profiling breakdown of a schedule: which groups are computation- vs
+/// communication-bound under given configs (the Fig 8a/8b analysis).
+pub fn bound_breakdown(
+    schedule: &IterationSchedule,
+    configs: &[CommConfig],
+    cluster: &ClusterSpec,
+    seed: u64,
+) -> (f64, f64) {
+    let mut prof = SimProfiler::with_reps(SimEnv::new(cluster.clone(), seed), 3);
+    let (_, groups) = profile_schedule(&mut prof, schedule, configs);
+    let mut comp_bound = 0.0;
+    let mut comm_bound = 0.0;
+    for g in &groups {
+        if g.comp_total >= g.comm_total {
+            comp_bound += g.makespan;
+        } else {
+            comm_bound += g.makespan;
+        }
+    }
+    (comp_bound, comm_bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelSpec;
+    use crate::parallel::Parallelism;
+
+    fn small_workload() -> Workload {
+        // A cut-down model keeps the test fast while exercising the full path.
+        let mut m = ModelSpec::phi2();
+        m.layers = 4;
+        Workload { model: m, par: Parallelism::Fsdp { world: 8 }, mbs: 2, gbs: 16 }
+    }
+
+    #[test]
+    fn comparison_has_all_strategies_and_sane_speedups() {
+        let cl = ClusterSpec::cluster_a(1);
+        let c = compare_strategies(&small_workload(), &cl, 7);
+        assert_eq!(c.rows.len(), 3);
+        assert!((c.row("NCCL").speedup_vs_nccl - 1.0).abs() < 1e-9);
+        let lagom = c.row("Lagom").speedup_vs_nccl;
+        assert!(lagom > 0.9, "Lagom should not badly lose to NCCL: {lagom}");
+        assert!(lagom < 3.0, "speedup sane: {lagom}");
+        assert!(c.row("Lagom").tuning_iterations > 0);
+        assert_eq!(c.row("NCCL").tuning_iterations, 0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let cl = ClusterSpec::cluster_a(1);
+        let c = compare_strategies(&small_workload(), &cl, 8);
+        let t = comparison_table("Fig 7a (test)", &[c]);
+        let r = t.render();
+        assert!(r.contains("Lagom vs NCCL"));
+        assert!(r.contains("Phi-2-2B/FSDP8"));
+    }
+
+    #[test]
+    fn breakdown_partitions_total() {
+        let cl = ClusterSpec::cluster_a(1);
+        let w = small_workload();
+        let s = build_schedule(&w, &cl);
+        let mut t = NcclTuner::new(cl.clone());
+        let mut p = SimProfiler::new(SimEnv::new(cl.clone(), 1));
+        let r = t.tune_schedule(&s, &mut p);
+        let (comp_b, comm_b) = bound_breakdown(&s, &r.configs, &cl, 3);
+        assert!(comp_b > 0.0 || comm_b > 0.0);
+        let total = evaluate(&s, &r.configs, &cl, 1, 3);
+        let sum = comp_b + comm_b;
+        assert!((sum - total).abs() / total < 0.1, "sum {sum} vs total {total}");
+    }
+}

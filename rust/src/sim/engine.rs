@@ -1,0 +1,407 @@
+//! Wave-stepped overlap execution engine.
+
+use crate::comm::{comm_resources, comm_time, CommConfig, CommResources};
+use crate::contention::model::{sms_available, wave_time, CompContext};
+use crate::graph::{IterationSchedule, OverlapGroup};
+use crate::hw::ClusterSpec;
+use crate::util::prng::Prng;
+
+/// How strongly concurrent computation slows a collective's progress
+/// (memory-system back-pressure on the channel copies). Relative pressure
+/// `p = comp_mem_rate / B̄` slows comm by `1/(1 + GAMMA·p)`.
+const COMM_SLOWDOWN_GAMMA: f64 = 0.4;
+
+/// Simulation environment: the hardware plus measurement-noise control.
+#[derive(Debug, Clone)]
+pub struct SimEnv {
+    pub cluster: ClusterSpec,
+    /// Relative std-dev of per-wave / per-comm multiplicative noise.
+    /// 0.0 gives a deterministic run.
+    pub noise_sigma: f64,
+    pub prng: Prng,
+}
+
+impl SimEnv {
+    pub fn new(cluster: ClusterSpec, seed: u64) -> Self {
+        SimEnv { cluster, noise_sigma: 0.015, prng: Prng::new(seed) }
+    }
+
+    pub fn deterministic(cluster: ClusterSpec) -> Self {
+        SimEnv { cluster, noise_sigma: 0.0, prng: Prng::new(0) }
+    }
+
+    #[inline]
+    fn noise(&mut self) -> f64 {
+        if self.noise_sigma == 0.0 {
+            1.0
+        } else {
+            self.prng.noise_factor(self.noise_sigma)
+        }
+    }
+}
+
+/// Measured execution of one overlap group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupResult {
+    /// Wall-clock end of the later stream (the measured Z).
+    pub makespan: f64,
+    /// Measured per-computation durations (Σ = the measured Y).
+    pub comp_times: Vec<f64>,
+    /// Measured per-communication wall durations (start→end, Σ = X).
+    pub comm_times: Vec<f64>,
+    /// Wall-clock (start, end) of each computation op.
+    pub comp_spans: Vec<(f64, f64)>,
+    /// Wall-clock (start, end) of each communication op.
+    pub comm_spans: Vec<(f64, f64)>,
+}
+
+impl GroupResult {
+    pub fn comp_total(&self) -> f64 {
+        self.comp_times.iter().sum()
+    }
+
+    pub fn comm_total(&self) -> f64 {
+        self.comm_times.iter().sum()
+    }
+}
+
+/// Per-op comm-stream state (kept in one vector: one allocation, better
+/// locality on the wave loop's hot path).
+#[derive(Clone, Copy)]
+struct CommOpState {
+    /// Uncontended work (seconds at rate 1) remaining.
+    remaining: f64,
+    res: CommResources,
+    span: (f64, f64),
+}
+
+/// Serialized comm-stream state during a group simulation.
+struct CommStream {
+    ops: Vec<CommOpState>,
+    /// Index of the op currently at the head of the stream.
+    head: usize,
+}
+
+impl CommStream {
+    fn active_res(&self) -> Option<&CommResources> {
+        self.ops.get(self.head).map(|o| &o.res)
+    }
+
+    fn done(&self) -> bool {
+        self.head >= self.ops.len()
+    }
+
+    /// Advance the stream by `dt` wall-clock seconds at progress rate
+    /// `rate` (≤ 1 under compute pressure), starting at wall time `t0`.
+    /// Multiple ops may complete inside the window.
+    fn advance(&mut self, t0: f64, dt: f64, rate: f64) {
+        let mut t = t0;
+        let mut room = dt;
+        while room > 1e-15 && !self.done() {
+            let need = self.ops[self.head].remaining / rate;
+            if need <= room {
+                t += need;
+                room -= need;
+                self.ops[self.head].remaining = 0.0;
+                self.ops[self.head].span.1 = t;
+                self.head += 1;
+                if !self.done() {
+                    self.ops[self.head].span.0 = t;
+                }
+            } else {
+                self.ops[self.head].remaining -= room * rate;
+                return;
+            }
+        }
+    }
+
+    /// Drain the rest of the stream uncontended starting at wall time `t`;
+    /// returns the finish time.
+    fn drain(&mut self, mut t: f64) -> f64 {
+        while !self.done() {
+            t += self.ops[self.head].remaining;
+            self.ops[self.head].remaining = 0.0;
+            self.ops[self.head].span.1 = t;
+            self.head += 1;
+            if !self.done() {
+                self.ops[self.head].span.0 = t;
+            }
+        }
+        t
+    }
+}
+
+/// Execute one overlap group under the given per-comm configurations.
+pub fn simulate_group(
+    group: &OverlapGroup,
+    configs: &[CommConfig],
+    env: &mut SimEnv,
+) -> GroupResult {
+    assert_eq!(
+        configs.len(),
+        group.comms.len(),
+        "one config per communication op required"
+    );
+    // Split-borrow the env: hardware is read-only, the PRNG is mutable —
+    // avoids cloning GpuSpec/Topology on every call (hot path).
+    let SimEnv { cluster, noise_sigma, prng } = env;
+    let sigma = *noise_sigma;
+    let mut noise = move || -> f64 {
+        if sigma == 0.0 {
+            1.0
+        } else {
+            prng.noise_factor(sigma)
+        }
+    };
+    let gpu = cluster.gpu();
+    let topo = &cluster.topology;
+
+    // Comm stream setup: per-op uncontended work (with measurement noise)
+    // and resource profiles.
+    let mut ops = Vec::with_capacity(group.comms.len());
+    for (op, cfg) in group.comms.iter().zip(configs) {
+        let w = comm_time(op, cfg, topo, gpu);
+        ops.push(CommOpState {
+            remaining: w * noise(),
+            res: comm_resources(op, cfg, topo, gpu, w),
+            span: (0.0, 0.0),
+        });
+    }
+    let mut comm = CommStream { ops, head: 0 };
+
+    // Compute stream: execute ops wave-by-wave; the active comm at each
+    // wave start decides that wave's contention (committed per wave, like
+    // a dispatched grid on real hardware).
+    let mut t = 0.0_f64;
+    let mut comp_spans = Vec::with_capacity(group.comps.len());
+    let mut comp_times = Vec::with_capacity(group.comps.len());
+    for comp in &group.comps {
+        let ctx = CompContext::new(comp, gpu);
+        let start = t;
+
+        // Launch overhead runs on the compute stream too.
+        let launch = gpu.launch_overhead * noise();
+        comm.advance(t, launch, 1.0);
+        t += launch;
+
+        let mut tbs = comp.threadblocks.max(1);
+        while tbs > 0 {
+            let active = comm.active_res().copied();
+            let capacity =
+                sms_available(gpu, active.map(|r| r.sms).unwrap_or(0)) as u64 * ctx.tb_per_sm as u64;
+            let wave_tbs = tbs.min(capacity);
+            let d = wave_time(&ctx, wave_tbs, gpu, active.as_ref()) * noise();
+
+            // Comm progress rate under this wave's memory pressure.
+            let rate = if comm.done() {
+                1.0
+            } else {
+                let comp_rate = (wave_tbs as f64 * ctx.bytes_per_tb) / d.max(1e-12);
+                1.0 / (1.0 + COMM_SLOWDOWN_GAMMA * (comp_rate / gpu.mem_bw))
+            };
+            comm.advance(t, d, rate);
+            t += d;
+            tbs -= wave_tbs;
+        }
+        comp_spans.push((start, t));
+        comp_times.push(t - start);
+    }
+
+    // Communication tail (communication-bound case): drains uncontended.
+    let comm_end = comm.drain(t);
+    let makespan = t.max(comm_end);
+
+    let comm_spans: Vec<(f64, f64)> = comm.ops.iter().map(|o| o.span).collect();
+    let comm_times = comm_spans.iter().map(|(s, e)| e - s).collect();
+    GroupResult { makespan, comp_times, comm_times, comp_spans, comm_spans }
+}
+
+/// Measured execution of a full iteration schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterResult {
+    /// Total iteration time: Σ group makespans (groups are sync-separated).
+    pub total: f64,
+    pub groups: Vec<GroupResult>,
+}
+
+impl IterResult {
+    /// Flat per-comm times in schedule order.
+    pub fn comm_times_flat(&self) -> Vec<f64> {
+        self.groups.iter().flat_map(|g| g.comm_times.iter().copied()).collect()
+    }
+}
+
+/// Execute a whole iteration: one `configs` entry per comm op, indexed in
+/// the flat schedule order of [`IterationSchedule::comm_indices`].
+pub fn simulate_schedule(
+    schedule: &IterationSchedule,
+    configs: &[CommConfig],
+    env: &mut SimEnv,
+) -> IterResult {
+    assert_eq!(configs.len(), schedule.num_comms(), "one config per comm op");
+    let mut total = 0.0;
+    let mut groups = Vec::with_capacity(schedule.groups.len());
+    let mut cursor = 0;
+    for g in &schedule.groups {
+        let n = g.comms.len();
+        let r = simulate_group(g, &configs[cursor..cursor + n], env);
+        cursor += n;
+        total += r.makespan;
+        groups.push(r);
+    }
+    IterResult { total, groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{nccl_default_config, CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::util::units::{KIB, MIB};
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::cluster_b(1)
+    }
+
+    fn group() -> OverlapGroup {
+        OverlapGroup::with(
+            "g",
+            vec![
+                CompOpDesc::ffn("ffn0", 2048, 2560, 10240, 2),
+                CompOpDesc::ffn("ffn1", 2048, 2560, 10240, 2),
+            ],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        )
+    }
+
+    fn cfg(nc: u32, c: u64) -> CommConfig {
+        CommConfig { nc, nt: 128, chunk: c, ..CommConfig::default_ring() }
+    }
+
+    #[test]
+    fn deterministic_when_noise_zero() {
+        let g = group();
+        let c = [cfg(8, 2 * MIB)];
+        let r1 = simulate_group(&g, &c, &mut SimEnv::deterministic(cluster()));
+        let r2 = simulate_group(&g, &c, &mut SimEnv::deterministic(cluster()));
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn makespan_covers_both_streams() {
+        let g = group();
+        let mut env = SimEnv::deterministic(cluster());
+        let r = simulate_group(&g, &[cfg(8, 2 * MIB)], &mut env);
+        assert!(r.makespan >= r.comp_spans.last().unwrap().1 - 1e-12);
+        assert!(r.makespan >= r.comm_spans.last().unwrap().1 - 1e-12);
+        assert!((r.makespan
+            - r.comp_spans.last().unwrap().1.max(r.comm_spans.last().unwrap().1))
+        .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn comm_spans_serialized_and_ordered() {
+        let mut g = group();
+        g.comms.push(CommOpDesc::new("ar2", CollectiveKind::AllReduce, 16 * MIB, 8));
+        let mut env = SimEnv::deterministic(cluster());
+        let r = simulate_group(&g, &[cfg(8, 2 * MIB), cfg(4, MIB)], &mut env);
+        assert!(r.comm_spans[0].1 <= r.comm_spans[1].0 + 1e-12, "serialized comm stream");
+        assert!(r.comm_spans[0].0 < r.comm_spans[0].1);
+    }
+
+    #[test]
+    fn contention_slows_compute_vs_solo() {
+        // Comm sized to stay active for the whole compute window.
+        let mut g = group();
+        g.comms[0].bytes = 512 * MIB;
+        let solo = OverlapGroup::with("solo", g.comps.clone(), vec![]);
+        let mut env = SimEnv::deterministic(cluster());
+        let r_solo = simulate_group(&solo, &[], &mut env);
+        let r_heavy = simulate_group(&g, &[cfg(48, 8 * MIB)], &mut env);
+        assert!(
+            r_heavy.comp_total() > r_solo.comp_total() * 1.15,
+            "heavy comm should slow compute: {} vs {}",
+            r_heavy.comp_total(),
+            r_solo.comp_total()
+        );
+    }
+
+    #[test]
+    fn overlap_beats_serial_execution() {
+        // Makespan with overlap must be below comp+comm run back-to-back.
+        let g = group();
+        let mut env = SimEnv::deterministic(cluster());
+        let r = simulate_group(&g, &[cfg(2, 256 * KIB)], &mut env);
+        let solo_comp = simulate_group(
+            &OverlapGroup::with("c", g.comps.clone(), vec![]),
+            &[],
+            &mut env,
+        )
+        .comp_total();
+        let solo_comm = simulate_group(
+            &OverlapGroup::with("m", vec![], g.comms.clone()),
+            &[cfg(2, 256 * KIB)],
+            &mut env,
+        )
+        .comm_total();
+        assert!(r.makespan < solo_comp + solo_comm);
+        assert!(r.makespan >= solo_comp.max(solo_comm) * 0.99);
+    }
+
+    #[test]
+    fn comm_only_group_runs_uncontended() {
+        let g = OverlapGroup::with(
+            "m",
+            vec![],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        let mut env = SimEnv::deterministic(cluster());
+        let c = nccl_default_config(&g.comms[0], &env.cluster.topology);
+        let r = simulate_group(&g, &[c], &mut env);
+        let expect = comm_time(&g.comms[0], &c, &env.cluster.topology, env.cluster.gpu());
+        assert!((r.makespan - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn noise_perturbs_but_stays_close() {
+        let g = group();
+        let c = [cfg(8, 2 * MIB)];
+        let det = simulate_group(&g, &c, &mut SimEnv::deterministic(cluster())).makespan;
+        let mut env = SimEnv::new(cluster(), 7);
+        let runs: Vec<f64> =
+            (0..32).map(|_| simulate_group(&g, &c, &mut env).makespan).collect();
+        let mean = runs.iter().sum::<f64>() / runs.len() as f64;
+        assert!((mean - det).abs() / det < 0.03, "mean {mean} det {det}");
+        assert!(runs.iter().any(|&r| (r - det).abs() > 1e-9), "noise present");
+    }
+
+    #[test]
+    fn schedule_totals_sum_group_makespans() {
+        let mut s = IterationSchedule::new("it");
+        s.push(group());
+        s.push(group());
+        let mut env = SimEnv::deterministic(cluster());
+        let cfgs = vec![cfg(8, 2 * MIB); 2];
+        let r = simulate_schedule(&s, &cfgs, &mut env);
+        let sum: f64 = r.groups.iter().map(|g| g.makespan).sum();
+        assert!((r.total - sum).abs() < 1e-12);
+        assert_eq!(r.comm_times_flat().len(), 2);
+    }
+
+    #[test]
+    fn lighter_config_can_beat_heavy_in_comp_bound_group() {
+        // The paper's core claim: in a computation-bound overlap, a small
+        // (NC, C) beats NCCL-ish heavy configs on makespan.
+        let g = group();
+        let mut env = SimEnv::deterministic(cluster());
+        let heavy = simulate_group(&g, &[cfg(32, 8 * MIB)], &mut env);
+        let light = simulate_group(&g, &[cfg(2, 684 * KIB)], &mut env);
+        assert!(
+            light.makespan < heavy.makespan,
+            "light {} heavy {}",
+            light.makespan,
+            heavy.makespan
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event GPU-cluster simulator — the testbed stand-in.
+//!
+//! This is the **ground truth** tuners measure against (via
+//! [`crate::profiler`]), playing the role of the paper's A40 clusters. It
+//! executes an [`crate::graph::OverlapGroup`] wave-by-wave: computation
+//! waves are the pacing unit on the compute stream; the serialized comm
+//! stream progresses concurrently, contending per §3.2 (SM occupancy via
+//! the wave capacity, bandwidth/L2 via the per-wave transfer term), with
+//! multiplicative measurement noise so tuners face realistic feedback.
+//!
+//! Tuners must never read simulator internals — only the measured times a
+//! real profiler would report.
+
+pub mod engine;
+pub mod trace;
+
+pub use engine::{simulate_group, simulate_schedule, GroupResult, IterResult, SimEnv};
+pub use trace::TraceBuilder;

@@ -1,0 +1,119 @@
+//! Chrome-trace (chrome://tracing / Perfetto) export of simulated timelines.
+
+use super::engine::{GroupResult, IterResult};
+use crate::graph::IterationSchedule;
+use crate::util::json::Json;
+
+/// Builds a chrome trace from simulated results: compute stream on tid 0,
+/// comm stream on tid 1, one process per rank (we emit rank 0's symmetric
+/// timeline).
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    events: Vec<Json>,
+    /// Wall-clock offset of the next group (groups are sync-separated).
+    offset: f64,
+}
+
+const TID_COMPUTE: f64 = 0.0;
+const TID_COMM: f64 = 1.0;
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn event(&mut self, name: &str, cat: &str, tid: f64, start: f64, dur: f64) {
+        self.events.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num((self.offset + start) * 1e6)),
+            ("dur", Json::num(dur * 1e6)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid)),
+        ]));
+    }
+
+    /// Append one simulated group. `names` come from the schedule ops.
+    pub fn push_group(
+        &mut self,
+        comp_names: &[String],
+        comm_names: &[String],
+        r: &GroupResult,
+    ) {
+        for (i, (s, e)) in r.comp_spans.iter().enumerate() {
+            let name = comp_names.get(i).map(|s| s.as_str()).unwrap_or("comp");
+            self.event(name, "compute", TID_COMPUTE, *s, e - s);
+        }
+        for (i, (s, e)) in r.comm_spans.iter().enumerate() {
+            let name = comm_names.get(i).map(|s| s.as_str()).unwrap_or("comm");
+            self.event(name, "comm", TID_COMM, *s, e - s);
+        }
+        self.offset += r.makespan;
+    }
+
+    /// Append a whole iteration result aligned with its schedule.
+    pub fn push_iter(&mut self, schedule: &IterationSchedule, r: &IterResult) {
+        for (g, gr) in schedule.groups.iter().zip(&r.groups) {
+            let comp_names: Vec<String> = g.comps.iter().map(|c| c.name.clone()).collect();
+            let comm_names: Vec<String> = g.comms.iter().map(|c| c.name.clone()).collect();
+            self.push_group(&comp_names, &comm_names, gr);
+        }
+    }
+
+    /// Final JSON document (chrome trace "traceEvents" format).
+    pub fn finish(self) -> Json {
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(self.events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommConfig, CommOpDesc};
+    use crate::graph::{CompOpDesc, OverlapGroup};
+    use crate::hw::ClusterSpec;
+    use crate::sim::engine::{simulate_group, SimEnv};
+
+    #[test]
+    fn trace_round_trips_as_json() {
+        let g = OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::matmul("mm", 1024, 1024, 1024, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 1 << 24, 8)],
+        );
+        let mut env = SimEnv::deterministic(ClusterSpec::cluster_b(1));
+        let r = simulate_group(&g, &[CommConfig::default_ring()], &mut env);
+        let mut tb = TraceBuilder::new();
+        tb.push_group(&["mm".into()], &["ar".into()], &r);
+        let doc = tb.finish();
+        let text = doc.to_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+        assert!(events[0].get("dur").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn groups_offset_sequentially() {
+        let g = OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::matmul("mm", 1024, 1024, 1024, 2)],
+            vec![],
+        );
+        let mut env = SimEnv::deterministic(ClusterSpec::cluster_b(1));
+        let r = simulate_group(&g, &[], &mut env);
+        let mut tb = TraceBuilder::new();
+        tb.push_group(&["mm".into()], &[], &r);
+        tb.push_group(&["mm".into()], &[], &r);
+        let doc = tb.finish();
+        let ev = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let ts0 = ev[0].get("ts").unwrap().as_f64().unwrap();
+        let ts1 = ev[1].get("ts").unwrap().as_f64().unwrap();
+        assert!(ts1 > ts0, "second group offset after first");
+    }
+}

@@ -1,0 +1,185 @@
+//! In-repo property-based testing mini-framework (the `proptest` crate is
+//! not in the offline set).
+//!
+//! Provides seeded generators over a [`Prng`], a `for_all` runner that
+//! reports the failing case and its seed, and simple input shrinking for
+//! `Vec`-shaped inputs. Used by `rust/tests/proptests.rs` and
+//! `coordinator_invariants.rs`.
+
+use crate::util::prng::Prng;
+
+/// Number of cases per property (override with `LAGOM_PROPTEST_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("LAGOM_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator of random values of `T`.
+pub struct Gen<'a, T> {
+    f: Box<dyn Fn(&mut Prng) -> T + 'a>,
+}
+
+impl<'a, T: 'a> Gen<'a, T> {
+    pub fn new(f: impl Fn(&mut Prng) -> T + 'a) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Prng) -> T {
+        (self.f)(rng)
+    }
+
+    pub fn map<U: 'a>(self, g: impl Fn(T) -> U + 'a) -> Gen<'a, U> {
+        Gen::new(move |rng| g(self.sample(rng)))
+    }
+}
+
+/// Uniform u64 in `[lo, hi]`.
+pub fn range_u64<'a>(lo: u64, hi: u64) -> Gen<'a, u64> {
+    assert!(lo <= hi);
+    Gen::new(move |rng| lo + rng.next_below(hi - lo + 1))
+}
+
+/// Uniform u32 in `[lo, hi]`.
+pub fn range_u32<'a>(lo: u32, hi: u32) -> Gen<'a, u32> {
+    range_u64(lo as u64, hi as u64).map(|v| v as u32)
+}
+
+/// Uniform f64 in `[lo, hi)`.
+pub fn range_f64<'a>(lo: f64, hi: f64) -> Gen<'a, f64> {
+    Gen::new(move |rng| rng.uniform(lo, hi))
+}
+
+/// One of the given values.
+pub fn one_of<'a, T: Clone + 'a>(items: Vec<T>) -> Gen<'a, T> {
+    assert!(!items.is_empty());
+    Gen::new(move |rng| items[rng.next_below(items.len() as u64) as usize].clone())
+}
+
+/// Vec of `n_lo..=n_hi` elements from `item`.
+pub fn vec_of<'a, T: 'a>(item: Gen<'a, T>, n_lo: usize, n_hi: usize) -> Gen<'a, Vec<T>> {
+    Gen::new(move |rng| {
+        let n = n_lo + rng.next_below((n_hi - n_lo + 1) as u64) as usize;
+        (0..n).map(|_| item.sample(rng)).collect()
+    })
+}
+
+/// Outcome of a property check.
+pub enum Check {
+    Pass,
+    Fail(String),
+}
+
+impl Check {
+    pub fn from_bool(ok: bool, msg: &str) -> Check {
+        if ok {
+            Check::Pass
+        } else {
+            Check::Fail(msg.to_string())
+        }
+    }
+}
+
+/// Run `prop` on `cases` random inputs from `gen`; panic with the seed and
+/// a debug dump of the failing input on the first failure.
+pub fn for_all<T: std::fmt::Debug>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: u32,
+    prop: impl Fn(&T) -> Check,
+) {
+    // Fixed base seed for reproducibility; vary per case.
+    let base = 0x9e3779b97f4a7c15u64 ^ (name.len() as u64).rotate_left(17);
+    for case in 0..cases {
+        let mut rng = Prng::new(base.wrapping_add(case as u64));
+        let input = gen.sample(&mut rng);
+        if let Check::Fail(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {}):\n  input: {input:?}\n  {msg}",
+                base.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Shrinking helper for vec-shaped inputs: repeatedly try removing halves
+/// then single elements while the property still fails, returning a
+/// minimal failing input.
+pub fn shrink_vec<T: Clone + std::fmt::Debug>(
+    mut input: Vec<T>,
+    fails: impl Fn(&[T]) -> bool,
+) -> Vec<T> {
+    debug_assert!(fails(&input), "shrink_vec needs a failing input");
+    loop {
+        let mut shrunk = false;
+        // Try halves.
+        if input.len() >= 2 {
+            let mid = input.len() / 2;
+            for cand in [input[..mid].to_vec(), input[mid..].to_vec()] {
+                if fails(&cand) {
+                    input = cand;
+                    shrunk = true;
+                    break;
+                }
+            }
+        }
+        if shrunk {
+            continue;
+        }
+        // Try dropping single elements.
+        for i in 0..input.len() {
+            let mut cand = input.clone();
+            cand.remove(i);
+            if !cand.is_empty() && fails(&cand) {
+                input = cand;
+                shrunk = true;
+                break;
+            }
+        }
+        if !shrunk {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_passes_trivial_property() {
+        let g = range_u64(1, 100);
+        for_all("nonzero", &g, 64, |&x| Check::from_bool(x >= 1, "x >= 1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn for_all_reports_failures() {
+        let g = range_u64(0, 10);
+        for_all("always_fails", &g, 8, |_| Check::Fail("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Prng::new(1);
+        let g = range_u32(5, 9);
+        for _ in 0..1000 {
+            let v = g.sample(&mut rng);
+            assert!((5..=9).contains(&v));
+        }
+        let vg = vec_of(range_u64(0, 1), 2, 5);
+        for _ in 0..100 {
+            let v = vg.sample(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn shrink_finds_minimal_failure() {
+        // Property fails iff the vec contains a 7.
+        let fails = |xs: &[u64]| xs.contains(&7);
+        let shrunk = shrink_vec(vec![1, 2, 7, 9, 7, 3], fails);
+        assert_eq!(shrunk, vec![7]);
+    }
+}

@@ -1,0 +1,241 @@
+//! End-to-end trainer: drives the AOT-compiled JAX/Pallas train step from
+//! Rust on synthetic data while the coordinator co-tunes the (simulated)
+//! communication of the model's FSDP schedule.
+//!
+//! The compute is real — the L2 JAX graph (calling the L1 Pallas fused-FFN
+//! kernel) lowered to HLO text and executed on PJRT-CPU. The artifact
+//! interface is intentionally narrow:
+//!
+//! * `train_init.hlo.txt`: `(seed f32[]) -> (theta f32[P], m f32[P], v f32[P])`
+//! * `train_step.hlo.txt`: `(theta, m, v, step f32[], tokens i32[B,S],
+//!   targets i32[B,S]) -> (theta', m', v', loss f32[])`
+//! * `train_step.meta.json`: shapes + model dims (written by aot.py).
+//!
+//! Parameters travel as one flat `f32[P]` vector; packing order is owned by
+//! `python/compile/model.py`.
+
+use crate::runtime::{literal_f32, literal_i32, Runtime};
+use crate::util::json::Json;
+use crate::util::prng::Prng;
+use anyhow::{Context, Result};
+
+/// Artifact metadata written by `python/compile/aot.py`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainMeta {
+    pub param_count: u64,
+    pub vocab: u32,
+    pub seq: u32,
+    pub batch: u32,
+    pub d_model: u32,
+    pub layers: u32,
+}
+
+impl TrainMeta {
+    pub fn from_json(j: &Json) -> Result<TrainMeta> {
+        let get = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .with_context(|| format!("meta missing field {k}"))
+        };
+        Ok(TrainMeta {
+            param_count: get("param_count")?,
+            vocab: get("vocab")? as u32,
+            seq: get("seq")? as u32,
+            batch: get("batch")? as u32,
+            d_model: get("d_model")? as u32,
+            layers: get("layers")? as u32,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TrainMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading train meta {path:?}"))?;
+        Self::from_json(&Json::parse(&text).map_err(anyhow::Error::new)?)
+    }
+}
+
+/// Synthetic corpus: a noisy affine token chain — deterministic structure a
+/// small model can learn (loss falls well below uniform entropy) with
+/// enough noise that it cannot memorize instantly.
+pub struct SyntheticData {
+    vocab: u32,
+    prng: Prng,
+    state: u32,
+}
+
+impl SyntheticData {
+    pub fn new(vocab: u32, seed: u64) -> SyntheticData {
+        SyntheticData { vocab, prng: Prng::new(seed), state: seed as u32 % vocab }
+    }
+
+    fn next_token(&mut self) -> u32 {
+        // 90% follow the chain, 10% jump uniformly.
+        self.state = if self.prng.next_f64() < 0.9 {
+            (self.state.wrapping_mul(5).wrapping_add(7)) % self.vocab
+        } else {
+            self.prng.next_below(self.vocab as u64) as u32
+        };
+        self.state
+    }
+
+    /// One batch of (tokens, next-token targets), flattened row-major.
+    pub fn batch(&mut self, batch: u32, seq: u32) -> (Vec<i32>, Vec<i32>) {
+        let n = (batch * seq) as usize;
+        let mut toks = Vec::with_capacity(n);
+        let mut tgts = Vec::with_capacity(n);
+        for _ in 0..batch {
+            let mut cur = self.next_token();
+            for _ in 0..seq {
+                let nxt = self.next_token();
+                toks.push(cur as i32);
+                tgts.push(nxt as i32);
+                cur = nxt;
+            }
+        }
+        (toks, tgts)
+    }
+}
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u32,
+    pub loss: f32,
+    pub wall_secs: f64,
+}
+
+/// The trainer: owns the runtime, the optimizer state literals and the
+/// data stream.
+pub struct Trainer {
+    pub meta: TrainMeta,
+    rt: Runtime,
+    data: SyntheticData,
+    theta: xla::Literal,
+    m: xla::Literal,
+    v: xla::Literal,
+    step: u32,
+    pub history: Vec<StepRecord>,
+}
+
+impl Trainer {
+    /// Load artifacts and initialize parameters via `train_init`.
+    pub fn new(mut rt: Runtime, seed: u64) -> Result<Trainer> {
+        let meta_path = rt.artifact_path("train_step").with_extension("").with_extension("meta.json");
+        // artifact_path gives "<dir>/train_step.hlo.txt"; meta sits next to it.
+        let meta_path = meta_path
+            .parent()
+            .unwrap()
+            .join("train_step.meta.json");
+        let meta = TrainMeta::load(&meta_path)?;
+        let init = rt.load("train_init")?;
+        let seed_lit = literal_f32(&[seed as f32], &[])?;
+        let mut out = init.run(&[seed_lit])?;
+        anyhow::ensure!(out.len() == 3, "train_init must return (theta, m, v)");
+        let v = out.pop().unwrap();
+        let m = out.pop().unwrap();
+        let theta = out.pop().unwrap();
+        anyhow::ensure!(
+            theta.element_count() as u64 == meta.param_count,
+            "theta size {} != meta.param_count {}",
+            theta.element_count(),
+            meta.param_count
+        );
+        rt.load("train_step")?; // compile now, fail fast
+        let data = SyntheticData::new(meta.vocab, seed ^ 0xdada);
+        Ok(Trainer { meta, rt, data, theta, m, v, step: 0, history: Vec::new() })
+    }
+
+    /// Execute one optimizer step on a fresh synthetic batch.
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let (toks, tgts) = self.data.batch(self.meta.batch, self.meta.seq);
+        let b = self.meta.batch as i64;
+        let s = self.meta.seq as i64;
+        let tokens = literal_i32(&toks, &[b, s])?;
+        let targets = literal_i32(&tgts, &[b, s])?;
+        let step_lit = literal_f32(&[self.step as f32], &[])?;
+
+        let t0 = std::time::Instant::now();
+        // Move the state into the call (PJRT copies internally; we re-own
+        // the returned literals).
+        let theta = std::mem::replace(&mut self.theta, xla::Literal::vec1::<f32>(&[]));
+        let m = std::mem::replace(&mut self.m, xla::Literal::vec1::<f32>(&[]));
+        let v = std::mem::replace(&mut self.v, xla::Literal::vec1::<f32>(&[]));
+        let exe = self.rt.load("train_step")?;
+        let mut out = exe.run(&[theta, m, v, step_lit, tokens, targets])?;
+        anyhow::ensure!(out.len() == 4, "train_step must return (theta', m', v', loss)");
+        let loss_lit = out.pop().unwrap();
+        self.v = out.pop().unwrap();
+        self.m = out.pop().unwrap();
+        self.theta = out.pop().unwrap();
+        let loss: f32 = loss_lit.to_vec::<f32>()?[0];
+        let rec = StepRecord { step: self.step, loss, wall_secs: t0.elapsed().as_secs_f64() };
+        self.step += 1;
+        self.history.push(rec);
+        Ok(rec)
+    }
+
+    /// Train `steps` steps, invoking `on_step` after each.
+    pub fn run(&mut self, steps: u32, mut on_step: impl FnMut(&StepRecord)) -> Result<()> {
+        for _ in 0..steps {
+            let rec = self.step()?;
+            on_step(&rec);
+        }
+        Ok(())
+    }
+
+    /// Mean loss over the first/last `k` recorded steps — the convergence
+    /// check examples assert on.
+    pub fn loss_drop(&self, k: usize) -> Option<(f32, f32)> {
+        if self.history.len() < 2 * k {
+            return None;
+        }
+        let first: f32 =
+            self.history[..k].iter().map(|r| r.loss).sum::<f32>() / k as f32;
+        let last: f32 = self.history[self.history.len() - k..]
+            .iter()
+            .map(|r| r.loss)
+            .sum::<f32>()
+            / k as f32;
+        Some((first, last))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_data_in_vocab_and_learnable() {
+        let mut d = SyntheticData::new(64, 7);
+        let (toks, tgts) = d.batch(4, 32);
+        assert_eq!(toks.len(), 128);
+        assert!(toks.iter().all(|&t| (0..64).contains(&t)));
+        // ≥80% of transitions follow the affine chain (structure present).
+        let chain = toks
+            .iter()
+            .zip(&tgts)
+            .filter(|&(&t, &n)| (t as u32).wrapping_mul(5).wrapping_add(7) % 64 == n as u32)
+            .count();
+        assert!(chain * 10 >= toks.len() * 8, "chain {}/{}", chain, toks.len());
+    }
+
+    #[test]
+    fn meta_parses() {
+        let j = Json::parse(
+            r#"{"param_count": 1000, "vocab": 256, "seq": 32, "batch": 2, "d_model": 64, "layers": 2}"#,
+        )
+        .unwrap();
+        let m = TrainMeta::from_json(&j).unwrap();
+        assert_eq!(m.param_count, 1000);
+        assert_eq!(m.vocab, 256);
+    }
+
+    #[test]
+    fn meta_missing_field_is_error() {
+        let j = Json::parse(r#"{"param_count": 1000}"#).unwrap();
+        assert!(TrainMeta::from_json(&j).is_err());
+    }
+
+    // Full Trainer round-trips are exercised by rust/tests/integration.rs
+    // once `make artifacts` has produced the HLO files.
+}

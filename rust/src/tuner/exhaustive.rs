@@ -1,0 +1,167 @@
+//! Exhaustive joint grid search — the ground-truth optimum for small
+//! overlap groups. Cost is `grid^N`, demonstrating exactly the exponential
+//! blow-up of §2.3 (the `ablation_complexity` bench plots it against
+//! Lagom's linear cost); only usable for N ≤ 2-3 comms on coarse grids.
+
+use super::{select_subspace, tune_groupwise, TuneResult, Tuner};
+use crate::comm::{CommConfig, ParamSpace};
+use crate::graph::IterationSchedule;
+use crate::hw::ClusterSpec;
+use crate::profiler::ProfileBackend;
+use crate::util::units::KIB;
+
+pub struct ExhaustiveTuner {
+    pub cluster: ClusterSpec,
+    pub space: ParamSpace,
+    /// NC grid points.
+    pub nc_grid: Vec<u32>,
+    /// Chunk grid points.
+    pub c_grid: Vec<u64>,
+    /// Refuse groups with more comms than this (grid^N explodes).
+    pub max_comms: usize,
+}
+
+impl ExhaustiveTuner {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        ExhaustiveTuner {
+            cluster,
+            space: ParamSpace::default(),
+            nc_grid: vec![1, 2, 4, 8, 16, 32, 61],
+            c_grid: vec![64 * KIB, 256 * KIB, 1024 * KIB, 4096 * KIB],
+            max_comms: 2,
+        }
+    }
+
+    /// The per-comm grid (NC × C at fixed NT).
+    pub fn grid_size(&self) -> usize {
+        self.nc_grid.len() * self.c_grid.len()
+    }
+}
+
+impl Tuner for ExhaustiveTuner {
+    fn name(&self) -> String {
+        "Exhaustive".into()
+    }
+
+    fn tune_schedule(
+        &mut self,
+        schedule: &IterationSchedule,
+        backend: &mut dyn ProfileBackend,
+    ) -> TuneResult {
+        let cluster = self.cluster.clone();
+        let space = self.space.clone();
+        let nc_grid = self.nc_grid.clone();
+        let c_grid = self.c_grid.clone();
+        let max_comms = self.max_comms;
+        tune_groupwise(schedule, backend, |g, backend| {
+            let n = g.comms.len();
+            assert!(
+                n <= max_comms,
+                "exhaustive search over {n} comms is intractable (grid^{n})"
+            );
+            // Subspaces first (same stage as the other tuners).
+            let mut base = vec![CommConfig::default_ring(); n];
+            for (j, op) in g.comms.iter().enumerate() {
+                if cluster.topology.spans_nodes(op.base_rank, op.world) {
+                    base[j].transport = crate::comm::Transport::Net;
+                }
+            }
+            let mut subs = Vec::with_capacity(n);
+            for j in 0..n {
+                subs.push(select_subspace(&g.comms[j], g, j, &cluster, &space, backend, &base));
+            }
+            // Joint cartesian product over the resource grid.
+            let per_comm: Vec<Vec<CommConfig>> = (0..n)
+                .map(|j| {
+                    let (a, p, t) = subs[j];
+                    let mut v = Vec::new();
+                    for &nc in &nc_grid {
+                        for &c in &c_grid {
+                            v.push(CommConfig { algo: a, proto: p, transport: t, nc, nt: 256, chunk: c });
+                        }
+                    }
+                    v
+                })
+                .collect();
+            let mut idx = vec![0usize; n];
+            let mut best: Option<(f64, Vec<CommConfig>)> = None;
+            let mut iterations = 0u64;
+            let mut trajectory = Vec::new();
+            loop {
+                let cfgs: Vec<CommConfig> = (0..n).map(|j| per_comm[j][idx[j]]).collect();
+                let m = backend.profile_group(g, &cfgs);
+                iterations += 1;
+                let better = best.as_ref().map(|(z, _)| m.makespan < *z).unwrap_or(true);
+                if better {
+                    best = Some((m.makespan, cfgs));
+                }
+                trajectory.push((iterations, best.as_ref().unwrap().0));
+                // Odometer increment.
+                let mut k = 0;
+                loop {
+                    if k == n {
+                        let (_, cfgs) = best.unwrap();
+                        return (cfgs, iterations, trajectory);
+                    }
+                    idx[k] += 1;
+                    if idx[k] < per_comm[k].len() {
+                        break;
+                    }
+                    idx[k] = 0;
+                    k += 1;
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+    use crate::profiler::SimProfiler;
+    use crate::sim::SimEnv;
+
+    #[test]
+    fn cost_is_grid_to_the_n() {
+        let s = schedule_of(vec![fig5_group()]);
+        // Deterministic sim for an exact count.
+        let mut p = SimProfiler::with_reps(
+            SimEnv::deterministic(ClusterSpec::cluster_b(1)),
+            1,
+        );
+        let mut t = ExhaustiveTuner::new(ClusterSpec::cluster_b(1));
+        let r = t.tune_schedule(&s, &mut p);
+        let g = t.grid_size() as u64;
+        assert_eq!(r.iterations, g * g, "joint grid for 2 comms");
+    }
+
+    #[test]
+    fn lagom_close_to_exhaustive_optimum() {
+        // Acceptance: Lagom within 10% of the joint-grid optimum on the
+        // 2-comm Fig 5 workload, at a fraction of the cost.
+        use crate::tuner::LagomTuner;
+        let s = schedule_of(vec![fig5_group()]);
+        let cl = ClusterSpec::cluster_b(1);
+        let mut pe = SimProfiler::with_reps(SimEnv::deterministic(cl.clone()), 1);
+        let re = ExhaustiveTuner::new(cl.clone()).tune_schedule(&s, &mut pe);
+        let mut pl = SimProfiler::with_reps(SimEnv::deterministic(cl.clone()), 1);
+        let rl = LagomTuner::new(cl.clone()).tune_schedule(&s, &mut pl);
+
+        let mut eval = SimProfiler::with_reps(SimEnv::deterministic(cl), 1);
+        let ze = eval.profile_group(&s.groups[0], &re.configs).makespan;
+        let zl = eval.profile_group(&s.groups[0], &rl.configs).makespan;
+        assert!(zl <= ze * 1.10, "lagom {zl} vs exhaustive {ze}");
+        assert!(rl.iterations * 4 < re.iterations, "and much cheaper");
+    }
+
+    #[test]
+    #[should_panic(expected = "intractable")]
+    fn refuses_large_groups() {
+        let mut g = fig5_group();
+        g.comms.push(g.comms[0].clone());
+        let s = schedule_of(vec![g]);
+        let mut p = profiler(91);
+        ExhaustiveTuner::new(ClusterSpec::cluster_b(1)).tune_schedule(&s, &mut p);
+    }
+}

@@ -1,0 +1,387 @@
+//! The Lagom tuner — Algorithms 1 & 2 and the priority metric H (§3.3–3.4).
+//!
+//! Per overlap group:
+//! 1. Divide-and-conquer subspace selection per comm (inherited from
+//!    AutoCCL, §3.2).
+//! 2. All comms start at **minimal** resources (Alg 2 lines 1–3), with
+//!    priority `H = 0.01` (Alg 1 line 2).
+//! 3. Repeat: pick the unfinished comm with the smallest H (line 4) —
+//!    the one whose last escalation bought the most communication time per
+//!    unit of added computation time — and escalate its (NC, NT, C) by the
+//!    relative-improvement learning rate (Alg 2 lines 8–11). A comm is done
+//!    when escalation stops helping it (`x' − x > 0`) or when communication
+//!    is no longer the bottleneck (`X' < Y'`).
+//!
+//! Each escalation costs exactly one profile, so the loop is **linear** in
+//! the number of communications × ladder depth instead of exponential in
+//! the joint space (§3.1, Fig 8c).
+
+use super::{select_subspace, TuneResult, Tuner};
+use crate::comm::{CommConfig, ParamSpace};
+use crate::graph::{IterationSchedule, OverlapGroup};
+use crate::hw::ClusterSpec;
+use crate::profiler::ProfileBackend;
+use crate::util::prng::Prng;
+
+/// Which communication to escalate next — metric H (the paper) or the
+/// ablation orderings of `ablation_priority`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// argmin H — the paper's cost-effectiveness rule (Alg 1 line 4).
+    MinH,
+    /// Finish comms one at a time in schedule order (the "naive strategy"
+    /// §3.3 argues against).
+    Sequential,
+    /// Uniformly random unfinished comm.
+    Random,
+}
+
+/// Lagom (Algorithm 1 + Algorithm 2).
+pub struct LagomTuner {
+    pub cluster: ClusterSpec,
+    pub space: ParamSpace,
+    pub priority: Priority,
+    /// Safety cap on escalations per comm (the ladders are finite anyway).
+    pub max_steps_per_comm: u64,
+    /// Initial learning rate before the first measured improvement.
+    pub initial_lr: f64,
+    /// Alg 2's adaptive `lr = (x − x')/x'` escalation; `false` keeps the
+    /// learning rate fixed at `initial_lr` (the `ablation_lr` baseline).
+    pub adaptive_lr: bool,
+    prng: Prng,
+}
+
+impl LagomTuner {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        LagomTuner {
+            cluster,
+            space: ParamSpace::default(),
+            priority: Priority::MinH,
+            max_steps_per_comm: 48,
+            initial_lr: 0.5,
+            adaptive_lr: true,
+            prng: Prng::new(0x1a90),
+        }
+    }
+
+    pub fn with_priority(cluster: ClusterSpec, priority: Priority) -> Self {
+        LagomTuner { priority, ..Self::new(cluster) }
+    }
+
+    /// Tune one overlap group; returns (configs, iterations, trajectory).
+    fn tune_group(
+        &mut self,
+        group: &OverlapGroup,
+        backend: &mut dyn ProfileBackend,
+    ) -> (Vec<CommConfig>, u64, Vec<(u64, f64)>) {
+        let n = group.comms.len();
+
+        // Stage 1: implementation-related subspace per comm (divide & conquer).
+        let mut base = vec![CommConfig::default_ring(); n];
+        for (j, op) in group.comms.iter().enumerate() {
+            let spans = self.cluster.topology.spans_nodes(op.base_rank, op.world);
+            if spans {
+                // default_ring's P2P transport is invalid across nodes; probe
+                // from a valid starting point.
+                base[j].transport = crate::comm::Transport::Net;
+            }
+        }
+        let mut subspaces = Vec::with_capacity(n);
+        for (j, op) in group.comms.iter().enumerate() {
+            let sub = select_subspace(op, group, j, &self.cluster, &self.space, backend, &base);
+            subspaces.push(sub);
+        }
+
+        // Stage 2: Alg 1 state — minimal configs, H = 0.01.
+        let mut cur: Vec<CommConfig> = subspaces
+            .iter()
+            .map(|&(a, p, t)| self.space.minimal(a, p, t))
+            .collect();
+        let mut done = vec![false; n];
+        let mut h = vec![0.01_f64; n];
+        let mut lr = vec![self.initial_lr; n];
+        let mut steps = vec![0u64; n];
+        // Consecutive weak/negative improvements (noise robustness): a
+        // single noisy sample must not freeze a comm at an undersized
+        // config, but persistent non-improvement must.
+        let mut weak = vec![0u32; n];
+        const WEAK_LIMIT: u32 = 2;
+        const REL_TOL: f64 = 0.02;
+
+        // Baseline measurement at all-minimal.
+        let m0 = backend.profile_group(group, &cur);
+        let mut y = m0.comp_total;
+        let mut xs = m0.comm_times.clone();
+        let mut best_z = m0.makespan;
+        let mut iterations = 1u64;
+        let mut trajectory = vec![(iterations, best_z)];
+
+        // §3.4 condition (1): minimal resources already suffice.
+        if m0.comm_total < m0.comp_total {
+            done.iter_mut().for_each(|d| *d = true);
+        }
+
+        while done.iter().any(|d| !d) {
+            // Alg 1 line 4: pick the next communication.
+            let j = match self.priority {
+                Priority::MinH => (0..n)
+                    .filter(|&j| !done[j])
+                    .min_by(|&a, &b| h[a].partial_cmp(&h[b]).unwrap())
+                    .unwrap(),
+                Priority::Sequential => (0..n).find(|&j| !done[j]).unwrap(),
+                Priority::Random => {
+                    let open: Vec<usize> = (0..n).filter(|&j| !done[j]).collect();
+                    *self.prng.choice(&open)
+                }
+            };
+
+            steps[j] += 1;
+            if steps[j] > self.max_steps_per_comm || self.space.is_max(&cur[j]) {
+                done[j] = true;
+                continue;
+            }
+
+            // Alg 2: escalate and profile the candidate.
+            let cand = self.space.escalate(cur[j], lr[j]);
+            let mut trial = cur.clone();
+            trial[j] = cand;
+            let m = backend.profile_group(group, &trial);
+            iterations += 1;
+
+            let x_new = m.comm_times[j];
+            let dx = xs[j] - x_new; // > 0 ⇒ communication improved
+            // Alg 2 line 5, first condition (`x' − x > 0`), applied with a
+            // noise tolerance: one below-tolerance sample is a strike (could
+            // be measurement noise), persistent strikes finish the comm.
+            if dx <= REL_TOL * xs[j] {
+                weak[j] += 1;
+                if dx <= 0.0 {
+                    // Got worse: revert the trial (keep best-known config).
+                    if weak[j] >= WEAK_LIMIT {
+                        done[j] = true;
+                    }
+                    trajectory.push((iterations, best_z));
+                    continue;
+                }
+                if weak[j] >= WEAK_LIMIT {
+                    done[j] = true;
+                }
+                // Tiny improvement: fall through and accept it.
+            } else {
+                weak[j] = 0;
+            }
+
+            // Accept the escalation.
+            if self.adaptive_lr {
+                lr[j] = (dx / x_new.max(1e-12)).clamp(0.15, 1.0);
+            }
+            // Metric H (Eq. 7): added computation cost per unit of
+            // communication improvement.
+            h[j] = (m.comp_total - y) / dx;
+            cur[j] = cand;
+            xs[j] = x_new;
+            y = m.comp_total;
+            if m.makespan < best_z {
+                best_z = m.makespan;
+            }
+            trajectory.push((iterations, best_z));
+
+            // Alg 2 line 5, second condition: communication is no longer
+            // the bottleneck.
+            if m.comm_total < m.comp_total {
+                done[j] = true;
+            }
+        }
+
+        (cur, iterations, trajectory)
+    }
+}
+
+impl Tuner for LagomTuner {
+    fn name(&self) -> String {
+        match self.priority {
+            Priority::MinH => "Lagom".into(),
+            Priority::Sequential => "Lagom-seq".into(),
+            Priority::Random => "Lagom-rand".into(),
+        }
+    }
+
+    fn tune_schedule(
+        &mut self,
+        schedule: &IterationSchedule,
+        backend: &mut dyn ProfileBackend,
+    ) -> TuneResult {
+        // Group-level caching: identical overlap groups (same layer shape
+        // repeated L times) reuse the tuned configs — this is what makes
+        // Lagom practical on a 32-layer schedule, and mirrors the paper's
+        // per-pattern tuning (Fig 8 tunes *patterns*, not layer instances).
+        let mut cache: Vec<(GroupKey, Vec<CommConfig>)> = Vec::new();
+        let mut configs = Vec::with_capacity(schedule.num_comms());
+        let mut iterations = 0u64;
+        let start_calls = backend.calls();
+        let mut trajectory = Vec::new();
+        for g in &schedule.groups {
+            if g.comms.is_empty() {
+                continue;
+            }
+            let key = GroupKey::of(g);
+            if let Some((_, cfgs)) = cache.iter().find(|(k, _)| *k == key) {
+                configs.extend(cfgs.iter().copied());
+                continue;
+            }
+            let (cfgs, iters, mut traj) = self.tune_group(g, backend);
+            for (it, z) in traj.drain(..) {
+                trajectory.push((iterations + it, z));
+            }
+            iterations += iters;
+            cache.push((key, cfgs.clone()));
+            configs.extend(cfgs);
+        }
+        TuneResult {
+            configs,
+            iterations,
+            profile_calls: backend.calls() - start_calls,
+            trajectory,
+        }
+    }
+}
+
+/// Structural fingerprint of an overlap group for config reuse.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct GroupKey {
+    comps: Vec<(u64, u64)>,
+    comms: Vec<(crate::comm::CollectiveKind, u64, u32)>,
+}
+
+impl GroupKey {
+    pub(crate) fn of(g: &OverlapGroup) -> GroupKey {
+        GroupKey {
+            comps: g.comps.iter().map(|c| (c.flops as u64, c.threadblocks)).collect(),
+            comms: g.comms.iter().map(|c| (c.kind, c.bytes, c.world)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+    use crate::comm::nccl_default_config;
+    use crate::profiler::profile_schedule;
+
+    #[test]
+    fn comp_bound_group_gets_light_config() {
+        // The Fig 8a behaviour: in a computation-bound overlap Lagom picks
+        // few channels / small-ish chunks.
+        let s = schedule_of(vec![comp_bound_group()]);
+        let mut p = profiler(11);
+        let mut t = LagomTuner::new(ClusterSpec::cluster_b(1));
+        let r = t.tune_schedule(&s, &mut p);
+        assert_eq!(r.configs.len(), 1);
+        assert!(r.configs[0].nc <= 8, "light NC, got {}", r.configs[0].nc);
+    }
+
+    #[test]
+    fn beats_nccl_defaults_on_comp_bound() {
+        let s = schedule_of(vec![comp_bound_group()]);
+        let cluster = ClusterSpec::cluster_b(1);
+        let mut t = LagomTuner::new(cluster.clone());
+        let mut p = profiler(12);
+        let r = t.tune_schedule(&s, &mut p);
+
+        let nccl: Vec<CommConfig> = s
+            .comm_indices()
+            .iter()
+            .map(|&i| nccl_default_config(s.comm_at(i), &cluster.topology))
+            .collect();
+        let mut eval = profiler(999);
+        let (z_lagom, _) = profile_schedule(&mut eval, &s, &r.configs);
+        let (z_nccl, _) = profile_schedule(&mut eval, &s, &nccl);
+        assert!(
+            z_lagom < z_nccl * 1.01,
+            "lagom {z_lagom} should not lose to nccl {z_nccl}"
+        );
+    }
+
+    #[test]
+    fn comm_bound_group_escalates_resources() {
+        // When communication dominates, Lagom must spend resources like a
+        // communication tuner would.
+        let s = schedule_of(vec![comm_bound_group()]);
+        let mut p = profiler(13);
+        let mut t = LagomTuner::new(ClusterSpec::cluster_b(1));
+        let r = t.tune_schedule(&s, &mut p);
+        assert!(
+            r.configs[0].nc >= 4 || r.configs[0].chunk >= 256 * 1024,
+            "comm-bound should escalate: {}",
+            r.configs[0]
+        );
+    }
+
+    #[test]
+    fn iterations_linear_in_comm_count() {
+        // §3.1/§4.4: tuning cost grows linearly with N, not as r^N.
+        let mut iters = Vec::new();
+        for n in [1usize, 2, 4] {
+            let mut g = fig5_group();
+            let one = g.comms[0].clone();
+            g.comms = (0..n)
+                .map(|i| {
+                    let mut c = one.clone();
+                    c.name = format!("ar{i}");
+                    c
+                })
+                .collect();
+            let s = schedule_of(vec![g]);
+            let mut p = profiler(21 + n as u64);
+            let mut t = LagomTuner::new(ClusterSpec::cluster_b(1));
+            let r = t.tune_schedule(&s, &mut p);
+            iters.push(r.iterations as f64);
+        }
+        // Growth from 1→4 comms should be ~4×, far below the ^4 of a joint
+        // grid; allow generous slack for noise.
+        assert!(iters[2] / iters[0] < 8.0, "iters {iters:?}");
+        assert!(iters[2] > iters[0], "more comms cost more: {iters:?}");
+    }
+
+    #[test]
+    fn identical_groups_reuse_configs() {
+        let g = comp_bound_group();
+        let s = schedule_of(vec![g.clone(), g.clone(), g]);
+        let mut p = profiler(31);
+        let mut t = LagomTuner::new(ClusterSpec::cluster_b(1));
+        let r = t.tune_schedule(&s, &mut p);
+        assert_eq!(r.configs.len(), 3);
+        assert_eq!(r.configs[0], r.configs[1]);
+        assert_eq!(r.configs[1], r.configs[2]);
+        // Only the first instance paid profiling cost.
+        let mut p2 = profiler(31);
+        let s1 = schedule_of(vec![comp_bound_group()]);
+        let mut t2 = LagomTuner::new(ClusterSpec::cluster_b(1));
+        let r1 = t2.tune_schedule(&s1, &mut p2);
+        assert_eq!(r.iterations, r1.iterations);
+    }
+
+    #[test]
+    fn trajectory_monotone_nonincreasing() {
+        let s = schedule_of(vec![fig5_group()]);
+        let mut p = profiler(41);
+        let mut t = LagomTuner::new(ClusterSpec::cluster_b(1));
+        let r = t.tune_schedule(&s, &mut p);
+        for w in r.trajectory.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12, "best-so-far never regresses");
+        }
+    }
+
+    #[test]
+    fn priority_variants_all_converge() {
+        for pri in [Priority::MinH, Priority::Sequential, Priority::Random] {
+            let s = schedule_of(vec![fig5_group()]);
+            let mut p = profiler(51);
+            let mut t = LagomTuner::with_priority(ClusterSpec::cluster_b(1), pri);
+            let r = t.tune_schedule(&s, &mut p);
+            assert_eq!(r.configs.len(), 2, "{pri:?}");
+            assert!(r.iterations > 0);
+        }
+    }
+}

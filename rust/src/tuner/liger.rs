@@ -1,0 +1,65 @@
+//! Liger-style baseline ([5, 30], §1): statically cap the GPU resources
+//! communication may use. Mitigates contention but cannot adapt to whether
+//! a given overlap is computation- or communication-bound — the fixed
+//! allocation the paper criticizes.
+
+use super::{TuneResult, Tuner};
+use crate::comm::nccl_default_config;
+use crate::graph::IterationSchedule;
+use crate::hw::ClusterSpec;
+use crate::profiler::ProfileBackend;
+use crate::util::units::KIB;
+
+pub struct LigerTuner {
+    pub cluster: ClusterSpec,
+    /// Hard channel cap (Liger dedicates a small fixed SM share to comm).
+    pub nc_cap: u32,
+    /// Hard chunk cap.
+    pub chunk_cap: u64,
+}
+
+impl LigerTuner {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        LigerTuner { cluster, nc_cap: 4, chunk_cap: 512 * KIB }
+    }
+}
+
+impl Tuner for LigerTuner {
+    fn name(&self) -> String {
+        "Liger-static".into()
+    }
+
+    fn tune_schedule(
+        &mut self,
+        schedule: &IterationSchedule,
+        _backend: &mut dyn ProfileBackend,
+    ) -> TuneResult {
+        let configs = schedule
+            .comm_indices()
+            .iter()
+            .map(|&i| {
+                let mut c = nccl_default_config(schedule.comm_at(i), &self.cluster.topology);
+                c.nc = c.nc.min(self.nc_cap);
+                c.chunk = c.chunk.min(self.chunk_cap);
+                c
+            })
+            .collect();
+        TuneResult { configs, iterations: 0, profile_calls: 0, trajectory: vec![] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn caps_applied() {
+        let s = schedule_of(vec![comp_bound_group()]);
+        let mut p = profiler(81);
+        let mut t = LigerTuner::new(ClusterSpec::cluster_a(1));
+        let r = t.tune_schedule(&s, &mut p);
+        assert!(r.configs[0].nc <= 4);
+        assert!(r.configs[0].chunk <= 512 * KIB);
+    }
+}

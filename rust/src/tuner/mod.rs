@@ -1,0 +1,220 @@
+//! Communication-parameter tuners: Lagom (the paper's contribution) and
+//! the baselines it is evaluated against (§4.1): NCCL defaults, AutoCCL,
+//! plus Liger-style static capping and an exhaustive ground-truth search
+//! for small cases.
+//!
+//! All tuners interact with the world exclusively through
+//! [`crate::profiler::ProfileBackend`] — measured times, never model
+//! internals — mirroring how they would run on a real cluster.
+
+pub mod autoccl;
+pub mod exhaustive;
+pub mod lagom;
+pub mod liger;
+pub mod nccl;
+
+pub use autoccl::AutoCclTuner;
+pub use exhaustive::ExhaustiveTuner;
+pub use lagom::{LagomTuner, Priority};
+pub use liger::LigerTuner;
+pub use nccl::NcclTuner;
+
+use crate::comm::{Algorithm, CommConfig, CommOpDesc, ParamSpace, Protocol, Transport};
+use crate::graph::{IterationSchedule, OverlapGroup};
+use crate::hw::ClusterSpec;
+use crate::profiler::ProfileBackend;
+use crate::util::units::KIB;
+
+/// Outcome of tuning a schedule.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    /// One config per comm op, in flat schedule order.
+    pub configs: Vec<CommConfig>,
+    /// Tuning-loop iterations executed (the Fig 8c x-axis).
+    pub iterations: u64,
+    /// Profile calls consumed (≥ iterations; includes setup probes).
+    pub profile_calls: u64,
+    /// Convergence trajectory: (cumulative iterations, best makespan seen).
+    pub trajectory: Vec<(u64, f64)>,
+}
+
+/// A communication tuner.
+pub trait Tuner {
+    fn name(&self) -> String;
+
+    /// Tune every communication of `schedule`, measuring through `backend`.
+    fn tune_schedule(
+        &mut self,
+        schedule: &IterationSchedule,
+        backend: &mut dyn ProfileBackend,
+    ) -> TuneResult;
+}
+
+/// AutoCCL's divide-and-conquer first stage, shared by Lagom (§3.2 "we
+/// adopt a divide-and-conquer strategy"): pick the implementation-related
+/// subspace (Algorithm, Protocol, Transport) per communication by probing
+/// each candidate at a nominal resource configuration and keeping the one
+/// with the lowest measured communication time.
+pub fn select_subspace(
+    op: &CommOpDesc,
+    group: &OverlapGroup,
+    op_index: usize,
+    cluster: &ClusterSpec,
+    space: &ParamSpace,
+    backend: &mut dyn ProfileBackend,
+    base_configs: &[CommConfig],
+) -> (Algorithm, Protocol, Transport) {
+    let spans_net = cluster.topology.spans_nodes(op.base_rank, op.world);
+    let nominal = |a, p, t| CommConfig {
+        algo: a,
+        proto: p,
+        transport: t,
+        nc: 8,
+        nt: 256,
+        chunk: 512 * KIB,
+    };
+    let mut best = None;
+    let mut best_t = f64::INFINITY;
+    for (a, p, t) in space.subspaces(spans_net) {
+        let mut cfgs = base_configs.to_vec();
+        cfgs[op_index] = nominal(a, p, t);
+        let m = backend.profile_group(group, &cfgs);
+        let x = m.comm_times[op_index];
+        if x < best_t {
+            best_t = x;
+            best = Some((a, p, t));
+        }
+    }
+    best.expect("at least one subspace")
+}
+
+/// Convenience: tune group-by-group with a per-group closure, stitching the
+/// flat config vector back together. Most tuners are per-group because
+/// overlap groups are separated by stream syncs.
+pub fn tune_groupwise<F>(
+    schedule: &IterationSchedule,
+    backend: &mut dyn ProfileBackend,
+    mut tune_group: F,
+) -> TuneResult
+where
+    F: FnMut(&OverlapGroup, &mut dyn ProfileBackend) -> (Vec<CommConfig>, u64, Vec<(u64, f64)>),
+{
+    let start_calls = backend.calls();
+    let mut configs = Vec::with_capacity(schedule.num_comms());
+    let mut iterations = 0;
+    let mut trajectory = Vec::new();
+    for g in &schedule.groups {
+        if g.comms.is_empty() {
+            continue;
+        }
+        let (cfgs, iters, mut traj) = tune_group(g, backend);
+        assert_eq!(cfgs.len(), g.comms.len());
+        configs.extend(cfgs);
+        // Offset this group's trajectory by iterations consumed so far.
+        for (it, z) in traj.drain(..) {
+            trajectory.push((iterations + it, z));
+        }
+        iterations += iters;
+    }
+    TuneResult {
+        configs,
+        iterations,
+        profile_calls: backend.calls() - start_calls,
+        trajectory,
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::comm::CollectiveKind;
+    use crate::graph::CompOpDesc;
+    use crate::profiler::SimProfiler;
+    use crate::sim::SimEnv;
+    use crate::util::units::MIB;
+
+    /// A computation-bound overlap group (Y >> X at sane configs): the
+    /// regime where Lagom must beat comm-greedy tuning.
+    pub fn comp_bound_group() -> OverlapGroup {
+        OverlapGroup::with(
+            "comp_bound",
+            vec![
+                CompOpDesc::ffn("ffn0", 2048, 2560, 10240, 2),
+                CompOpDesc::ffn("ffn1", 2048, 2560, 10240, 2),
+            ],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        )
+    }
+
+    /// A communication-bound group (X >> Y).
+    pub fn comm_bound_group() -> OverlapGroup {
+        OverlapGroup::with(
+            "comm_bound",
+            vec![CompOpDesc::matmul("mm", 1024, 1024, 1024, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 256 * MIB, 8)],
+        )
+    }
+
+    /// The paper's Fig 5 setting: 2 AllReduce + 7 MatMul concurrent.
+    pub fn fig5_group() -> OverlapGroup {
+        let comps = (0..7)
+            .map(|i| CompOpDesc::matmul(format!("mm{i}"), 2048, 2048, 2560, 2))
+            .collect();
+        let comms = vec![
+            CommOpDesc::new("commA", CollectiveKind::AllReduce, 16 * MIB, 8),
+            CommOpDesc::new("commB", CollectiveKind::AllReduce, 64 * MIB, 8),
+        ];
+        OverlapGroup::with("fig5", comps, comms)
+    }
+
+    pub fn profiler(seed: u64) -> SimProfiler {
+        SimProfiler::new(SimEnv::new(ClusterSpec::cluster_b(1), seed))
+    }
+
+    pub fn schedule_of(groups: Vec<OverlapGroup>) -> IterationSchedule {
+        let mut s = IterationSchedule::new("test");
+        for g in groups {
+            s.push(g);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::profiler::ProfileBackend;
+
+    #[test]
+    fn subspace_selection_prefers_valid_fast_choice() {
+        let g = comp_bound_group();
+        let cluster = ClusterSpec::cluster_b(1);
+        let space = ParamSpace::default();
+        let mut p = profiler(3);
+        let base = vec![CommConfig::default_ring(); 1];
+        let (a, _pr, t) =
+            select_subspace(&g.comms[0], &g, 0, &cluster, &space, &mut p, &base);
+        // Single-node PCIe: transport must not be NET; 32MB ring beats tree.
+        assert_ne!(t, Transport::Net);
+        assert_eq!(a, Algorithm::Ring);
+        assert_eq!(p.calls(), 12); // probed every intra-node subspace
+    }
+
+    #[test]
+    fn groupwise_skips_comm_free_groups() {
+        use crate::graph::CompOpDesc;
+        let mut s = schedule_of(vec![comp_bound_group()]);
+        s.push(OverlapGroup::with(
+            "pure_comp",
+            vec![CompOpDesc::matmul("mm", 512, 512, 512, 2)],
+            vec![],
+        ));
+        let mut p = profiler(4);
+        let r = tune_groupwise(&s, &mut p, |g, _b| {
+            (vec![CommConfig::default_ring(); g.comms.len()], 1, vec![])
+        });
+        assert_eq!(r.configs.len(), 1);
+        assert_eq!(r.iterations, 1);
+    }
+}

@@ -1,0 +1,53 @@
+//! NCCL baseline: static default configurations, zero tuning cost.
+
+use super::{TuneResult, Tuner};
+use crate::comm::nccl_default_config;
+use crate::graph::IterationSchedule;
+use crate::hw::ClusterSpec;
+use crate::profiler::ProfileBackend;
+
+pub struct NcclTuner {
+    pub cluster: ClusterSpec,
+}
+
+impl NcclTuner {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        NcclTuner { cluster }
+    }
+}
+
+impl Tuner for NcclTuner {
+    fn name(&self) -> String {
+        "NCCL".into()
+    }
+
+    fn tune_schedule(
+        &mut self,
+        schedule: &IterationSchedule,
+        _backend: &mut dyn ProfileBackend,
+    ) -> TuneResult {
+        let configs = schedule
+            .comm_indices()
+            .iter()
+            .map(|&i| nccl_default_config(schedule.comm_at(i), &self.cluster.topology))
+            .collect();
+        TuneResult { configs, iterations: 0, profile_calls: 0, trajectory: vec![] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn zero_cost_and_full_coverage() {
+        let s = schedule_of(vec![fig5_group(), comp_bound_group()]);
+        let mut p = profiler(71);
+        let mut t = NcclTuner::new(ClusterSpec::cluster_b(1));
+        let r = t.tune_schedule(&s, &mut p);
+        assert_eq!(r.configs.len(), 3);
+        assert_eq!(r.iterations, 0);
+        assert_eq!(p.calls(), 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Tiny leveled logger controlled by `LAGOM_LOG` (error|warn|info|debug|trace).
+//!
+//! Deliberately minimal: one global atomic level, timestamped lines to stderr.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn start_instant() -> Instant {
+    // One process-wide origin for relative timestamps.
+    static mut START: Option<Instant> = None;
+    static INIT: std::sync::Once = std::sync::Once::new();
+    unsafe {
+        INIT.call_once(|| {
+            START = Some(Instant::now());
+        });
+        #[allow(static_mut_refs)]
+        START.unwrap()
+    }
+}
+
+/// Current level, initializing from `LAGOM_LOG` on first use (default: warn).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != u8::MAX {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lvl = std::env::var("LAGOM_LOG")
+        .ok()
+        .and_then(|v| Level::parse(&v))
+        .unwrap_or(Level::Warn);
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+    let _ = start_instant();
+    lvl
+}
+
+/// Override the level programmatically (tests, CLI `-v`).
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = start_instant().elapsed().as_secs_f64();
+    eprintln!("[{t:10.4}s {:5} {module}] {msg}", lvl.as_str());
+}
+
+#[macro_export]
+macro_rules! log_error { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Info);
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+    }
+}

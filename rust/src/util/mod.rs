@@ -1,0 +1,15 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build image is offline and resolves only a fixed crate set, so the
+//! pieces a networked project would pull from crates.io (PRNG, JSON, stats,
+//! logging, unit formatting) are implemented here from scratch.
+
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;
+pub mod units;
+
+pub use json::Json;
+pub use prng::Prng;
+pub use stats::Summary;

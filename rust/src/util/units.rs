@@ -1,0 +1,103 @@
+//! Byte-size and time formatting/parsing.
+//!
+//! All simulator-internal times are `f64` **seconds**; all sizes are `u64`
+//! **bytes**. These helpers exist for CLI parsing and report formatting only.
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+
+/// Format a byte count the way the paper writes them (e.g. `684 KB`, `2 MB`).
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GIB && b % GIB == 0 {
+        format!("{} GB", b / GIB)
+    } else if b >= MIB && b % MIB == 0 {
+        format!("{} MB", b / MIB)
+    } else if b >= KIB && b % KIB == 0 {
+        format!("{} KB", b / KIB)
+    } else if b >= MIB {
+        format!("{:.1} MB", b as f64 / MIB as f64)
+    } else if b >= KIB {
+        format!("{:.0} KB", b as f64 / KIB as f64)
+    } else {
+        format!("{} B", b)
+    }
+}
+
+/// Parse `"32MB"`, `"684 KB"`, `"16kib"`, `"128"` (bytes) etc.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_lowercase().replace(' ', "");
+    let split = t.find(|c: char| !(c.is_ascii_digit() || c == '.')).unwrap_or(t.len());
+    let (num, unit) = t.split_at(split);
+    let v: f64 = num.parse().map_err(|_| format!("bad size number in {s:?}"))?;
+    let mult = match unit {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => KIB,
+        "m" | "mb" | "mib" => MIB,
+        "g" | "gb" | "gib" => GIB,
+        other => return Err(format!("unknown size unit {other:?} in {s:?}")),
+    };
+    Ok((v * mult as f64).round() as u64)
+}
+
+/// Format seconds adaptively: `123.4 us`, `5.67 ms`, `1.23 s`.
+pub fn fmt_secs(t: f64) -> String {
+    let at = t.abs();
+    if at >= 1.0 {
+        format!("{:.3} s", t)
+    } else if at >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else if at >= 1e-6 {
+        format!("{:.1} us", t * 1e6)
+    } else {
+        format!("{:.0} ns", t * 1e9)
+    }
+}
+
+/// Format a rate in bytes/second as GB/s.
+pub fn fmt_bw(bytes_per_s: f64) -> String {
+    format!("{:.1} GB/s", bytes_per_s / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_round_trip() {
+        for (s, v) in [
+            ("32MB", 32 * MIB),
+            ("684 KB", 684 * KIB),
+            ("16kib", 16 * KIB),
+            ("128", 128),
+            ("1g", GIB),
+        ] {
+            assert_eq!(parse_bytes(s).unwrap(), v, "{s}");
+        }
+    }
+
+    #[test]
+    fn bytes_fractional() {
+        assert_eq!(parse_bytes("1.5MB").unwrap(), 3 * MIB / 2);
+    }
+
+    #[test]
+    fn bytes_errors() {
+        assert!(parse_bytes("12parsec").is_err());
+        assert!(parse_bytes("xMB").is_err());
+    }
+
+    #[test]
+    fn fmt_bytes_paper_style() {
+        assert_eq!(fmt_bytes(2 * MIB), "2 MB");
+        assert_eq!(fmt_bytes(684 * KIB), "684 KB");
+        assert_eq!(fmt_bytes(100), "100 B");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0042), "4.200 ms");
+        assert_eq!(fmt_secs(3.5e-5), "35.0 us");
+    }
+}

@@ -1,0 +1,165 @@
+//! Property tests on coordinator invariants: routing of jobs to ranks,
+//! aggregation semantics, config-state management, and tuner determinism
+//! over the distributed path.
+
+use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
+use lagom::coordinator::{Coordinator, DistributedProfiler, FaultPlan};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::testing::{for_all, vec_of, Check, Gen};
+use lagom::util::units::MIB;
+use std::sync::Arc;
+
+fn arb_group<'a>() -> Gen<'a, OverlapGroup> {
+    Gen::new(|rng| {
+        let comps: Vec<CompOpDesc> = (0..1 + rng.next_below(3))
+            .map(|i| {
+                let m = 256 << rng.next_below(4);
+                CompOpDesc::matmul(format!("mm{i}"), m, 1024, 1024, 2)
+            })
+            .collect();
+        let comms: Vec<CommOpDesc> = (0..1 + rng.next_below(2))
+            .map(|i| {
+                CommOpDesc::new(
+                    format!("ar{i}"),
+                    CollectiveKind::AllReduce,
+                    (4 + rng.next_below(60)) * MIB,
+                    8,
+                )
+            })
+            .collect();
+        OverlapGroup::with("g", comps, comms)
+    })
+}
+
+#[test]
+fn invariant_aggregate_is_max_of_ranks() {
+    // With one strong straggler, the aggregate must track the straggler —
+    // collectives end when the slowest rank does.
+    let cl = ClusterSpec::cluster_b(1);
+    let g = arb_group();
+    for_all("max aggregation", &g, 6, |group| {
+        let cfgs = Arc::new(vec![CommConfig::default_ring(); group.comms.len()]);
+        let garc = Arc::new(group.clone());
+        let mut healthy = Coordinator::spawn(&cl, 11, &[]);
+        let mut faults = vec![FaultPlan::healthy(); 8];
+        faults[2] = FaultPlan::straggler(3.0);
+        let mut slow = Coordinator::spawn(&cl, 11, &faults);
+        let mh = healthy.profile(&garc, &cfgs, 2).unwrap();
+        let ms = slow.profile(&garc, &cfgs, 2).unwrap();
+        healthy.shutdown();
+        slow.shutdown();
+        Check::from_bool(
+            ms.makespan > mh.makespan * 2.0,
+            &format!("straggler {} vs healthy {}", ms.makespan, mh.makespan),
+        )
+    });
+}
+
+#[test]
+fn invariant_commit_epoch_monotone_and_state_consistent() {
+    let cl = ClusterSpec::cluster_b(1);
+    let g = vec_of(
+        Gen::new(|rng| CommConfig {
+            nc: 1 + rng.next_below(60) as u32,
+            ..CommConfig::default_ring()
+        }),
+        1,
+        6,
+    );
+    for_all("commit state", &g, 6, |configs| {
+        let mut coord = Coordinator::spawn(&cl, 3, &[]);
+        let mut last_epoch = coord.commit_epoch();
+        for i in 0..3 {
+            let mut cfgs = configs.clone();
+            cfgs[0].nc = (i + 1) as u32;
+            let acks = coord.commit(cfgs.clone());
+            let ok = acks == 8
+                && coord.commit_epoch() == last_epoch + 1
+                && coord.committed_configs() == cfgs.as_slice();
+            if !ok {
+                // Leak the coordinator threads (test process ends anyway).
+                return Check::Fail(format!("epoch {} acks {acks}", coord.commit_epoch()));
+            }
+            last_epoch = coord.commit_epoch();
+        }
+        coord.shutdown();
+        Check::Pass
+    });
+}
+
+#[test]
+fn invariant_job_routing_survives_interleaved_ops() {
+    // Interleave profile / ping / commit: replies must never cross jobs
+    // (stale reports are discarded), so measurements stay well-formed.
+    let cl = ClusterSpec::cluster_b(1);
+    let g = arb_group();
+    for_all("routing", &g, 5, |group| {
+        let mut coord = Coordinator::spawn(&cl, 17, &[]);
+        let garc = Arc::new(group.clone());
+        let cfgs = Arc::new(vec![CommConfig::default_ring(); group.comms.len()]);
+        for _ in 0..3 {
+            let m = coord.profile(&garc, &cfgs, 1).unwrap();
+            if m.comm_times.len() != group.comms.len() || !m.makespan.is_finite() {
+                return Check::Fail("malformed measurement".into());
+            }
+            if coord.ping() != 8 {
+                return Check::Fail("ping lost ranks".into());
+            }
+            coord.commit(cfgs.to_vec());
+        }
+        coord.shutdown();
+        Check::Pass
+    });
+}
+
+#[test]
+fn invariant_tuner_results_equivalent_local_vs_distributed() {
+    // Same tuner, same seed stream shape: the distributed backend must
+    // produce a config of comparable quality (not identical — noise
+    // streams differ — but within a tolerance band on the evaluated
+    // makespan).
+    use lagom::profiler::SimProfiler;
+    use lagom::report::evaluate;
+    use lagom::sim::SimEnv;
+    use lagom::tuner::{LagomTuner, Tuner};
+    let cl = ClusterSpec::cluster_b(1);
+    let group = OverlapGroup::with(
+        "eq",
+        vec![
+            CompOpDesc::ffn("ffn0", 2048, 2560, 10240, 2),
+            CompOpDesc::ffn("ffn1", 2048, 2560, 10240, 2),
+        ],
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+    );
+    let mut s = IterationSchedule::new("eq");
+    s.push(group);
+
+    let mut local = SimProfiler::new(SimEnv::new(cl.clone(), 23));
+    let rl = LagomTuner::new(cl.clone()).tune_schedule(&s, &mut local);
+
+    let coord = Coordinator::spawn(&cl, 23, &[]);
+    let mut dist = DistributedProfiler::new(coord);
+    let rd = LagomTuner::new(cl.clone()).tune_schedule(&s, &mut dist);
+    dist.coord.shutdown();
+
+    let zl = evaluate(&s, &rl.configs, &cl, 1, 99);
+    let zd = evaluate(&s, &rd.configs, &cl, 1, 99);
+    assert!(
+        (zd - zl).abs() / zl < 0.08,
+        "local {zl} vs distributed {zd}"
+    );
+}
+
+#[test]
+fn invariant_world_size_matches_cluster() {
+    for (cl, expect) in [
+        (ClusterSpec::cluster_a(1), 8),
+        (ClusterSpec::cluster_b(2), 16),
+    ] {
+        let coord = Coordinator::spawn(&cl, 1, &[]);
+        assert_eq!(coord.world_size(), expect);
+        assert_eq!(coord.alive_ranks(), expect);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,106 @@
+//! Failure injection on the coordinator: dead workers, stragglers, and
+//! tuning under degraded membership.
+
+use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
+use lagom::coordinator::{Coordinator, DistributedProfiler, FaultPlan};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::profiler::ProfileBackend;
+use lagom::tuner::{LagomTuner, Tuner};
+use lagom::util::units::MIB;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn group() -> OverlapGroup {
+    OverlapGroup::with(
+        "g",
+        vec![CompOpDesc::ffn("ffn", 1024, 1024, 4096, 2)],
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 8 * MIB, 8)],
+    )
+}
+
+#[test]
+fn single_dead_worker_does_not_block_progress() {
+    let cl = ClusterSpec::cluster_b(1);
+    let mut faults = vec![FaultPlan::healthy(); 8];
+    faults[4] = FaultPlan::dies_after(2);
+    let mut coord = Coordinator::spawn(&cl, 7, &faults);
+    coord.timeout = Duration::from_millis(250);
+    let g = Arc::new(group());
+    let c = Arc::new(vec![CommConfig::default_ring()]);
+    for i in 0..6 {
+        let m = coord.profile(&g, &c, 1);
+        assert!(m.is_some(), "round {i} must still aggregate");
+    }
+    assert_eq!(coord.alive_ranks(), 7, "dead rank detected exactly once");
+    coord.shutdown();
+}
+
+#[test]
+fn majority_failure_still_returns_measurements() {
+    let cl = ClusterSpec::cluster_b(1);
+    let mut faults = vec![FaultPlan::dies_after(1); 8];
+    faults[0] = FaultPlan::healthy();
+    let mut coord = Coordinator::spawn(&cl, 9, &faults);
+    coord.timeout = Duration::from_millis(250);
+    let g = Arc::new(group());
+    let c = Arc::new(vec![CommConfig::default_ring()]);
+    assert!(coord.profile(&g, &c, 1).is_some());
+    assert!(coord.profile(&g, &c, 1).is_some(), "survivor keeps reporting");
+    assert_eq!(coord.alive_ranks(), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn tuning_completes_with_straggler_and_casualty() {
+    // Lagom over a degraded coordinator: a straggler skews measurements
+    // upward and one rank dies mid-tuning; tuning must still converge to a
+    // valid config set.
+    let cl = ClusterSpec::cluster_b(1);
+    let mut faults = vec![FaultPlan::healthy(); 8];
+    faults[1] = FaultPlan::straggler(1.5);
+    faults[6] = FaultPlan::dies_after(10);
+    let mut coord = Coordinator::spawn(&cl, 13, &faults);
+    coord.timeout = Duration::from_millis(250);
+    let mut backend = DistributedProfiler::new(coord);
+    backend.reps = 1;
+
+    let mut s = IterationSchedule::new("faulty");
+    s.push(group());
+    let mut tuner = LagomTuner::new(cl.clone());
+    let r = tuner.tune_schedule(&s, &mut backend);
+    assert_eq!(r.configs.len(), 1);
+    let space = lagom::comm::ParamSpace::default();
+    assert!(r.configs[0].nc >= space.nc_min && r.configs[0].nc <= space.nc_max);
+    assert!(backend.coord.alive_ranks() < 8, "casualty happened during tuning");
+    backend.coord.shutdown();
+}
+
+#[test]
+fn commit_acks_reflect_dead_ranks() {
+    let cl = ClusterSpec::cluster_b(1);
+    let mut faults = vec![FaultPlan::healthy(); 8];
+    faults[3] = FaultPlan::dies_after(0);
+    let mut coord = Coordinator::spawn(&cl, 15, &faults);
+    coord.timeout = Duration::from_millis(250);
+    // First commit: rank 3 never replies -> timeout -> 7 acks.
+    let acks = coord.commit(vec![CommConfig::default_ring()]);
+    assert_eq!(acks, 7);
+    assert_eq!(coord.alive_ranks(), 7);
+    // Second commit: no timeout path, still 7.
+    let t0 = std::time::Instant::now();
+    let acks2 = coord.commit(vec![CommConfig::default_ring()]);
+    assert_eq!(acks2, 7);
+    assert!(t0.elapsed() < Duration::from_millis(200));
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent_under_faults() {
+    let cl = ClusterSpec::cluster_b(1);
+    let faults = vec![FaultPlan::dies_after(0); 8];
+    let mut coord = Coordinator::spawn(&cl, 17, &faults);
+    coord.timeout = Duration::from_millis(100);
+    let _ = coord.ping();
+    coord.shutdown(); // must not hang on dead workers
+}

@@ -1,0 +1,248 @@
+//! Cross-module integration tests: schedules → tuners → simulator →
+//! reports, and the PJRT runtime → trainer path over real AOT artifacts.
+
+use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{build_schedule, table2_workloads, Parallelism, Workload};
+use lagom::profiler::{profile_schedule, ProfileBackend, SimProfiler};
+use lagom::report::{compare_strategies, evaluate};
+use lagom::runtime::Runtime;
+use lagom::sim::{SimEnv, TraceBuilder};
+use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
+use lagom::util::json::Json;
+
+fn small_fsdp() -> (Workload, ClusterSpec) {
+    let mut m = ModelSpec::phi2();
+    m.layers = 4;
+    (
+        Workload { model: m, par: Parallelism::Fsdp { world: 8 }, mbs: 2, gbs: 16 },
+        ClusterSpec::cluster_b(1),
+    )
+}
+
+#[test]
+fn every_table2_workload_tunes_under_every_tuner() {
+    let cl = ClusterSpec::cluster_a(2);
+    for w in table2_workloads(16) {
+        let mut w = w;
+        w.model.layers = w.model.layers.min(3); // keep CI fast; shapes authentic
+        let s = build_schedule(&w, &cl);
+        for mut tuner in [
+            Box::new(NcclTuner::new(cl.clone())) as Box<dyn Tuner>,
+            Box::new(LigerTuner::new(cl.clone())),
+            Box::new(LagomTuner::new(cl.clone())),
+        ] {
+            let mut prof = SimProfiler::with_reps(SimEnv::new(cl.clone(), 7), 1);
+            let r = tuner.tune_schedule(&s, &mut prof);
+            assert_eq!(r.configs.len(), s.num_comms(), "{} under {}", w.label(), tuner.name());
+            let t = evaluate(&s, &r.configs, &cl, 1, 11);
+            assert!(t.is_finite() && t > 0.0);
+        }
+    }
+}
+
+#[test]
+fn lagom_never_worse_than_nccl_across_workloads() {
+    // The paper's minimum bar, checked end-to-end on dense+MoE, both clusters.
+    for (cluster, model, par) in [
+        (ClusterSpec::cluster_a(1), ModelSpec::phi2(), Parallelism::Fsdp { world: 8 }),
+        (ClusterSpec::cluster_b(1), ModelSpec::mpt_7b(), Parallelism::Fsdp { world: 8 }),
+        (ClusterSpec::cluster_a(1), ModelSpec::olmoe_1b_7b(), Parallelism::Ep { ep: 8 }),
+        (ClusterSpec::cluster_b(1), ModelSpec::phi2(), Parallelism::TpDp { tp: 8, dp: 1 }),
+    ] {
+        let mut model = model;
+        model.layers = model.layers.min(4);
+        let w = Workload { model, par, mbs: 2, gbs: 16 };
+        let c = compare_strategies(&w, &cluster, 42);
+        let lagom = c.row("Lagom").speedup_vs_nccl;
+        assert!(
+            lagom > 0.97,
+            "{} on {}: Lagom {lagom}x vs NCCL",
+            c.workload,
+            c.cluster
+        );
+    }
+}
+
+#[test]
+fn tuned_configs_respect_parameter_space() {
+    let (w, cl) = small_fsdp();
+    let s = build_schedule(&w, &cl);
+    let mut tuner = LagomTuner::new(cl.clone());
+    let mut prof = SimProfiler::new(SimEnv::new(cl.clone(), 3));
+    let r = tuner.tune_schedule(&s, &mut prof);
+    let space = lagom::comm::ParamSpace::default();
+    for c in &r.configs {
+        assert!(c.nc >= space.nc_min && c.nc <= space.nc_max);
+        assert!(c.chunk >= space.c_min && c.chunk <= space.c_max);
+        assert!(space.nt_ladder.contains(&c.nt));
+    }
+}
+
+#[test]
+fn trace_export_round_trips_for_full_schedule() {
+    let (w, cl) = small_fsdp();
+    let s = build_schedule(&w, &cl);
+    let mut tuner = NcclTuner::new(cl.clone());
+    let mut prof = SimProfiler::new(SimEnv::new(cl.clone(), 3));
+    let r = tuner.tune_schedule(&s, &mut prof);
+    let mut env = SimEnv::deterministic(cl);
+    let iter = lagom::sim::simulate_schedule(&s, &r.configs, &mut env);
+    let mut tb = TraceBuilder::new();
+    tb.push_iter(&s, &iter);
+    let doc = tb.finish();
+    let parsed = Json::parse(&doc.to_string()).unwrap();
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(
+        events.len(),
+        s.num_comps() + s.num_comms(),
+        "one span per op"
+    );
+}
+
+#[test]
+fn profile_schedule_matches_manual_group_loop() {
+    let (w, cl) = small_fsdp();
+    let s = build_schedule(&w, &cl);
+    let cfgs: Vec<CommConfig> = s
+        .comm_indices()
+        .iter()
+        .map(|&i| lagom::comm::nccl_default_config(s.comm_at(i), &cl.topology))
+        .collect();
+    let mut p1 = SimProfiler::with_reps(SimEnv::deterministic(cl.clone()), 1);
+    let (total, per_group) = profile_schedule(&mut p1, &s, &cfgs);
+    assert_eq!(per_group.len(), s.groups.len());
+    let sum: f64 = per_group.iter().map(|m| m.makespan).sum();
+    assert!((total - sum).abs() < 1e-12);
+}
+
+#[test]
+fn distributed_and_local_profiling_agree() {
+    // The coordinator path (max-aggregated across ranks) must sit near the
+    // local simulator's measurement — ranks are homogeneous up to noise.
+    use lagom::coordinator::{Coordinator, DistributedProfiler};
+    let cl = ClusterSpec::cluster_b(1);
+    let g = OverlapGroup::with(
+        "agree",
+        vec![CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2)],
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 << 20, 8)],
+    );
+    let cfg = [CommConfig::default_ring()];
+    let mut local = SimProfiler::new(SimEnv::new(cl.clone(), 5));
+    let lm = local.profile_group(&g, &cfg);
+    let coord = Coordinator::spawn(&cl, 5, &[]);
+    let mut dist = DistributedProfiler::new(coord);
+    let dm = dist.profile_group(&g, &cfg);
+    dist.coord.shutdown();
+    // Max over 8 noisy ranks is biased slightly above the mean; allow 10%.
+    assert!(
+        (dm.makespan - lm.makespan).abs() / lm.makespan < 0.10,
+        "dist {} vs local {}",
+        dm.makespan,
+        lm.makespan
+    );
+}
+
+// ---- PJRT runtime + trainer round trip over real artifacts -------------
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/train_step.hlo.txt").exists()
+}
+
+#[test]
+fn trainer_runs_and_loss_drops_on_aot_artifacts() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt");
+    let mut trainer = lagom::train::Trainer::new(rt, 42).expect("trainer");
+    let steps = 60; // well past the optimizer warmup so the drop is reliable
+    trainer.run(steps, |_| {}).expect("train");
+    assert_eq!(trainer.history.len(), steps as usize);
+    assert!(trainer.history.iter().all(|r| r.loss.is_finite()));
+    let (first, last) = trainer.loss_drop(5).unwrap();
+    assert!(last < first - 0.02, "loss should drop: {first} -> {last}");
+}
+
+#[test]
+fn fwd_loss_artifact_matches_train_step_loss() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // fwd_loss(theta, toks, tgts) must equal the loss train_step reports
+    // for the same inputs (same graph, no optimizer side effects).
+    let mut rt = Runtime::cpu().expect("pjrt");
+    let meta = lagom::train::TrainMeta::load(std::path::Path::new(
+        "artifacts/train_step.meta.json",
+    ))
+    .unwrap();
+    let init = rt.load("train_init").unwrap();
+    let out = init
+        .run(&[lagom::runtime::literal_f32(&[1.0], &[]).unwrap()])
+        .unwrap();
+    let theta = &out[0];
+
+    let mut data = lagom::train::SyntheticData::new(meta.vocab, 9);
+    let (toks, tgts) = data.batch(meta.batch, meta.seq);
+    let b = meta.batch as i64;
+    let s = meta.seq as i64;
+    let toks_l = lagom::runtime::literal_i32(&toks, &[b, s]).unwrap();
+    let tgts_l = lagom::runtime::literal_i32(&tgts, &[b, s]).unwrap();
+
+    let fwd = rt.compile_file("fwd_loss", std::path::Path::new("artifacts/fwd_loss.hlo.txt")).unwrap();
+    let loss_fwd = fwd
+        .run(&[theta.clone(), toks_l.clone(), tgts_l.clone()])
+        .unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap()[0];
+
+    let step = rt.compile_file("train_step", std::path::Path::new("artifacts/train_step.hlo.txt")).unwrap();
+    let step_out = step
+        .run(&[
+            theta.clone(),
+            lagom::runtime::literal_f32(&vec![0.0; theta.element_count()], &[theta.element_count() as i64]).unwrap(),
+            lagom::runtime::literal_f32(&vec![0.0; theta.element_count()], &[theta.element_count() as i64]).unwrap(),
+            lagom::runtime::literal_f32(&[0.0], &[]).unwrap(),
+            toks_l,
+            tgts_l,
+        ])
+        .unwrap();
+    let loss_step = step_out[3].to_vec::<f32>().unwrap()[0];
+    assert!(
+        (loss_fwd - loss_step).abs() < 1e-4,
+        "fwd {loss_fwd} vs step {loss_step}"
+    );
+}
+
+#[test]
+fn schedule_structure_is_deterministic() {
+    let (w, cl) = small_fsdp();
+    let s1 = build_schedule(&w, &cl);
+    let s2 = build_schedule(&w, &cl);
+    assert_eq!(s1, s2);
+}
+
+#[test]
+fn autoccl_beats_or_ties_lagom_on_pure_comm_schedule() {
+    // On a communication-only schedule there is nothing to co-tune; the
+    // comm-greedy baseline must be at least as good.
+    let g = OverlapGroup::with(
+        "pure_comm",
+        vec![],
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 128 << 20, 8)],
+    );
+    let mut s = IterationSchedule::new("pc");
+    s.push(g);
+    let cl = ClusterSpec::cluster_b(1);
+    let mut pa = SimProfiler::new(SimEnv::new(cl.clone(), 1));
+    let ra = AutoCclTuner::new(cl.clone()).tune_schedule(&s, &mut pa);
+    let mut pl = SimProfiler::new(SimEnv::new(cl.clone(), 2));
+    let rl = LagomTuner::new(cl.clone()).tune_schedule(&s, &mut pl);
+    let za = evaluate(&s, &ra.configs, &cl, 1, 9);
+    let zl = evaluate(&s, &rl.configs, &cl, 1, 9);
+    assert!(za <= zl * 1.10, "autoccl {za} vs lagom {zl}");
+}

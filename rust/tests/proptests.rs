@@ -1,0 +1,232 @@
+//! Property-based tests over the in-repo mini framework
+//! (`lagom::testing`): invariants of the comm cost model, the contention
+//! model, the simulator and the parameter space, across randomized inputs.
+
+use lagom::comm::{
+    comm_resources, comm_time, CollectiveKind, CommConfig, CommOpDesc, ParamSpace,
+};
+use lagom::contention::model::comp_time_contended;
+use lagom::graph::{CompOpDesc, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::sim::{simulate_group, SimEnv};
+use lagom::testing::{default_cases, for_all, one_of, range_u32, range_u64, vec_of, Check, Gen};
+use lagom::util::units::KIB;
+
+fn arb_config<'a>() -> Gen<'a, CommConfig> {
+    Gen::new(|rng| {
+        let space = ParamSpace::default();
+        space.clamp(CommConfig {
+            nc: 1 + rng.next_below(64) as u32,
+            nt: *[64u32, 128, 256, 512, 640].get(rng.next_below(5) as usize).unwrap(),
+            chunk: (16 + rng.next_below(16368)) * KIB,
+            ..CommConfig::default_ring()
+        })
+    })
+}
+
+fn arb_comm<'a>() -> Gen<'a, CommOpDesc> {
+    Gen::new(|rng| {
+        let kinds = [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+            CollectiveKind::Broadcast,
+        ];
+        let kind = kinds[rng.next_below(5) as usize];
+        let bytes = (1u64 << (12 + rng.next_below(16))).max(1);
+        let world = [2u32, 4, 8][rng.next_below(3) as usize];
+        CommOpDesc::new("c", kind, bytes, world)
+    })
+}
+
+fn arb_comp<'a>() -> Gen<'a, CompOpDesc> {
+    Gen::new(|rng| {
+        let m = 128 << rng.next_below(5);
+        let n = 128 << rng.next_below(5);
+        let k = 256 << rng.next_below(4);
+        CompOpDesc::matmul("mm", m, n, k, 2)
+    })
+}
+
+#[test]
+fn prop_comm_time_positive_finite() {
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| (arb_comm().sample(rng), arb_config().sample(rng)));
+    for_all("comm_time finite", &g, default_cases(), |(op, cfg)| {
+        let t = comm_time(op, cfg, &cl.topology, cl.gpu());
+        Check::from_bool(t.is_finite() && t > 0.0, &format!("t={t}"))
+    });
+}
+
+#[test]
+fn prop_comm_time_monotone_in_bytes() {
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| (arb_comm().sample(rng), arb_config().sample(rng)));
+    for_all("monotone in size", &g, default_cases(), |(op, cfg)| {
+        let t1 = comm_time(op, cfg, &cl.topology, cl.gpu());
+        let mut big = op.clone();
+        big.bytes *= 4;
+        let t2 = comm_time(&big, cfg, &cl.topology, cl.gpu());
+        Check::from_bool(t2 >= t1, &format!("4x bytes: {t1} -> {t2}"))
+    });
+}
+
+#[test]
+fn prop_resources_bounded() {
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| (arb_comm().sample(rng), arb_config().sample(rng)));
+    for_all("resources bounded", &g, default_cases(), |(op, cfg)| {
+        let d = comm_time(op, cfg, &cl.topology, cl.gpu());
+        let r = comm_resources(op, cfg, &cl.topology, cl.gpu(), d);
+        Check::from_bool(
+            r.sms < cl.gpu().sms
+                && r.mem_bw <= cl.gpu().mem_bw
+                && (0.0..=1.0).contains(&r.l2_frac),
+            &format!("{r:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_contention_never_speeds_compute() {
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| {
+        (arb_comp().sample(rng), arb_comm().sample(rng), arb_config().sample(rng))
+    });
+    for_all("contention slows", &g, default_cases(), |(comp, op, cfg)| {
+        let free = comp_time_contended(comp, cl.gpu(), None);
+        let d = comm_time(op, cfg, &cl.topology, cl.gpu());
+        let res = comm_resources(op, cfg, &cl.topology, cl.gpu(), d);
+        let busy = comp_time_contended(comp, cl.gpu(), Some(&res));
+        Check::from_bool(busy >= free * 0.999, &format!("free {free} busy {busy}"))
+    });
+}
+
+#[test]
+fn prop_sim_makespan_bounds() {
+    // max(X_solo-ish, Y_solo) <= Z <= Y_contended + X_contended (serial).
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| {
+        let comps = vec_of(arb_comp(), 1, 4).sample(rng);
+        let comms = vec_of(arb_comm(), 1, 3).sample(rng);
+        let cfgs: Vec<CommConfig> =
+            (0..comms.len()).map(|_| arb_config().sample(rng)).collect();
+        (comps, comms, cfgs)
+    });
+    for_all("makespan bounds", &g, default_cases() / 2, |(comps, comms, cfgs)| {
+        let group = OverlapGroup::with("p", comps.clone(), comms.clone());
+        let mut env = SimEnv::deterministic(cl.clone());
+        let r = simulate_group(&group, cfgs, &mut env);
+        let y: f64 = r.comp_times.iter().sum();
+        let x: f64 = r.comm_times.iter().sum();
+        let lower = y.max(r.comm_spans.last().map(|s| s.1).unwrap_or(0.0)) - 1e-9;
+        let upper = y + x + 1e-9;
+        Check::from_bool(
+            r.makespan >= lower && r.makespan <= upper,
+            &format!("Z={} not in [{lower}, {upper}]", r.makespan),
+        )
+    });
+}
+
+#[test]
+fn prop_sim_deterministic_and_seeded() {
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| {
+        let comps = vec_of(arb_comp(), 1, 3).sample(rng);
+        let comms = vec_of(arb_comm(), 1, 2).sample(rng);
+        let cfgs: Vec<CommConfig> =
+            (0..comms.len()).map(|_| arb_config().sample(rng)).collect();
+        (comps, comms, cfgs, rng.next_u64())
+    });
+    for_all("seeded repro", &g, default_cases() / 2, |(comps, comms, cfgs, seed)| {
+        let group = OverlapGroup::with("p", comps.clone(), comms.clone());
+        let r1 = simulate_group(&group, cfgs, &mut SimEnv::new(cl.clone(), *seed));
+        let r2 = simulate_group(&group, cfgs, &mut SimEnv::new(cl.clone(), *seed));
+        Check::from_bool(r1 == r2, "same seed, same result")
+    });
+}
+
+#[test]
+fn prop_escalate_monotone_and_clamped() {
+    let space = ParamSpace::default();
+    let g = Gen::new(move |rng| {
+        (arb_config().sample(rng), rng.next_f64())
+    });
+    for_all("escalate", &g, default_cases(), |(cfg, lr)| {
+        let next = space.clamp(space.escalate(*cfg, *lr));
+        let grew = next.nc >= cfg.nc && next.chunk >= cfg.chunk && next.nt >= cfg.nt;
+        let in_space = next.nc <= space.nc_max && next.chunk <= space.c_max;
+        Check::from_bool(grew && in_space, &format!("{cfg} -> {next}"))
+    });
+}
+
+#[test]
+fn prop_wire_factor_consistency() {
+    // AllReduce == ReduceScatter + AllGather for every world size.
+    let g = range_u32(2, 64);
+    for_all("AR = RS + AG", &g, default_cases(), |&p| {
+        let ar = CollectiveKind::AllReduce.wire_factor(p);
+        let rs = CollectiveKind::ReduceScatter.wire_factor(p);
+        let ag = CollectiveKind::AllGather.wire_factor(p);
+        Check::from_bool((ar - rs - ag).abs() < 1e-12, &format!("p={p}"))
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_tables() {
+    use lagom::util::json::Json;
+    let g = vec_of(
+        Gen::new(|rng| {
+            (
+                format!("k{}", rng.next_below(100)),
+                rng.uniform(-1e6, 1e6),
+            )
+        }),
+        0,
+        12,
+    );
+    for_all("json roundtrip", &g, default_cases(), |pairs| {
+        let obj = Json::Obj(
+            pairs
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num((*v * 1e3).round() / 1e3)))
+                .collect(),
+        );
+        let parsed = Json::parse(&obj.to_pretty());
+        Check::from_bool(parsed.as_ref() == Ok(&obj), &format!("{parsed:?}"))
+    });
+}
+
+#[test]
+fn prop_schedule_comm_arity_always_matches() {
+    use lagom::models::ModelSpec;
+    use lagom::parallel::{build_schedule, Parallelism, Workload};
+    let cl = ClusterSpec::cluster_a(2);
+    let g = Gen::new(move |rng| {
+        let models = [
+            ModelSpec::phi2(),
+            ModelSpec::llama3_8b(),
+            ModelSpec::olmoe_1b_7b(),
+        ];
+        let mut m = models[rng.next_below(3) as usize].clone();
+        m.layers = 1 + rng.next_below(6) as u32;
+        let par = match rng.next_below(4) {
+            0 => Parallelism::Fsdp { world: 16 },
+            1 => Parallelism::TpDp { tp: 8, dp: 2 },
+            2 if m.moe.is_some() => Parallelism::Ep { ep: 8 },
+            _ => Parallelism::Dp { world: 16 },
+        };
+        let mbs = 1 + rng.next_below(4) as u32;
+        (m, par, mbs)
+    });
+    for_all("schedule arity", &g, default_cases() / 2, |(m, par, mbs)| {
+        let w = Workload { model: m.clone(), par: *par, mbs: *mbs, gbs: 16 * mbs };
+        let s = build_schedule(&w, &cl);
+        let flat = s.comm_indices().len();
+        let ok = flat == s.num_comms()
+            && s.groups.iter().all(|g| !g.is_empty())
+            && range_u64(0, 1).sample(&mut lagom::util::prng::Prng::new(1)) <= 1;
+        Check::from_bool(ok, &format!("{} groups", s.groups.len()))
+    });
+}
