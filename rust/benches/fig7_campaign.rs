@@ -1,0 +1,76 @@
+//! Fig 7 as a campaign — drive the whole scenario grid (model zoo ×
+//! {dp, fsdp, pp, ep} × {high-bw, low-bw}) end-to-end through the
+//! parallel campaign runner, then re-run it to prove the content-hashed
+//! cache makes repeated scenarios free.
+//!
+//! Paper anchor: Fig 7's per-workload tables, generalized to the full
+//! grid that Lagom's linear-complexity search (§3.1) makes tractable.
+//!
+//! Full-depth run: LAGOM_FULL=1 cargo bench --bench fig7_campaign
+
+use lagom::bench::save_table;
+use lagom::campaign::{run_campaign, scenario_grid, CampaignConfig, Leaderboard, ResultCache};
+
+fn main() {
+    let full = std::env::var("LAGOM_FULL").is_ok();
+    let max_layers = if full { None } else { Some(3) };
+
+    let grid = scenario_grid(max_layers);
+    let cache_path = std::env::temp_dir()
+        .join(format!("lagom_fig7_campaign_cache_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&cache_path);
+
+    // Pass 1: everything measured.
+    let cache = ResultCache::open(&cache_path);
+    let config = CampaignConfig::default();
+    let r1 = run_campaign(&grid, &config, &cache);
+    cache.save().expect("persist campaign cache");
+    let lb = Leaderboard::from_result(&r1);
+    let t = lb.table();
+    t.print();
+    save_table(&t);
+    println!(
+        "\npass 1: {} scenarios on {} threads in {:.2}s ({} measured, {} cached)",
+        r1.outcomes.len(),
+        r1.threads,
+        r1.wall_secs,
+        r1.cache_misses,
+        r1.cache_hits
+    );
+    assert_eq!(r1.cache_misses, grid.len() as u64, "cold cache measures everything");
+
+    // Pass 2: a fresh cache handle over the persisted file — every
+    // scenario must come back as a hit with identical numbers.
+    let cache2 = ResultCache::open(&cache_path);
+    let r2 = run_campaign(&grid, &config, &cache2);
+    println!(
+        "pass 2: {} hits / {} misses in {:.2}s (cache replay)",
+        r2.cache_hits, r2.cache_misses, r2.wall_secs
+    );
+    assert_eq!(r2.cache_hits, grid.len() as u64, "warm cache serves every scenario");
+    assert_eq!(r2.cache_misses, 0);
+    for (a, b) in r1.outcomes.iter().zip(&r2.outcomes) {
+        assert_eq!(a.id, b.id);
+        assert!((a.lagom_iter - b.lagom_iter).abs() < 1e-15, "replay is bit-stable");
+    }
+
+    // Shape checks, per the paper's minimum bar: Lagom never meaningfully
+    // loses to NCCL anywhere on the grid, and wins overall.
+    for o in &r1.outcomes {
+        assert!(
+            o.lagom_vs_nccl > 0.97,
+            "{}: Lagom {:.3}x must not lose to NCCL",
+            o.id,
+            o.lagom_vs_nccl
+        );
+    }
+    assert!(lb.geomean_lagom_vs_nccl > 1.0, "Lagom wins the grid overall");
+    println!(
+        "geomean Lagom vs NCCL {:.3}x, vs AutoCCL {:.3}x across {} scenarios",
+        lb.geomean_lagom_vs_nccl,
+        lb.geomean_lagom_vs_autoccl,
+        lb.rows.len()
+    );
+
+    let _ = std::fs::remove_file(&cache_path);
+}

@@ -1,0 +1,429 @@
+//! Content-hashed, file-backed result cache for campaign scenarios.
+//!
+//! The key fingerprints everything that determines a scenario's outcome:
+//! the cluster hardware (GPU + topology, by content, not by name), the
+//! model architecture, the parallelization, the tunable [`ParamSpace`],
+//! and the campaign seed. Two scenarios with identical content share one
+//! entry no matter how they were labelled; any drift in a spec changes
+//! the key and transparently invalidates the entry.
+
+use crate::comm::ParamSpace;
+use crate::hw::{ClusterSpec, LinkSpec};
+use crate::models::ModelSpec;
+use crate::parallel::{Parallelism, Workload};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Incremental FNV-1a (64-bit) content hasher. Not cryptographic — it only
+/// needs to be stable across runs and sensitive to every pushed field.
+#[derive(Debug, Clone)]
+pub struct Fingerprint {
+    state: u64,
+}
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fingerprint {
+    pub fn new() -> Fingerprint {
+        Fingerprint { state: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn push_u64(&mut self, v: u64) {
+        self.push_bytes(&v.to_le_bytes());
+    }
+
+    pub fn push_f64(&mut self, v: f64) {
+        self.push_bytes(&v.to_bits().to_le_bytes());
+    }
+
+    /// Length-prefixed so `("ab","c")` and `("a","bc")` hash differently.
+    pub fn push_str(&mut self, s: &str) {
+        self.push_u64(s.len() as u64);
+        self.push_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Content hash identifying one scenario's tuning problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey(u64);
+
+fn push_link(fp: &mut Fingerprint, link: &LinkSpec) {
+    fp.push_str(link.kind.as_str());
+    fp.push_f64(link.bandwidth);
+    fp.push_f64(link.latency);
+}
+
+fn push_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
+    let gpu = cluster.gpu();
+    fp.push_u64(gpu.sms as u64);
+    fp.push_f64(gpu.mem_bw);
+    fp.push_f64(gpu.peak_flops);
+    fp.push_u64(gpu.l2_bytes);
+    fp.push_u64(gpu.max_tb_per_sm as u64);
+    fp.push_u64(gpu.max_threads_per_sm as u64);
+    fp.push_u64(gpu.smem_per_sm);
+    fp.push_f64(gpu.launch_overhead);
+    fp.push_u64(cluster.node.gpus as u64);
+    fp.push_u64(cluster.topology.gpus_per_node as u64);
+    fp.push_u64(cluster.topology.nodes as u64);
+    push_link(fp, &cluster.topology.intra);
+    match &cluster.topology.inter {
+        None => fp.push_u64(0),
+        Some(l) => {
+            fp.push_u64(1);
+            push_link(fp, l);
+        }
+    }
+}
+
+fn push_model(fp: &mut Fingerprint, m: &ModelSpec) {
+    fp.push_str(&m.name);
+    fp.push_u64(m.layers as u64);
+    fp.push_u64(m.d_model as u64);
+    fp.push_u64(m.heads as u64);
+    fp.push_u64(m.d_ff as u64);
+    fp.push_u64(m.vocab as u64);
+    fp.push_u64(m.seq as u64);
+    fp.push_u64(m.dtype_bytes as u64);
+    fp.push_u64(m.gated_ffn as u64);
+    match m.moe {
+        None => fp.push_u64(0),
+        Some(moe) => {
+            fp.push_u64(1);
+            fp.push_u64(moe.experts as u64);
+            fp.push_u64(moe.top_k as u64);
+            fp.push_u64(moe.d_ff_expert as u64);
+            fp.push_u64(moe.shared_experts as u64);
+        }
+    }
+}
+
+fn push_parallelism(fp: &mut Fingerprint, par: &Parallelism) {
+    match *par {
+        Parallelism::Fsdp { world } => {
+            fp.push_str("fsdp");
+            fp.push_u64(world as u64);
+        }
+        Parallelism::TpDp { tp, dp } => {
+            fp.push_str("tpdp");
+            fp.push_u64(tp as u64);
+            fp.push_u64(dp as u64);
+        }
+        Parallelism::Ep { ep } => {
+            fp.push_str("ep");
+            fp.push_u64(ep as u64);
+        }
+        Parallelism::Dp { world } => {
+            fp.push_str("dp");
+            fp.push_u64(world as u64);
+        }
+        Parallelism::Pp { stages, microbatches } => {
+            fp.push_str("pp");
+            fp.push_u64(stages as u64);
+            fp.push_u64(microbatches as u64);
+        }
+    }
+}
+
+fn push_space(fp: &mut Fingerprint, space: &ParamSpace) {
+    fp.push_u64(space.nc_min as u64);
+    fp.push_u64(space.nc_max as u64);
+    fp.push_u64(space.nt_ladder.len() as u64);
+    for &nt in &space.nt_ladder {
+        fp.push_u64(nt as u64);
+    }
+    fp.push_u64(space.c_min);
+    fp.push_u64(space.c_max);
+    fp.push_u64(space.c_step);
+}
+
+impl CacheKey {
+    /// Fingerprint `(cluster, model, parallelism, ParamSpace)` content plus
+    /// batch sizes and the campaign seed.
+    pub fn of(cluster: &ClusterSpec, w: &Workload, space: &ParamSpace, seed: u64) -> CacheKey {
+        let mut fp = Fingerprint::new();
+        push_cluster(&mut fp, cluster);
+        push_model(&mut fp, &w.model);
+        push_parallelism(&mut fp, &w.par);
+        fp.push_u64(w.mbs as u64);
+        fp.push_u64(w.gbs as u64);
+        push_space(&mut fp, space);
+        fp.push_u64(seed);
+        CacheKey(fp.finish())
+    }
+
+    pub fn raw(&self) -> u64 {
+        self.0
+    }
+
+    /// Stable string form used as the JSON map key.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// The numbers a finished scenario contributes to the leaderboard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedOutcome {
+    pub nccl_iter: f64,
+    pub autoccl_iter: f64,
+    pub lagom_iter: f64,
+    pub lagom_tuning_iterations: u64,
+    pub autoccl_tuning_iterations: u64,
+    /// Seed the measurement ran under (provenance).
+    pub seed: u64,
+}
+
+impl CachedOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nccl_iter", Json::num(self.nccl_iter)),
+            ("autoccl_iter", Json::num(self.autoccl_iter)),
+            ("lagom_iter", Json::num(self.lagom_iter)),
+            ("lagom_tuning_iterations", Json::num(self.lagom_tuning_iterations as f64)),
+            ("autoccl_tuning_iterations", Json::num(self.autoccl_tuning_iterations as f64)),
+            // Hex string: a full-range u64 does not survive the f64 JSON
+            // number type (53-bit significand).
+            ("seed", Json::str(format!("{:016x}", self.seed))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<CachedOutcome> {
+        Some(CachedOutcome {
+            nccl_iter: j.get("nccl_iter")?.as_f64()?,
+            autoccl_iter: j.get("autoccl_iter")?.as_f64()?,
+            lagom_iter: j.get("lagom_iter")?.as_f64()?,
+            lagom_tuning_iterations: j.get("lagom_tuning_iterations")?.as_u64()?,
+            autoccl_tuning_iterations: j.get("autoccl_tuning_iterations")?.as_u64()?,
+            seed: u64::from_str_radix(j.get("seed")?.as_str()?, 16).ok()?,
+        })
+    }
+}
+
+/// Thread-safe scenario-result cache, optionally persisted to a JSON file
+/// so a second campaign invocation is free.
+pub struct ResultCache {
+    path: Option<PathBuf>,
+    entries: Mutex<BTreeMap<String, CachedOutcome>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultCache {
+    /// Purely in-memory cache (tests, one-shot runs).
+    pub fn in_memory() -> ResultCache {
+        ResultCache {
+            path: None,
+            entries: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// File-backed cache: loads existing entries if the file parses, and
+    /// [`ResultCache::save`] writes them back. A missing or corrupt file
+    /// simply starts empty — the cache is an accelerator, never a failure.
+    pub fn open(path: impl Into<PathBuf>) -> ResultCache {
+        let path = path.into();
+        let mut entries = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(doc) = Json::parse(&text) {
+                if let Some(Json::Obj(map)) = doc.get("entries").cloned() {
+                    for (k, v) in map {
+                        if let Some(o) = CachedOutcome::from_json(&v) {
+                            entries.insert(k, o);
+                        }
+                    }
+                }
+            }
+        }
+        ResultCache {
+            path: Some(path),
+            entries: Mutex::new(entries),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a key, counting a hit or a miss.
+    pub fn lookup(&self, key: &CacheKey) -> Option<CachedOutcome> {
+        let found = self.entries.lock().unwrap().get(&key.hex()).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    pub fn insert(&self, key: CacheKey, outcome: CachedOutcome) {
+        self.entries.lock().unwrap().insert(key.hex(), outcome);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn to_json(&self) -> Json {
+        let entries = self.entries.lock().unwrap();
+        Json::obj(vec![
+            ("schema", Json::str("lagom.campaign.cache/v1")),
+            (
+                "entries",
+                Json::Obj(entries.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+            ),
+        ])
+    }
+
+    /// Persist to the backing file (no-op for in-memory caches).
+    pub fn save(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelSpec;
+
+    fn workload() -> (ClusterSpec, Workload) {
+        let cluster = ClusterSpec::cluster_b(1);
+        let w = Workload {
+            model: ModelSpec::phi2(),
+            par: Parallelism::Fsdp { world: 8 },
+            mbs: 2,
+            gbs: 16,
+        };
+        (cluster, w)
+    }
+
+    fn outcome() -> CachedOutcome {
+        CachedOutcome {
+            nccl_iter: 0.5,
+            autoccl_iter: 0.45,
+            lagom_iter: 0.4,
+            lagom_tuning_iterations: 33,
+            autoccl_tuning_iterations: 16,
+            // Above 2^53: locks in the lossless (hex) seed serialization.
+            seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+
+    #[test]
+    fn key_is_stable_and_content_sensitive() {
+        let (cluster, w) = workload();
+        let space = ParamSpace::default();
+        let k1 = CacheKey::of(&cluster, &w, &space, 42);
+        let k2 = CacheKey::of(&cluster, &w, &space, 42);
+        assert_eq!(k1, k2, "same content, same key");
+
+        // Each component perturbs the key.
+        let mut w2 = w.clone();
+        w2.model.layers += 1;
+        assert_ne!(k1, CacheKey::of(&cluster, &w2, &space, 42), "model content");
+        let mut w3 = w.clone();
+        w3.par = Parallelism::Dp { world: 8 };
+        assert_ne!(k1, CacheKey::of(&cluster, &w3, &space, 42), "parallelism");
+        assert_ne!(
+            k1,
+            CacheKey::of(&ClusterSpec::cluster_a(1), &w, &space, 42),
+            "cluster content"
+        );
+        let mut space2 = space.clone();
+        space2.nc_max = 32;
+        assert_ne!(k1, CacheKey::of(&cluster, &w, &space2, 42), "param space");
+        assert_ne!(k1, CacheKey::of(&cluster, &w, &space, 43), "seed");
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let (cluster, w) = workload();
+        let space = ParamSpace::default();
+        let key = CacheKey::of(&cluster, &w, &space, 1);
+        let cache = ResultCache::in_memory();
+        assert!(cache.lookup(&key).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        cache.insert(key, outcome());
+        assert_eq!(cache.lookup(&key), Some(outcome()));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let path = std::env::temp_dir()
+            .join(format!("lagom_cache_rt_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let (cluster, w) = workload();
+        let key = CacheKey::of(&cluster, &w, &ParamSpace::default(), 7);
+        {
+            let cache = ResultCache::open(&path);
+            assert!(cache.is_empty());
+            cache.insert(key, outcome());
+            cache.save().unwrap();
+        }
+        let reopened = ResultCache::open(&path);
+        assert_eq!(reopened.len(), 1);
+        assert_eq!(reopened.lookup(&key), Some(outcome()));
+        assert_eq!(reopened.hits(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_file_starts_empty() {
+        let path = std::env::temp_dir()
+            .join(format!("lagom_cache_bad_{}.json", std::process::id()));
+        std::fs::write(&path, "not json at all").unwrap();
+        let cache = ResultCache::open(&path);
+        assert!(cache.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprint_order_and_boundaries_matter() {
+        let mut a = Fingerprint::new();
+        a.push_str("ab");
+        a.push_str("c");
+        let mut b = Fingerprint::new();
+        b.push_str("a");
+        b.push_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

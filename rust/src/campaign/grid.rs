@@ -1,0 +1,155 @@
+//! Scenario-grid enumeration: model zoo × parallelism × cluster class.
+
+use crate::hw::ClusterSpec;
+use crate::models::ModelSpec;
+use crate::parallel::{Parallelism, Workload};
+
+/// A parallelization-strategy family, instantiated per model/cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Bucketed-AllReduce data parallelism.
+    Dp,
+    /// Fully-sharded data parallelism (Patterns 1/2).
+    Fsdp,
+    /// 1F1B pipeline parallelism.
+    Pp,
+    /// Dual-batch expert parallelism (MoE models only).
+    Ep,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 4] =
+        [StrategyKind::Dp, StrategyKind::Fsdp, StrategyKind::Pp, StrategyKind::Ep];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StrategyKind::Dp => "dp",
+            StrategyKind::Fsdp => "fsdp",
+            StrategyKind::Pp => "pp",
+            StrategyKind::Ep => "ep",
+        }
+    }
+
+    /// Concrete [`Parallelism`] for this family on a `world`-GPU cluster,
+    /// or `None` where the combination is invalid (EP on a dense model).
+    pub fn instantiate(self, model: &ModelSpec, world: u32) -> Option<Parallelism> {
+        match self {
+            StrategyKind::Dp => Some(Parallelism::Dp { world }),
+            StrategyKind::Fsdp => Some(Parallelism::Fsdp { world }),
+            StrategyKind::Pp => {
+                let stages = (world / 2).clamp(2, 4);
+                Some(Parallelism::Pp { stages, microbatches: 8 })
+            }
+            StrategyKind::Ep => model.moe.map(|_| Parallelism::Ep { ep: world.min(8) }),
+        }
+    }
+}
+
+/// One cell of the campaign grid: a workload pinned to a cluster.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Stable slug, e.g. `high-bw/phi-2-2b/FSDP8` (leaderboard identity).
+    pub id: String,
+    /// Bandwidth class of the cluster (`high-bw` / `low-bw`).
+    pub bw_class: String,
+    pub cluster: ClusterSpec,
+    pub workload: Workload,
+}
+
+/// The two cluster classes the paper evaluates: NVLink (cluster A,
+/// high-bandwidth) and PCIe (cluster B, low-bandwidth), one node of 8 GPUs
+/// each so every strategy family fits on both.
+pub fn campaign_clusters() -> Vec<(&'static str, ClusterSpec)> {
+    vec![("high-bw", ClusterSpec::cluster_a(1)), ("low-bw", ClusterSpec::cluster_b(1))]
+}
+
+/// Micro-batch size per model, following Table 2: wide (d ≥ 4096) models
+/// run MBS 1, the rest MBS 2.
+fn mbs_for(model: &ModelSpec) -> u32 {
+    if model.d_model >= 4096 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Enumerate the full campaign grid: every zoo model × every strategy
+/// family × every cluster class. `max_layers` truncates model depth
+/// (layer schedules repeat, and tuned configs are shared per unique
+/// overlap pattern, so relative speedups are depth-insensitive).
+pub fn scenario_grid(max_layers: Option<u32>) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    for (bw_class, cluster) in campaign_clusters() {
+        let world = cluster.world_size();
+        for mut model in ModelSpec::all() {
+            if let Some(cap) = max_layers {
+                model.layers = model.layers.min(cap.max(1));
+            }
+            for kind in StrategyKind::ALL {
+                let Some(par) = kind.instantiate(&model, world) else {
+                    continue;
+                };
+                let mbs = mbs_for(&model);
+                let workload = Workload { model: model.clone(), par, mbs, gbs: 2 * world * mbs };
+                out.push(Scenario {
+                    id: format!("{bw_class}/{}/{par}", model.name.to_lowercase()),
+                    bw_class: bw_class.to_string(),
+                    cluster: cluster.clone(),
+                    workload,
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_zoo_times_strategies_times_clusters() {
+        let g = scenario_grid(Some(2));
+        // 5 models × 4 strategies × 2 clusters, minus EP on the 3 dense
+        // models on both clusters.
+        assert_eq!(g.len(), 5 * 4 * 2 - 3 * 2);
+        let moe_ep = g
+            .iter()
+            .filter(|s| matches!(s.workload.par, Parallelism::Ep { .. }))
+            .count();
+        assert_eq!(moe_ep, 4, "EP only for the two MoE models, per cluster");
+        assert!(g.iter().any(|s| s.bw_class == "high-bw"));
+        assert!(g.iter().any(|s| s.bw_class == "low-bw"));
+    }
+
+    #[test]
+    fn scenario_ids_unique_and_stable() {
+        let g1 = scenario_grid(Some(2));
+        let g2 = scenario_grid(Some(2));
+        let ids1: Vec<&str> = g1.iter().map(|s| s.id.as_str()).collect();
+        let ids2: Vec<&str> = g2.iter().map(|s| s.id.as_str()).collect();
+        assert_eq!(ids1, ids2, "enumeration order is deterministic");
+        let mut dedup = ids1.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids1.len(), "ids are unique");
+    }
+
+    #[test]
+    fn every_scenario_fits_its_cluster_and_builds() {
+        use crate::parallel::build_schedule;
+        for s in scenario_grid(Some(1)) {
+            assert!(s.workload.par.world() <= s.cluster.world_size(), "{}", s.id);
+            let sched = build_schedule(&s.workload, &s.cluster);
+            assert!(sched.num_comms() > 0, "{} has no communication to tune", s.id);
+        }
+    }
+
+    #[test]
+    fn layer_cap_applied() {
+        let g = scenario_grid(Some(3));
+        assert!(g.iter().all(|s| s.workload.model.layers <= 3));
+        let full = scenario_grid(None);
+        assert!(full.iter().any(|s| s.workload.model.layers >= 16));
+    }
+}

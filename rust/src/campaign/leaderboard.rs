@@ -1,0 +1,206 @@
+//! Deterministic leaderboard over campaign outcomes: scenarios ranked by
+//! Lagom's speedup vs the NCCL baseline, with per-strategy iteration
+//! times and tuning costs (the paper's Fig 7 tables as one report).
+
+use super::runner::{CampaignResult, ScenarioOutcome};
+use crate::bench::Table;
+use crate::util::json::Json;
+use crate::util::stats::geomean;
+
+/// Ranked campaign report.
+#[derive(Debug)]
+pub struct Leaderboard {
+    /// Outcomes sorted by `lagom_vs_nccl` descending; ties broken by
+    /// scenario id, so the ordering is fully deterministic.
+    pub rows: Vec<ScenarioOutcome>,
+    pub geomean_lagom_vs_nccl: f64,
+    pub geomean_lagom_vs_autoccl: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub threads: usize,
+    pub wall_secs: f64,
+}
+
+impl Leaderboard {
+    pub fn from_result(result: &CampaignResult) -> Leaderboard {
+        let mut rows = result.outcomes.clone();
+        rows.sort_by(|a, b| {
+            b.lagom_vs_nccl
+                .partial_cmp(&a.lagom_vs_nccl)
+                .expect("speedups are finite")
+                .then_with(|| a.id.cmp(&b.id))
+        });
+        let vs_nccl: Vec<f64> = rows.iter().map(|r| r.lagom_vs_nccl).collect();
+        let vs_auto: Vec<f64> = rows.iter().map(|r| r.lagom_vs_autoccl).collect();
+        Leaderboard {
+            rows,
+            geomean_lagom_vs_nccl: geomean(&vs_nccl),
+            geomean_lagom_vs_autoccl: geomean(&vs_auto),
+            cache_hits: result.cache_hits,
+            cache_misses: result.cache_misses,
+            threads: result.threads,
+            wall_secs: result.wall_secs,
+        }
+    }
+
+    /// JSON document written by `lagom campaign --out`.
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .enumerate()
+            .map(|(rank, r)| {
+                Json::obj(vec![
+                    ("rank", Json::num((rank + 1) as f64)),
+                    ("id", Json::str(r.id.clone())),
+                    ("bw_class", Json::str(r.bw_class.clone())),
+                    ("cluster", Json::str(r.cluster.clone())),
+                    ("workload", Json::str(r.workload.clone())),
+                    (
+                        "iter_time_s",
+                        Json::obj(vec![
+                            ("nccl", Json::num(r.nccl_iter)),
+                            ("autoccl", Json::num(r.autoccl_iter)),
+                            ("lagom", Json::num(r.lagom_iter)),
+                        ]),
+                    ),
+                    (
+                        "speedup",
+                        Json::obj(vec![
+                            ("lagom_vs_nccl", Json::num(r.lagom_vs_nccl)),
+                            ("lagom_vs_autoccl", Json::num(r.lagom_vs_autoccl)),
+                            ("autoccl_vs_nccl", Json::num(r.autoccl_vs_nccl)),
+                        ]),
+                    ),
+                    (
+                        "tuning_iterations",
+                        Json::obj(vec![
+                            ("lagom", Json::num(r.lagom_tuning_iterations as f64)),
+                            ("autoccl", Json::num(r.autoccl_tuning_iterations as f64)),
+                        ]),
+                    ),
+                    ("cached", Json::Bool(r.cached)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("lagom.campaign.leaderboard/v1")),
+            ("scenarios", Json::num(self.rows.len() as f64)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache_hits as f64)),
+                    ("misses", Json::num(self.cache_misses as f64)),
+                ]),
+            ),
+            ("threads", Json::num(self.threads as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            (
+                "geomean",
+                Json::obj(vec![
+                    ("lagom_vs_nccl", Json::num(self.geomean_lagom_vs_nccl)),
+                    ("lagom_vs_autoccl", Json::num(self.geomean_lagom_vs_autoccl)),
+                ]),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Printable table (the CLI's stdout report).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Campaign leaderboard — Lagom speedup per scenario",
+            &[
+                "rank",
+                "scenario",
+                "NCCL iter",
+                "AutoCCL iter",
+                "Lagom iter",
+                "Lagom vs NCCL",
+                "Lagom vs AutoCCL",
+                "cached",
+            ],
+        );
+        for (rank, r) in self.rows.iter().enumerate() {
+            t.row(vec![
+                (rank + 1).to_string(),
+                r.id.clone(),
+                crate::util::units::fmt_secs(r.nccl_iter),
+                crate::util::units::fmt_secs(r.autoccl_iter),
+                crate::util::units::fmt_secs(r.lagom_iter),
+                format!("{:.2}x", r.lagom_vs_nccl),
+                format!("{:.2}x", r.lagom_vs_autoccl),
+                if r.cached { "yes".into() } else { "no".into() },
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: &str, nccl: f64, lagom: f64) -> ScenarioOutcome {
+        ScenarioOutcome {
+            id: id.to_string(),
+            bw_class: "high-bw".into(),
+            cluster: "A".into(),
+            workload: id.to_string(),
+            nccl_iter: nccl,
+            autoccl_iter: nccl * 0.95,
+            lagom_iter: lagom,
+            lagom_vs_nccl: nccl / lagom,
+            lagom_vs_autoccl: nccl * 0.95 / lagom,
+            autoccl_vs_nccl: 1.0 / 0.95,
+            lagom_tuning_iterations: 10,
+            autoccl_tuning_iterations: 5,
+            cached: false,
+        }
+    }
+
+    fn result(outcomes: Vec<ScenarioOutcome>) -> CampaignResult {
+        CampaignResult {
+            outcomes,
+            cache_hits: 1,
+            cache_misses: 2,
+            threads: 4,
+            wall_secs: 0.5,
+        }
+    }
+
+    #[test]
+    fn rows_sorted_by_speedup_then_id() {
+        let r = result(vec![
+            outcome("b/slow", 1.0, 0.99),
+            outcome("a/fast", 1.0, 0.5),
+            outcome("a/also-fast", 1.0, 0.5),
+        ]);
+        let lb = Leaderboard::from_result(&r);
+        let ids: Vec<&str> = lb.rows.iter().map(|r| r.id.as_str()).collect();
+        assert_eq!(ids, vec!["a/also-fast", "a/fast", "b/slow"]);
+        assert!(lb.geomean_lagom_vs_nccl > 1.0);
+    }
+
+    #[test]
+    fn json_round_trips_with_ranks() {
+        let r = result(vec![outcome("x", 1.0, 0.8), outcome("y", 1.0, 0.9)]);
+        let lb = Leaderboard::from_result(&r);
+        let doc = Json::parse(&lb.to_json().to_pretty()).unwrap();
+        assert_eq!(doc.get("scenarios").unwrap().as_u64(), Some(2));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("rank").unwrap().as_u64(), Some(1));
+        assert_eq!(rows[0].get("id").unwrap().as_str(), Some("x"));
+        let sp = rows[0].get("speedup").unwrap();
+        assert!(sp.get("lagom_vs_nccl").unwrap().as_f64().unwrap() > 1.2);
+        assert_eq!(doc.get("cache").unwrap().get("hits").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn table_has_one_row_per_scenario() {
+        let r = result(vec![outcome("x", 1.0, 0.8)]);
+        let t = Leaderboard::from_result(&r).table();
+        assert_eq!(t.rows.len(), 1);
+        assert!(t.render().contains("1.25x"));
+    }
+}

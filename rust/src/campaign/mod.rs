@@ -1,0 +1,30 @@
+//! Multi-scenario tuning campaigns.
+//!
+//! Lagom's search is linear in the number of communications (§3.1), which
+//! is exactly what makes sweeping a whole scenario space tractable: every
+//! model in the Table-2 zoo × parallelization strategy (`dp`/`fsdp`/`pp`/
+//! `ep`) × cluster class (high-bandwidth NVLink vs low-bandwidth PCIe).
+//! This module runs that grid end-to-end:
+//!
+//! * [`grid`] — enumerate the scenario space ([`Scenario`], one workload on
+//!   one cluster), skipping invalid combinations (EP needs a MoE model).
+//! * [`runner`] — execute scenarios **in parallel across a thread pool**
+//!   (each scenario tunes NCCL/AutoCCL/Lagom via
+//!   [`crate::report::compare_strategies_with_space`] on its own
+//!   simulator instance).
+//! * [`cache`] — a content-hashed result cache keyed by `(cluster, model,
+//!   parallelism, ParamSpace, seed)`, persisted as JSON, so repeated
+//!   scenarios are free across invocations.
+//! * [`leaderboard`] — deterministic ranking of scenarios by Lagom's
+//!   speedup over the NCCL baseline (the Fig-7 tables, as one report),
+//!   exported as JSON via `lagom campaign --out leaderboard.json`.
+
+pub mod cache;
+pub mod grid;
+pub mod leaderboard;
+pub mod runner;
+
+pub use cache::{CacheKey, CachedOutcome, Fingerprint, ResultCache};
+pub use grid::{campaign_clusters, scenario_grid, Scenario, StrategyKind};
+pub use leaderboard::Leaderboard;
+pub use runner::{run_campaign, CampaignConfig, CampaignResult, ScenarioOutcome};

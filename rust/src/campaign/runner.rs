@@ -1,0 +1,243 @@
+//! Parallel campaign executor: a worklist of scenarios drained by a
+//! thread pool, each scenario measured once (or served from the cache).
+
+use super::cache::{CacheKey, CachedOutcome, ResultCache};
+use super::grid::Scenario;
+use crate::comm::ParamSpace;
+use crate::report::compare_strategies_with_space;
+use crate::util::prng::splitmix64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Campaign-wide knobs.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    /// Base seed; each scenario derives an independent stream from it, so
+    /// results do not depend on thread scheduling.
+    pub seed: u64,
+    /// Worker threads; `0` = one per available core (capped by the grid).
+    pub jobs: usize,
+    /// Tunable parameter space: both part of the cache key and the space
+    /// the AutoCCL/Lagom tuners actually search.
+    pub space: ParamSpace,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig { seed: 42, jobs: 0, space: ParamSpace::default() }
+    }
+}
+
+/// One scenario's leaderboard entry.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub id: String,
+    pub bw_class: String,
+    pub cluster: String,
+    pub workload: String,
+    pub nccl_iter: f64,
+    pub autoccl_iter: f64,
+    pub lagom_iter: f64,
+    pub lagom_vs_nccl: f64,
+    pub lagom_vs_autoccl: f64,
+    pub autoccl_vs_nccl: f64,
+    pub lagom_tuning_iterations: u64,
+    pub autoccl_tuning_iterations: u64,
+    /// Served from the result cache instead of being re-measured.
+    pub cached: bool,
+}
+
+/// A finished campaign, outcomes in grid order.
+#[derive(Debug)]
+pub struct CampaignResult {
+    pub outcomes: Vec<ScenarioOutcome>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub threads: usize,
+    pub wall_secs: f64,
+}
+
+/// Deterministic per-scenario seed: independent of worker scheduling,
+/// distinct per scenario content, stable across invocations.
+fn scenario_seed(base: u64, key: CacheKey) -> u64 {
+    let mut s = base ^ key.raw().rotate_left(17);
+    splitmix64(&mut s)
+}
+
+/// Measure one scenario: the Fig 7 protocol
+/// ([`crate::report::compare_strategies_with_space`]) with the campaign's
+/// [`ParamSpace`] plumbed into the searching tuners — it is part of the
+/// cache key, so it must be part of the measurement too.
+fn measure(s: &Scenario, space: &ParamSpace, seed: u64) -> CachedOutcome {
+    let c = compare_strategies_with_space(&s.workload, &s.cluster, seed, space);
+    CachedOutcome {
+        nccl_iter: c.row("NCCL").iter_time,
+        autoccl_iter: c.row("AutoCCL").iter_time,
+        lagom_iter: c.row("Lagom").iter_time,
+        lagom_tuning_iterations: c.row("Lagom").tuning_iterations,
+        autoccl_tuning_iterations: c.row("AutoCCL").tuning_iterations,
+        seed,
+    }
+}
+
+fn outcome_of(s: &Scenario, n: &CachedOutcome, cached: bool) -> ScenarioOutcome {
+    ScenarioOutcome {
+        id: s.id.clone(),
+        bw_class: s.bw_class.clone(),
+        cluster: s.cluster.name.clone(),
+        workload: s.workload.label(),
+        nccl_iter: n.nccl_iter,
+        autoccl_iter: n.autoccl_iter,
+        lagom_iter: n.lagom_iter,
+        lagom_vs_nccl: n.nccl_iter / n.lagom_iter,
+        lagom_vs_autoccl: n.autoccl_iter / n.lagom_iter,
+        autoccl_vs_nccl: n.nccl_iter / n.autoccl_iter,
+        lagom_tuning_iterations: n.lagom_tuning_iterations,
+        autoccl_tuning_iterations: n.autoccl_tuning_iterations,
+        cached,
+    }
+}
+
+fn effective_jobs(requested: usize, scenarios: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let jobs = if requested == 0 { auto } else { requested };
+    jobs.clamp(1, scenarios.max(1))
+}
+
+/// Run every scenario of the grid across a thread pool, filling and
+/// consulting `cache`. Outcomes come back in grid order regardless of
+/// which worker finished first.
+pub fn run_campaign(
+    scenarios: &[Scenario],
+    config: &CampaignConfig,
+    cache: &ResultCache,
+) -> CampaignResult {
+    let t0 = Instant::now();
+    let hits0 = cache.hits();
+    let misses0 = cache.misses();
+    let threads = effective_jobs(config.jobs, scenarios.len());
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ScenarioOutcome>>> =
+        scenarios.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= scenarios.len() {
+                    break;
+                }
+                let s = &scenarios[i];
+                let key = CacheKey::of(&s.cluster, &s.workload, &config.space, config.seed);
+                let (numbers, cached) = match cache.lookup(&key) {
+                    Some(n) => (n, true),
+                    None => {
+                        let n = measure(s, &config.space, scenario_seed(config.seed, key));
+                        cache.insert(key, n.clone());
+                        (n, false)
+                    }
+                };
+                *slots[i].lock().unwrap() = Some(outcome_of(s, &numbers, cached));
+            });
+        }
+    });
+
+    let outcomes = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worklist covered every scenario"))
+        .collect();
+    CampaignResult {
+        outcomes,
+        cache_hits: cache.hits() - hits0,
+        cache_misses: cache.misses() - misses0,
+        threads,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::grid::scenario_grid;
+    use super::*;
+
+    fn tiny_grid() -> Vec<Scenario> {
+        // First 3 scenarios at 1 layer: fast enough for unit tests.
+        scenario_grid(Some(1)).into_iter().take(3).collect()
+    }
+
+    #[test]
+    fn outcomes_in_grid_order_with_consistent_speedups() {
+        let grid = tiny_grid();
+        let cache = ResultCache::in_memory();
+        let r = run_campaign(&grid, &CampaignConfig::default(), &cache);
+        assert_eq!(r.outcomes.len(), grid.len());
+        for (s, o) in grid.iter().zip(&r.outcomes) {
+            assert_eq!(s.id, o.id, "grid order preserved");
+            assert!(o.nccl_iter > 0.0 && o.lagom_iter > 0.0);
+            let expect = o.nccl_iter / o.lagom_iter;
+            assert!((o.lagom_vs_nccl - expect).abs() < 1e-12);
+            assert!(!o.cached);
+        }
+        assert_eq!(r.cache_misses, grid.len() as u64);
+        assert_eq!(r.cache_hits, 0);
+        assert!(r.threads >= 1);
+    }
+
+    #[test]
+    fn second_run_is_fully_cached_and_identical() {
+        let grid = tiny_grid();
+        let cache = ResultCache::in_memory();
+        let cfg = CampaignConfig::default();
+        let r1 = run_campaign(&grid, &cfg, &cache);
+        let r2 = run_campaign(&grid, &cfg, &cache);
+        assert_eq!(r2.cache_hits, grid.len() as u64, "every scenario cached");
+        assert_eq!(r2.cache_misses, 0);
+        for (a, b) in r1.outcomes.iter().zip(&r2.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.lagom_iter, b.lagom_iter, "cached numbers identical");
+            assert!(b.cached);
+        }
+    }
+
+    #[test]
+    fn single_thread_matches_parallel_run() {
+        let grid = tiny_grid();
+        let serial = run_campaign(
+            &grid,
+            &CampaignConfig { jobs: 1, ..CampaignConfig::default() },
+            &ResultCache::in_memory(),
+        );
+        let parallel = run_campaign(
+            &grid,
+            &CampaignConfig { jobs: 3, ..CampaignConfig::default() },
+            &ResultCache::in_memory(),
+        );
+        assert_eq!(serial.threads, 1);
+        for (a, b) in serial.outcomes.iter().zip(&parallel.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.lagom_iter, b.lagom_iter,
+                "per-scenario seeds make results scheduling-independent"
+            );
+        }
+    }
+
+    #[test]
+    fn scenario_seeds_differ_across_scenarios() {
+        let grid = tiny_grid();
+        let cfg = CampaignConfig::default();
+        let seeds: Vec<u64> = grid
+            .iter()
+            .map(|s| {
+                let key = CacheKey::of(&s.cluster, &s.workload, &cfg.space, cfg.seed);
+                scenario_seed(cfg.seed, key)
+            })
+            .collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len());
+    }
+}

@@ -15,4 +15,4 @@ pub mod topology;
 
 pub use cluster::{ClusterSpec, NodeSpec};
 pub use gpu::GpuSpec;
-pub use topology::{LinkKind, Topology};
+pub use topology::{LinkKind, LinkSpec, Topology};

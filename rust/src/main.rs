@@ -5,10 +5,16 @@
 //! * `tune` — tune one workload with a chosen strategy, print configs.
 //! * `compare` — NCCL vs AutoCCL vs Lagom on a workload (Fig 7 protocol).
 //! * `breakdown` — computation- vs communication-bound split (Fig 8).
+//! * `campaign` — the full scenario grid in parallel, cached, ranked.
 //! * `trace` — export a chrome trace of the tuned schedule.
 //! * `train` — end-to-end training on the AOT artifacts (see EXPERIMENTS.md).
 
+// Mirrors the allowance in lib.rs: style/complexity lints churn across
+// clippy releases; correctness/suspicious/perf stay enforced.
+#![allow(clippy::style, clippy::complexity)]
+
 use lagom::bench::Table;
+use lagom::campaign::{run_campaign, scenario_grid, CampaignConfig, Leaderboard, ResultCache};
 use lagom::cli::Args;
 use lagom::comm::CommConfig;
 use lagom::hw::ClusterSpec;
@@ -37,9 +43,10 @@ fn main() {
         "tune" => cmd_tune(&args),
         "compare" => cmd_compare(&args),
         "breakdown" => cmd_breakdown(&args),
+        "campaign" => cmd_campaign(&args),
         "trace" => cmd_trace(&args),
         "train" => cmd_train(&args),
-        "help" | _ => {
+        _ => {
             print_help();
             0
         }
@@ -58,6 +65,9 @@ COMMANDS:
   tune      --model M --par P       tune one workload, print chosen configs
   compare   --model M --par P       NCCL vs AutoCCL vs Lagom iteration times
   breakdown --model M --par P       comp- vs comm-bound time split
+  campaign  --out leaderboard.json  full model-zoo x {dp,fsdp,pp,ep} x
+                                    {high-bw,low-bw} grid in parallel, with
+                                    a persistent result cache
   trace     --model M --par P       write chrome trace of tuned schedule
   train     --steps N               end-to-end training on AOT artifacts
 
@@ -67,6 +77,12 @@ COMMON OPTIONS:
   --par fsdp|tp|ep|dp               parallelism (default fsdp)
   --strategy lagom|autoccl|nccl|liger (tune only; default lagom)
   --mbs N  --seed N  --out PATH  --layers N (truncate model for speed)
+
+CAMPAIGN OPTIONS:
+  --out PATH      leaderboard JSON (default target/leaderboard.json)
+  --cache PATH    result cache file (default target/campaign_cache.json)
+  --jobs N        worker threads (default: one per core)
+  --layers N      per-model depth cap (default 4; 0 = full depth)
 "
     );
 }
@@ -129,7 +145,7 @@ fn cmd_workloads(_args: &Args) -> i32 {
 fn cmd_tune(args: &Args) -> i32 {
     let cluster = run_or_exit(cluster_of(args));
     let w = run_or_exit(parse_workload(args, &cluster));
-    let seed = run_or_exit(args.get_u64("seed", 42).map_err(|e| e));
+    let seed = run_or_exit(args.get_u64("seed", 42));
     let schedule = build_schedule(&w, &cluster);
     println!(
         "workload {} on {}: {} groups, {} comms",
@@ -211,6 +227,52 @@ fn cmd_breakdown(args: &Args) -> i32 {
         ]);
     }
     t.print();
+    0
+}
+
+fn cmd_campaign(args: &Args) -> i32 {
+    let seed = run_or_exit(args.get_u64("seed", 42));
+    let jobs = run_or_exit(args.get_u64("jobs", 0)) as usize;
+    let layers = run_or_exit(args.get_u64("layers", 4)) as u32;
+    let max_layers = if layers == 0 { None } else { Some(layers) };
+    let out = args.get_or("out", "target/leaderboard.json").to_string();
+    let cache_path = args.get_or("cache", "target/campaign_cache.json").to_string();
+
+    let grid = scenario_grid(max_layers);
+    let cache = ResultCache::open(&cache_path);
+    let preloaded = cache.len();
+    let config = CampaignConfig { seed, jobs, ..CampaignConfig::default() };
+    println!(
+        "campaign: {} scenarios (model zoo x dp/fsdp/pp/ep x high-bw/low-bw), {} cached entries preloaded",
+        grid.len(),
+        preloaded
+    );
+    let result = run_campaign(&grid, &config, &cache);
+    let lb = Leaderboard::from_result(&result);
+    lb.table().print();
+    println!(
+        "\n{} scenarios on {} threads in {}: {} measured, {} from cache",
+        result.outcomes.len(),
+        result.threads,
+        lagom::util::units::fmt_secs(result.wall_secs),
+        result.cache_misses,
+        result.cache_hits
+    );
+    println!(
+        "geomean speedup — Lagom vs NCCL: {:.3}x, Lagom vs AutoCCL: {:.3}x",
+        lb.geomean_lagom_vs_nccl, lb.geomean_lagom_vs_autoccl
+    );
+    if let Err(e) = cache.save() {
+        eprintln!("warning: could not persist cache {cache_path}: {e}");
+    }
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    if let Err(e) = std::fs::write(&out, lb.to_json().to_pretty()) {
+        eprintln!("error writing {out}: {e}");
+        return 1;
+    }
+    println!("wrote leaderboard to {out} (cache: {cache_path})");
     0
 }
 

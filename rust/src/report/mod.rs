@@ -3,7 +3,7 @@
 //! times + speedups the way the paper's evaluation section does.
 
 use crate::bench::Table;
-use crate::comm::CommConfig;
+use crate::comm::{CommConfig, ParamSpace};
 use crate::graph::IterationSchedule;
 use crate::hw::ClusterSpec;
 use crate::parallel::{build_schedule, Workload};
@@ -60,14 +60,28 @@ pub fn evaluate(
 
 /// Run NCCL / AutoCCL / Lagom on one workload (the Fig 7 protocol).
 pub fn compare_strategies(w: &Workload, cluster: &ClusterSpec, seed: u64) -> Comparison {
+    compare_strategies_with_space(w, cluster, seed, &ParamSpace::default())
+}
+
+/// The Fig 7 protocol with an explicit tunable space for the searching
+/// tuners (used by the campaign runner, where the space is part of the
+/// result-cache key). NCCL is the static-defaults baseline: no search,
+/// no space.
+pub fn compare_strategies_with_space(
+    w: &Workload,
+    cluster: &ClusterSpec,
+    seed: u64,
+    space: &ParamSpace,
+) -> Comparison {
     let schedule = build_schedule(w, cluster);
     let micro = w.micro_steps();
 
-    let mut tuners: Vec<Box<dyn Tuner>> = vec![
-        Box::new(NcclTuner::new(cluster.clone())),
-        Box::new(AutoCclTuner::new(cluster.clone())),
-        Box::new(LagomTuner::new(cluster.clone())),
-    ];
+    let mut autoccl = AutoCclTuner::new(cluster.clone());
+    autoccl.space = space.clone();
+    let mut lagom = LagomTuner::new(cluster.clone());
+    lagom.space = space.clone();
+    let mut tuners: Vec<Box<dyn Tuner>> =
+        vec![Box::new(NcclTuner::new(cluster.clone())), Box::new(autoccl), Box::new(lagom)];
 
     let mut rows = Vec::new();
     for t in tuners.iter_mut() {

@@ -1,0 +1,149 @@
+//! Real PJRT backend (`pjrt` feature): compile HLO text with an `xla`
+//! PJRT-CPU client and execute it. Requires the `xla` bindings crate,
+//! which must be supplied outside the offline crate set (see DESIGN.md).
+
+use super::ARTIFACTS_DIR;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor literal type used across the runtime/trainer API.
+pub type Literal = xla::Literal;
+
+/// A loaded, compiled computation.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; the AOT path lowers with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into per-output literals.
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, Executable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this image).
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            exes: HashMap::new(),
+            artifacts_dir: PathBuf::from(ARTIFACTS_DIR),
+        })
+    }
+
+    pub fn with_artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Runtime {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Path of a named artifact (`<name>.hlo.txt` under the artifact dir).
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Whether the artifact file exists (lets examples degrade gracefully
+    /// before `make artifacts` has run).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.exes.contains_key(name) {
+            let path = self.artifact_path(name);
+            let exe = self.compile_file(name, &path)?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Compile an HLO text file into an executable without caching.
+    pub fn compile_file(&self, name: &str, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { name: name.to_string(), exe })
+    }
+
+    /// Compile HLO text from a string (tests).
+    pub fn compile_text(&self, name: &str, hlo_text: &str) -> Result<Executable> {
+        let tmp =
+            std::env::temp_dir().join(format!("lagom_hlo_{}_{}.txt", name, std::process::id()));
+        std::fs::write(&tmp, hlo_text)?;
+        let r = self.compile_file(name, &tmp);
+        let _ = std::fs::remove_file(&tmp);
+        r
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal HLO module: f32[2,2] addition, wrapped in a tuple like the
+    /// AOT path produces.
+    const ADD_HLO: &str = r#"
+HloModule add_test
+
+ENTRY main {
+  x = f32[2,2] parameter(0)
+  y = f32[2,2] parameter(1)
+  s = f32[2,2] add(x, y)
+  ROOT out = (f32[2,2]) tuple(s)
+}
+"#;
+
+    #[test]
+    fn compile_and_run_hlo_text() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        let exe = rt.compile_text("add", ADD_HLO).unwrap();
+        let x = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let y = literal_f32(&[10.0, 20.0, 30.0, 40.0], &[2, 2]).unwrap();
+        let out = exe.run(&[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![11.0, 22.0, 33.0, 44.0]);
+    }
+}

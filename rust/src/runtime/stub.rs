@@ -1,0 +1,146 @@
+//! Offline runtime backend (default build): same API as [`super::pjrt`],
+//! no `xla` dependency. Artifact discovery, path conventions and literal
+//! shape checks behave identically; compiling or executing an artifact
+//! returns a descriptive error instead, so `lagom train` and the e2e
+//! example fail with an actionable message rather than at link time.
+
+use super::ARTIFACTS_DIR;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape-only stand-in for `xla::Literal`: carries the element count so
+/// metadata checks (`element_count`, shape validation) still work.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    elems: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice (mirrors `xla::Literal::vec1`).
+    pub fn vec1<T>(data: &[T]) -> Literal {
+        Literal { elems: data.len() }
+    }
+
+    /// Reshape; the element count must match the new dims.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == self.elems, "reshape element mismatch");
+        Ok(self.clone())
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.elems
+    }
+
+    /// Host readback is impossible without a real backend.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!("reading literal data requires the `pjrt` feature")
+    }
+}
+
+/// A named computation; `run` always fails in the stub backend.
+pub struct Executable {
+    pub name: String,
+}
+
+impl Executable {
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        bail!(
+            "executing {}: lagom was built without the `pjrt` feature (see DESIGN.md §Runtime)",
+            self.name
+        )
+    }
+}
+
+/// Artifact-directory bookkeeping with no live compiler behind it.
+pub struct Runtime {
+    exes: HashMap<String, Executable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { exes: HashMap::new(), artifacts_dir: PathBuf::from(ARTIFACTS_DIR) })
+    }
+
+    pub fn with_artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Runtime {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the pjrt feature)".to_string()
+    }
+
+    /// Path of a named artifact (`<name>.hlo.txt` under the artifact dir).
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts_dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.exes.contains_key(name) {
+            let path = self.artifact_path(name);
+            let exe = self.compile_file(name, &path)?;
+            self.exes.insert(name.to_string(), exe);
+        }
+        Ok(&self.exes[name])
+    }
+
+    /// Validate the artifact file exists, then report that compilation
+    /// needs a real backend (error shape matches the pjrt impl).
+    pub fn compile_file(&self, name: &str, path: &Path) -> Result<Executable> {
+        std::fs::read_to_string(path).with_context(|| format!("parsing HLO text {path:?}"))?;
+        bail!("compiling {name}: lagom was built without the `pjrt` feature (see DESIGN.md §Runtime)")
+    }
+
+    /// Compile HLO text from a string (tests).
+    pub fn compile_text(&self, name: &str, _hlo_text: &str) -> Result<Executable> {
+        bail!("compiling {name}: lagom was built without the `pjrt` feature (see DESIGN.md §Runtime)")
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Literal::vec1(data).reshape(dims)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    Literal::vec1(data).reshape(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn execution_fails_with_actionable_error() {
+        let exe = Executable { name: "train_step".into() };
+        let err = exe.run(&[]).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+    }
+
+    #[test]
+    fn compile_text_reports_stub_backend() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.compile_text("add", "HloModule add").unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "got: {err:#}");
+    }
+
+    #[test]
+    fn literal_bookkeeping() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}

@@ -14,7 +14,7 @@
 //! Parameters travel as one flat `f32[P]` vector; packing order is owned by
 //! `python/compile/model.py`.
 
-use crate::runtime::{literal_f32, literal_i32, Runtime};
+use crate::runtime::{literal_f32, literal_i32, Literal, Runtime};
 use crate::util::json::Json;
 use crate::util::prng::Prng;
 use anyhow::{Context, Result};
@@ -110,9 +110,9 @@ pub struct Trainer {
     pub meta: TrainMeta,
     rt: Runtime,
     data: SyntheticData,
-    theta: xla::Literal,
-    m: xla::Literal,
-    v: xla::Literal,
+    theta: Literal,
+    m: Literal,
+    v: Literal,
     step: u32,
     pub history: Vec<StepRecord>,
 }
@@ -155,12 +155,14 @@ impl Trainer {
         let step_lit = literal_f32(&[self.step as f32], &[])?;
 
         let t0 = std::time::Instant::now();
+        // Resolve the executable before touching the optimizer state: a
+        // load failure must leave the trainer resumable.
+        let exe = self.rt.load("train_step")?;
         // Move the state into the call (PJRT copies internally; we re-own
         // the returned literals).
-        let theta = std::mem::replace(&mut self.theta, xla::Literal::vec1::<f32>(&[]));
-        let m = std::mem::replace(&mut self.m, xla::Literal::vec1::<f32>(&[]));
-        let v = std::mem::replace(&mut self.v, xla::Literal::vec1::<f32>(&[]));
-        let exe = self.rt.load("train_step")?;
+        let theta = std::mem::replace(&mut self.theta, Literal::vec1::<f32>(&[]));
+        let m = std::mem::replace(&mut self.m, Literal::vec1::<f32>(&[]));
+        let v = std::mem::replace(&mut self.v, Literal::vec1::<f32>(&[]));
         let mut out = exe.run(&[theta, m, v, step_lit, tokens, targets])?;
         anyhow::ensure!(out.len() == 4, "train_step must return (theta', m', v', loss)");
         let loss_lit = out.pop().unwrap();

@@ -42,15 +42,8 @@ static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 
 fn start_instant() -> Instant {
     // One process-wide origin for relative timestamps.
-    static mut START: Option<Instant> = None;
-    static INIT: std::sync::Once = std::sync::Once::new();
-    unsafe {
-        INIT.call_once(|| {
-            START = Some(Instant::now());
-        });
-        #[allow(static_mut_refs)]
-        START.unwrap()
-    }
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
 }
 
 /// Current level, initializing from `LAGOM_LOG` on first use (default: warn).

@@ -1,0 +1,120 @@
+//! Campaign subsystem integration tests: cache hit/miss semantics across
+//! process-like reopen, deterministic leaderboard ordering under a fixed
+//! seed, and the property that on every grid scenario the Lagom-tuned
+//! iteration is at least as fast as the NCCL baseline (up to the
+//! simulator's measurement-noise tolerance).
+
+use lagom::campaign::{
+    run_campaign, scenario_grid, CacheKey, CampaignConfig, Leaderboard, ResultCache, Scenario,
+};
+use lagom::testing::{for_all, Check, Gen};
+
+/// A small but heterogeneous slice of the grid (both clusters, several
+/// strategies) that keeps test wall time in check.
+fn small_grid() -> Vec<Scenario> {
+    let grid = scenario_grid(Some(1));
+    // Every 5th scenario: spans both bw classes and several strategies.
+    grid.into_iter().step_by(5).collect()
+}
+
+fn tmp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lagom_campaign_test_{tag}_{}.json", std::process::id()))
+}
+
+#[test]
+fn cache_misses_then_hits_across_reopen() {
+    let grid = small_grid();
+    let path = tmp_path("reopen");
+    let _ = std::fs::remove_file(&path);
+    let config = CampaignConfig::default();
+
+    // Cold: every scenario is a miss and gets measured.
+    let cache = ResultCache::open(&path);
+    let r1 = run_campaign(&grid, &config, &cache);
+    assert_eq!(r1.cache_misses, grid.len() as u64);
+    assert_eq!(r1.cache_hits, 0);
+    assert!(r1.outcomes.iter().all(|o| !o.cached));
+    cache.save().unwrap();
+
+    // Reopened (second invocation): every scenario is a hit, numbers match.
+    let cache2 = ResultCache::open(&path);
+    let r2 = run_campaign(&grid, &config, &cache2);
+    assert_eq!(r2.cache_hits, grid.len() as u64);
+    assert_eq!(r2.cache_misses, 0);
+    for (a, b) in r1.outcomes.iter().zip(&r2.outcomes) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.nccl_iter, b.nccl_iter);
+        assert_eq!(a.lagom_iter, b.lagom_iter);
+        assert!(b.cached);
+    }
+
+    // A different seed is a different tuning problem: cold again.
+    let cache3 = ResultCache::open(&path);
+    let r3 = run_campaign(
+        &grid,
+        &CampaignConfig { seed: 43, ..CampaignConfig::default() },
+        &cache3,
+    );
+    assert_eq!(r3.cache_misses, grid.len() as u64, "seed is part of the key");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn cache_keys_unique_across_grid() {
+    let grid = scenario_grid(Some(2));
+    let config = CampaignConfig::default();
+    let mut keys: Vec<CacheKey> = grid
+        .iter()
+        .map(|s| CacheKey::of(&s.cluster, &s.workload, &config.space, config.seed))
+        .collect();
+    let n = keys.len();
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys.len(), n, "every scenario hashes to a distinct key");
+}
+
+#[test]
+fn leaderboard_deterministic_under_fixed_seed() {
+    let grid = small_grid();
+    let config = CampaignConfig::default();
+    let r1 = run_campaign(&grid, &config, &ResultCache::in_memory());
+    let r2 = run_campaign(&grid, &config, &ResultCache::in_memory());
+    let j1 = Leaderboard::from_result(&r1).to_json().to_pretty();
+    let j2 = Leaderboard::from_result(&r2).to_json().to_pretty();
+    // Strip the only nondeterministic field (wall-clock) before comparing.
+    let scrub = |s: &str| -> String {
+        s.lines().filter(|l| !l.contains("wall_secs")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(scrub(&j1), scrub(&j2), "same seed, same leaderboard");
+
+    // And the ordering is the documented one: speedup desc, id asc.
+    let lb = Leaderboard::from_result(&r1);
+    for w in lb.rows.windows(2) {
+        assert!(
+            w[0].lagom_vs_nccl > w[1].lagom_vs_nccl
+                || (w[0].lagom_vs_nccl == w[1].lagom_vs_nccl && w[0].id < w[1].id),
+            "rows must be strictly ordered"
+        );
+    }
+}
+
+#[test]
+fn prop_lagom_never_loses_to_nccl_on_any_grid_scenario() {
+    // Property: for a random grid scenario and seed, the Lagom-tuned
+    // iteration time is <= the NCCL baseline's, within the simulator's
+    // noise tolerance (3%, the bar the repo's integration tests use).
+    let grid = scenario_grid(Some(1));
+    let n = grid.len() as u64;
+    let g = Gen::new(move |rng| (rng.next_below(n) as usize, 1 + rng.next_below(1000)));
+    for_all("lagom <= nccl per scenario", &g, 8, |&(idx, seed)| {
+        let scenario = grid[idx].clone();
+        let cache = ResultCache::in_memory();
+        let config = CampaignConfig { seed, ..CampaignConfig::default() };
+        let r = run_campaign(&[scenario], &config, &cache);
+        let o = &r.outcomes[0];
+        Check::from_bool(
+            o.lagom_iter <= o.nccl_iter * 1.03,
+            &format!("{}: lagom {} vs nccl {} (seed {seed})", o.id, o.lagom_iter, o.nccl_iter),
+        )
+    });
+}

@@ -1,0 +1,267 @@
+//! Minimal, dependency-free drop-in for the `anyhow` error crate.
+//!
+//! The build image is offline (no crates.io registry), so the subset of
+//! `anyhow` this repository actually uses is vendored here as a path
+//! dependency: [`Error`], [`Result`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror the real crate where it matters to callers:
+//! * `Error` does **not** implement `std::error::Error` (that is what makes
+//!   the blanket `From<E: std::error::Error>` impl — and thus `?` on any
+//!   concrete error type — coherent).
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole chain separated by `: `, and `Debug` prints the
+//!   chain as a `Caused by:` list, matching how the CLI reports errors.
+
+// Same policy as the main crate: style/complexity lints churn across
+// clippy releases; correctness/suspicious/perf stay enforced.
+#![allow(clippy::style, clippy::complexity)]
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with a boxed, context-carrying error by default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message plus an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Wrap a concrete error type as the chain root.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// An error from a plain message with no underlying cause.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Push a new outermost message, demoting `self` to the cause chain.
+    pub fn context<C>(self, context: C) -> Error
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        Error { msg: context.to_string(), source: Some(Box::new(Wrapped(self))) }
+    }
+
+    fn chain_root(&self) -> Option<&(dyn StdError + 'static)> {
+        match &self.source {
+            Some(b) => Some(&**b),
+            None => None,
+        }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut src = self.chain_root();
+            while let Some(s) = src {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(mut s) = self.chain_root() {
+            write!(f, "\n\nCaused by:")?;
+            loop {
+                write!(f, "\n    {s}")?;
+                match s.source() {
+                    Some(next) => s = next,
+                    None => break,
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Adapter that lets an [`Error`] sit inside a `dyn std::error::Error`
+/// chain (the outer `Error` itself deliberately does not implement it).
+struct Wrapped(Error);
+
+impl fmt::Display for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl fmt::Debug for Wrapped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)
+    }
+}
+
+impl StdError for Wrapped {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.0.chain_root()
+    }
+}
+
+/// Extension methods for attaching context while propagating errors.
+pub trait Context<T, E>: Sized {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error { msg: context.to_string(), source: Some(Box::new(e)) })
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error { msg: context().to_string(), source: Some(Box::new(e)) })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(context().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg(format!("{}", $err)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+/// Early-return with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io;
+
+    fn io_err() -> io::Error {
+        io::Error::new(io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            let r: Result<(), io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "file missing");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_chain() {
+        let r: Result<(), io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file missing");
+        let e2 = e.context("loading model");
+        assert_eq!(format!("{e2:#}"), "loading model: reading config: file missing");
+        assert!(format!("{e2:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing field {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing field x");
+        assert_eq!(Some(3).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky");
+    }
+
+    #[test]
+    fn ensure_without_message_names_condition() {
+        fn f() -> Result<()> {
+            let n = 1;
+            ensure!(n == 2);
+            Ok(())
+        }
+        assert!(format!("{}", f().unwrap_err()).contains("n == 2"));
+    }
+}
