@@ -1,16 +1,20 @@
 //! Ablation — §3.1's complexity claim: Lagom's tuning cost grows linearly
 //! with the number of communications N, while joint search grows as
-//! grid^N (exponential).
+//! grid^N (exponential). Second part: the tiered evaluator's claim — the
+//! same tuning quality at ≥2× fewer simulator executions, because the
+//! Eq. 4 closed form screens every candidate frontier first.
 
 use lagom::bench::{save_table, Table};
 use lagom::comm::{CollectiveKind, CommOpDesc};
+use lagom::eval::{Evaluator, SimEvaluator, TieredEvaluator};
 use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
 use lagom::hw::ClusterSpec;
-use lagom::profiler::SimProfiler;
+use lagom::profiler::{ProfileBackend, SimProfiler};
 use lagom::sim::SimEnv;
-use lagom::tuner::{ExhaustiveTuner, LagomTuner, Tuner};
+use lagom::tuner::{AutoCclTuner, ExhaustiveTuner, LagomTuner, Tuner};
 use lagom::util::stats::linfit;
 use lagom::util::units::MIB;
+use std::time::Instant;
 
 fn group_with_n_comms(n: usize) -> OverlapGroup {
     OverlapGroup::with(
@@ -74,4 +78,102 @@ fn main() {
             "N={n}: {it} iterations exceed the linear envelope"
         );
     }
+
+    tiering_ablation(&cluster);
+}
+
+/// Tune one group with `tuner` through `eval`; returns (simulator calls,
+/// tuning wall seconds, final makespan on fresh noise).
+fn tune_once(
+    tuner: &mut dyn Tuner,
+    group: &OverlapGroup,
+    eval: &mut dyn Evaluator,
+    cluster: &ClusterSpec,
+    score_seed: u64,
+) -> (u64, f64, f64) {
+    let mut s = IterationSchedule::new("t");
+    s.push(group.clone());
+    let t0 = Instant::now();
+    let r = tuner.tune_schedule(&s, eval);
+    let wall = t0.elapsed().as_secs_f64();
+    // Fresh-noise scoring: neither evaluator gets credit for overfitting
+    // its own noise stream.
+    let mut scorer = SimProfiler::with_reps(SimEnv::new(cluster.clone(), score_seed), 5);
+    let z = scorer.profile_group(group, &r.configs).makespan;
+    (r.profile_calls, wall, z)
+}
+
+/// The tiering half of the ablation: pure-simulated vs tiered evaluation
+/// for the searching tuners (Lagom and AutoCCL), at matched seeds and
+/// fresh-noise scoring. Acceptance: ≥2× fewer simulator executions at
+/// equal final iteration time (within noise).
+fn tiering_ablation(cluster: &ClusterSpec) {
+    let mut t = Table::new(
+        "Ablation — simulator calls: pure-simulated vs tiered evaluation",
+        &[
+            "tuner",
+            "N",
+            "sim calls (sim)",
+            "sim calls (tiered)",
+            "reduction",
+            "wall (sim)",
+            "wall (tiered)",
+            "final Z ratio (tiered/sim)",
+        ],
+    );
+    let mut total_sim = 0u64;
+    let mut total_tiered = 0u64;
+    let mut z_sim_total = 0.0;
+    let mut z_tiered_total = 0.0;
+    for n in [1usize, 2, 4, 8] {
+        let group = group_with_n_comms(n);
+        let seed = 1000 + n as u64;
+        for which in ["Lagom", "AutoCCL"] {
+            let mut tuner_s: Box<dyn Tuner> = match which {
+                "Lagom" => Box::new(LagomTuner::new(cluster.clone())),
+                _ => Box::new(AutoCclTuner::new(cluster.clone())),
+            };
+            let mut tuner_t: Box<dyn Tuner> = match which {
+                "Lagom" => Box::new(LagomTuner::new(cluster.clone())),
+                _ => Box::new(AutoCclTuner::new(cluster.clone())),
+            };
+            let mut ev_sim = SimEvaluator::new(cluster.clone(), seed);
+            let (calls_s, wall_s, z_s) =
+                tune_once(tuner_s.as_mut(), &group, &mut ev_sim, cluster, seed ^ 0x5eed);
+            let mut ev_tiered = TieredEvaluator::new(cluster.clone(), seed);
+            let (calls_t, wall_t, z_t) =
+                tune_once(tuner_t.as_mut(), &group, &mut ev_tiered, cluster, seed ^ 0x5eed);
+            total_sim += calls_s;
+            total_tiered += calls_t;
+            z_sim_total += z_s;
+            z_tiered_total += z_t;
+            t.row(vec![
+                which.to_string(),
+                n.to_string(),
+                calls_s.to_string(),
+                calls_t.to_string(),
+                format!("{:.2}x", calls_s as f64 / calls_t.max(1) as f64),
+                format!("{:.1}ms", wall_s * 1e3),
+                format!("{:.1}ms", wall_t * 1e3),
+                format!("{:.3}", z_t / z_s),
+            ]);
+        }
+    }
+    t.print();
+    save_table(&t);
+
+    let reduction = total_sim as f64 / total_tiered.max(1) as f64;
+    let z_ratio = z_tiered_total / z_sim_total;
+    println!(
+        "\ntiering: {total_sim} → {total_tiered} simulator calls ({reduction:.2}x reduction), \
+         final iteration time ratio {z_ratio:.3}"
+    );
+    assert!(
+        reduction >= 2.0,
+        "tiered evaluation must at least halve simulator calls: {reduction:.2}x"
+    );
+    assert!(
+        z_ratio <= 1.05,
+        "tiered tuning must match pure-simulated quality within noise: {z_ratio:.3}"
+    );
 }

@@ -5,6 +5,7 @@
 
 use lagom::bench::BenchRunner;
 use lagom::comm::{comm_time, CollectiveKind, CommConfig, CommOpDesc};
+use lagom::eval::{AnalyticEvaluator, Evaluator, SimEvaluator, TieredEvaluator};
 use lagom::hw::ClusterSpec;
 use lagom::models::ModelSpec;
 use lagom::parallel::{build_schedule, Parallelism, Workload};
@@ -49,7 +50,20 @@ fn main() {
         std::hint::black_box(simulate_schedule(&schedule, &cfgs, &mut env2));
     });
 
-    // End-to-end Lagom tuning of a truncated model (what a retune costs).
+    // Evaluation tiers on the same group: what one candidate costs at
+    // each fidelity (the gap is what tiered screening exploits).
+    runner.bench("analytic_evaluate(bwd layer)", || {
+        let mut ev = AnalyticEvaluator::new(cluster.clone());
+        std::hint::black_box(ev.evaluate(&group, &gcfg));
+    });
+    let mut memo_ev = SimEvaluator::new(cluster.clone(), 6);
+    memo_ev.evaluate(&group, &gcfg); // warm the memo entry
+    runner.bench("sim_evaluate(bwd layer, memo hit)", || {
+        std::hint::black_box(memo_ev.evaluate(&group, &gcfg));
+    });
+
+    // End-to-end Lagom tuning of a truncated model (what a retune costs),
+    // pure-simulated vs tiered evaluation.
     let mut small = ModelSpec::phi2();
     small.layers = 4;
     let ws = Workload { model: small, par: Parallelism::Fsdp { world: 8 }, mbs: 2, gbs: 16 };
@@ -59,6 +73,28 @@ fn main() {
         let mut tuner = LagomTuner::new(cluster.clone());
         std::hint::black_box(tuner.tune_schedule(&ssched, &mut prof));
     });
+    runner.bench("lagom_tune tiered(Phi-2 FSDP, 4 layers)", || {
+        let mut ev = TieredEvaluator::new(cluster.clone(), 4);
+        let mut tuner = LagomTuner::new(cluster.clone());
+        std::hint::black_box(tuner.tune_schedule(&ssched, &mut ev));
+    });
+
+    // Simulator-call accounting for the two tuning paths (the reduction
+    // `ablation_complexity` asserts on).
+    let mut ev_sim = SimEvaluator::new(cluster.clone(), 4);
+    let calls_sim =
+        LagomTuner::new(cluster.clone()).tune_schedule(&ssched, &mut ev_sim).profile_calls;
+    let mut ev_tiered = TieredEvaluator::new(cluster.clone(), 4);
+    let calls_tiered =
+        LagomTuner::new(cluster.clone()).tune_schedule(&ssched, &mut ev_tiered).profile_calls;
+    println!(
+        "\nlagom_tune simulator calls: {} pure-simulated vs {} tiered ({:.2}x reduction; \
+         {} candidates pruned analytically)",
+        calls_sim,
+        calls_tiered,
+        calls_sim as f64 / calls_tiered.max(1) as f64,
+        ev_tiered.stats().pruned
+    );
 
     // Persist for EXPERIMENTS.md §Perf.
     std::fs::create_dir_all("target").ok();

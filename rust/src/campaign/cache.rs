@@ -8,7 +8,9 @@
 //! the key and transparently invalidates the entry.
 
 use crate::comm::ParamSpace;
-use crate::hw::{ClusterSpec, LinkSpec};
+use crate::eval::cache::push_cluster;
+use crate::eval::EvalMode;
+use crate::hw::ClusterSpec;
 use crate::models::ModelSpec;
 use crate::parallel::{Parallelism, Workload};
 use crate::util::json::Json;
@@ -17,82 +19,14 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Incremental FNV-1a (64-bit) content hasher. Not cryptographic — it only
-/// needs to be stable across runs and sensitive to every pushed field.
-#[derive(Debug, Clone)]
-pub struct Fingerprint {
-    state: u64,
-}
-
-impl Default for Fingerprint {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Fingerprint {
-    pub fn new() -> Fingerprint {
-        Fingerprint { state: 0xcbf2_9ce4_8422_2325 }
-    }
-
-    pub fn push_bytes(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.state ^= b as u64;
-            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-
-    pub fn push_u64(&mut self, v: u64) {
-        self.push_bytes(&v.to_le_bytes());
-    }
-
-    pub fn push_f64(&mut self, v: f64) {
-        self.push_bytes(&v.to_bits().to_le_bytes());
-    }
-
-    /// Length-prefixed so `("ab","c")` and `("a","bc")` hash differently.
-    pub fn push_str(&mut self, s: &str) {
-        self.push_u64(s.len() as u64);
-        self.push_bytes(s.as_bytes());
-    }
-
-    pub fn finish(&self) -> u64 {
-        self.state
-    }
-}
+// The FNV-1a hasher lives in `util` (it also keys the per-candidate
+// evaluation memo, `crate::eval::cache`); re-exported here for
+// compatibility with existing `campaign::Fingerprint` users.
+pub use crate::util::fingerprint::Fingerprint;
 
 /// Content hash identifying one scenario's tuning problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CacheKey(u64);
-
-fn push_link(fp: &mut Fingerprint, link: &LinkSpec) {
-    fp.push_str(link.kind.as_str());
-    fp.push_f64(link.bandwidth);
-    fp.push_f64(link.latency);
-}
-
-fn push_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
-    let gpu = cluster.gpu();
-    fp.push_u64(gpu.sms as u64);
-    fp.push_f64(gpu.mem_bw);
-    fp.push_f64(gpu.peak_flops);
-    fp.push_u64(gpu.l2_bytes);
-    fp.push_u64(gpu.max_tb_per_sm as u64);
-    fp.push_u64(gpu.max_threads_per_sm as u64);
-    fp.push_u64(gpu.smem_per_sm);
-    fp.push_f64(gpu.launch_overhead);
-    fp.push_u64(cluster.node.gpus as u64);
-    fp.push_u64(cluster.topology.gpus_per_node as u64);
-    fp.push_u64(cluster.topology.nodes as u64);
-    push_link(fp, &cluster.topology.intra);
-    match &cluster.topology.inter {
-        None => fp.push_u64(0),
-        Some(l) => {
-            fp.push_u64(1);
-            push_link(fp, l);
-        }
-    }
-}
 
 fn push_model(fp: &mut Fingerprint, m: &ModelSpec) {
     fp.push_str(&m.name);
@@ -157,8 +91,16 @@ fn push_space(fp: &mut Fingerprint, space: &ParamSpace) {
 
 impl CacheKey {
     /// Fingerprint `(cluster, model, parallelism, ParamSpace)` content plus
-    /// batch sizes and the campaign seed.
-    pub fn of(cluster: &ClusterSpec, w: &Workload, space: &ParamSpace, seed: u64) -> CacheKey {
+    /// batch sizes, the campaign seed, and the evaluation fidelity (an
+    /// analytic-tuned scenario must never be served a simulated result, or
+    /// vice versa).
+    pub fn of(
+        cluster: &ClusterSpec,
+        w: &Workload,
+        space: &ParamSpace,
+        seed: u64,
+        fidelity: EvalMode,
+    ) -> CacheKey {
         let mut fp = Fingerprint::new();
         push_cluster(&mut fp, cluster);
         push_model(&mut fp, &w.model);
@@ -167,6 +109,7 @@ impl CacheKey {
         fp.push_u64(w.gbs as u64);
         push_space(&mut fp, space);
         fp.push_u64(seed);
+        fp.push_str(fidelity.as_str());
         CacheKey(fp.finish())
     }
 
@@ -188,6 +131,11 @@ pub struct CachedOutcome {
     pub lagom_iter: f64,
     pub lagom_tuning_iterations: u64,
     pub autoccl_tuning_iterations: u64,
+    /// Simulator executions Lagom's tuning consumed (tuning-cost currency;
+    /// regressions show up in `BENCH_*` trajectories).
+    pub lagom_sim_calls: u64,
+    /// … and AutoCCL's.
+    pub autoccl_sim_calls: u64,
     /// Seed the measurement ran under (provenance).
     pub seed: u64,
 }
@@ -200,6 +148,8 @@ impl CachedOutcome {
             ("lagom_iter", Json::num(self.lagom_iter)),
             ("lagom_tuning_iterations", Json::num(self.lagom_tuning_iterations as f64)),
             ("autoccl_tuning_iterations", Json::num(self.autoccl_tuning_iterations as f64)),
+            ("lagom_sim_calls", Json::num(self.lagom_sim_calls as f64)),
+            ("autoccl_sim_calls", Json::num(self.autoccl_sim_calls as f64)),
             // Hex string: a full-range u64 does not survive the f64 JSON
             // number type (53-bit significand).
             ("seed", Json::str(format!("{:016x}", self.seed))),
@@ -213,6 +163,8 @@ impl CachedOutcome {
             lagom_iter: j.get("lagom_iter")?.as_f64()?,
             lagom_tuning_iterations: j.get("lagom_tuning_iterations")?.as_u64()?,
             autoccl_tuning_iterations: j.get("autoccl_tuning_iterations")?.as_u64()?,
+            lagom_sim_calls: j.get("lagom_sim_calls")?.as_u64()?,
+            autoccl_sim_calls: j.get("autoccl_sim_calls")?.as_u64()?,
             seed: u64::from_str_radix(j.get("seed")?.as_str()?, 16).ok()?,
         })
     }
@@ -296,7 +248,8 @@ impl ResultCache {
     fn to_json(&self) -> Json {
         let entries = self.entries.lock().unwrap();
         Json::obj(vec![
-            ("schema", Json::str("lagom.campaign.cache/v1")),
+            // v2: adds per-strategy sim-call counts and fidelity-aware keys.
+            ("schema", Json::str("lagom.campaign.cache/v2")),
             (
                 "entries",
                 Json::Obj(entries.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
@@ -341,6 +294,8 @@ mod tests {
             lagom_iter: 0.4,
             lagom_tuning_iterations: 33,
             autoccl_tuning_iterations: 16,
+            lagom_sim_calls: 120,
+            autoccl_sim_calls: 310,
             // Above 2^53: locks in the lossless (hex) seed serialization.
             seed: 0x9e37_79b9_7f4a_7c15,
         }
@@ -350,33 +305,39 @@ mod tests {
     fn key_is_stable_and_content_sensitive() {
         let (cluster, w) = workload();
         let space = ParamSpace::default();
-        let k1 = CacheKey::of(&cluster, &w, &space, 42);
-        let k2 = CacheKey::of(&cluster, &w, &space, 42);
+        let sim = EvalMode::Simulated;
+        let k1 = CacheKey::of(&cluster, &w, &space, 42, sim);
+        let k2 = CacheKey::of(&cluster, &w, &space, 42, sim);
         assert_eq!(k1, k2, "same content, same key");
 
         // Each component perturbs the key.
         let mut w2 = w.clone();
         w2.model.layers += 1;
-        assert_ne!(k1, CacheKey::of(&cluster, &w2, &space, 42), "model content");
+        assert_ne!(k1, CacheKey::of(&cluster, &w2, &space, 42, sim), "model content");
         let mut w3 = w.clone();
         w3.par = Parallelism::Dp { world: 8 };
-        assert_ne!(k1, CacheKey::of(&cluster, &w3, &space, 42), "parallelism");
+        assert_ne!(k1, CacheKey::of(&cluster, &w3, &space, 42, sim), "parallelism");
         assert_ne!(
             k1,
-            CacheKey::of(&ClusterSpec::cluster_a(1), &w, &space, 42),
+            CacheKey::of(&ClusterSpec::cluster_a(1), &w, &space, 42, sim),
             "cluster content"
         );
         let mut space2 = space.clone();
         space2.nc_max = 32;
-        assert_ne!(k1, CacheKey::of(&cluster, &w, &space2, 42), "param space");
-        assert_ne!(k1, CacheKey::of(&cluster, &w, &space, 43), "seed");
+        assert_ne!(k1, CacheKey::of(&cluster, &w, &space2, 42, sim), "param space");
+        assert_ne!(k1, CacheKey::of(&cluster, &w, &space, 43, sim), "seed");
+        assert_ne!(
+            k1,
+            CacheKey::of(&cluster, &w, &space, 42, EvalMode::Tiered),
+            "evaluation fidelity"
+        );
     }
 
     #[test]
     fn hit_miss_accounting() {
         let (cluster, w) = workload();
         let space = ParamSpace::default();
-        let key = CacheKey::of(&cluster, &w, &space, 1);
+        let key = CacheKey::of(&cluster, &w, &space, 1, EvalMode::Simulated);
         let cache = ResultCache::in_memory();
         assert!(cache.lookup(&key).is_none());
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
@@ -392,7 +353,7 @@ mod tests {
             .join(format!("lagom_cache_rt_{}.json", std::process::id()));
         let _ = std::fs::remove_file(&path);
         let (cluster, w) = workload();
-        let key = CacheKey::of(&cluster, &w, &ParamSpace::default(), 7);
+        let key = CacheKey::of(&cluster, &w, &ParamSpace::default(), 7, EvalMode::Simulated);
         {
             let cache = ResultCache::open(&path);
             assert!(cache.is_empty());
@@ -416,14 +377,4 @@ mod tests {
         let _ = std::fs::remove_file(&path);
     }
 
-    #[test]
-    fn fingerprint_order_and_boundaries_matter() {
-        let mut a = Fingerprint::new();
-        a.push_str("ab");
-        a.push_str("c");
-        let mut b = Fingerprint::new();
-        b.push_str("a");
-        b.push_str("bc");
-        assert_ne!(a.finish(), b.finish());
-    }
 }

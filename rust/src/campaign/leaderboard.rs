@@ -79,6 +79,15 @@ impl Leaderboard {
                             ("autoccl", Json::num(r.autoccl_tuning_iterations as f64)),
                         ]),
                     ),
+                    (
+                        // Simulator executions tuning consumed: the
+                        // tuning-cost axis of BENCH_* trajectories.
+                        "sim_calls",
+                        Json::obj(vec![
+                            ("lagom", Json::num(r.lagom_sim_calls as f64)),
+                            ("autoccl", Json::num(r.autoccl_sim_calls as f64)),
+                        ]),
+                    ),
                     ("cached", Json::Bool(r.cached)),
                 ])
             })
@@ -155,6 +164,8 @@ mod tests {
             autoccl_vs_nccl: 1.0 / 0.95,
             lagom_tuning_iterations: 10,
             autoccl_tuning_iterations: 5,
+            lagom_sim_calls: 40,
+            autoccl_sim_calls: 90,
             cached: false,
         }
     }
@@ -193,6 +204,9 @@ mod tests {
         assert_eq!(rows[0].get("id").unwrap().as_str(), Some("x"));
         let sp = rows[0].get("speedup").unwrap();
         assert!(sp.get("lagom_vs_nccl").unwrap().as_f64().unwrap() > 1.2);
+        let sc = rows[0].get("sim_calls").unwrap();
+        assert_eq!(sc.get("lagom").unwrap().as_u64(), Some(40));
+        assert_eq!(sc.get("autoccl").unwrap().as_u64(), Some(90));
         assert_eq!(doc.get("cache").unwrap().get("hits").unwrap().as_u64(), Some(1));
     }
 

@@ -10,11 +10,11 @@
 //!   one cluster), skipping invalid combinations (EP needs a MoE model).
 //! * [`runner`] — execute scenarios **in parallel across a thread pool**
 //!   (each scenario tunes NCCL/AutoCCL/Lagom via
-//!   [`crate::report::compare_strategies_with_space`] on its own
-//!   simulator instance).
+//!   [`crate::report::compare_strategies_with_opts`] on its own
+//!   evaluator instance, at the campaign's `--fidelity`).
 //! * [`cache`] — a content-hashed result cache keyed by `(cluster, model,
-//!   parallelism, ParamSpace, seed)`, persisted as JSON, so repeated
-//!   scenarios are free across invocations.
+//!   parallelism, ParamSpace, seed, fidelity)`, persisted as JSON, so
+//!   repeated scenarios are free across invocations.
 //! * [`leaderboard`] — deterministic ranking of scenarios by Lagom's
 //!   speedup over the NCCL baseline (the Fig-7 tables, as one report),
 //!   exported as JSON via `lagom campaign --out leaderboard.json`.

@@ -4,7 +4,8 @@
 use super::cache::{CacheKey, CachedOutcome, ResultCache};
 use super::grid::Scenario;
 use crate::comm::ParamSpace;
-use crate::report::compare_strategies_with_space;
+use crate::eval::EvalMode;
+use crate::report::compare_strategies_with_opts;
 use crate::util::prng::splitmix64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -21,11 +22,19 @@ pub struct CampaignConfig {
     /// Tunable parameter space: both part of the cache key and the space
     /// the AutoCCL/Lagom tuners actually search.
     pub space: ParamSpace,
+    /// Evaluation fidelity the tuners cost candidates at (`--fidelity`);
+    /// part of the cache key.
+    pub fidelity: EvalMode,
 }
 
 impl Default for CampaignConfig {
     fn default() -> Self {
-        CampaignConfig { seed: 42, jobs: 0, space: ParamSpace::default() }
+        CampaignConfig {
+            seed: 42,
+            jobs: 0,
+            space: ParamSpace::default(),
+            fidelity: EvalMode::Simulated,
+        }
     }
 }
 
@@ -44,6 +53,11 @@ pub struct ScenarioOutcome {
     pub autoccl_vs_nccl: f64,
     pub lagom_tuning_iterations: u64,
     pub autoccl_tuning_iterations: u64,
+    /// Simulator executions each searching tuner consumed (tuning-cost
+    /// currency; visible in the leaderboard JSON so `BENCH_*` trajectories
+    /// catch tuning-cost regressions).
+    pub lagom_sim_calls: u64,
+    pub autoccl_sim_calls: u64,
     /// Served from the result cache instead of being re-measured.
     pub cached: bool,
 }
@@ -66,17 +80,20 @@ fn scenario_seed(base: u64, key: CacheKey) -> u64 {
 }
 
 /// Measure one scenario: the Fig 7 protocol
-/// ([`crate::report::compare_strategies_with_space`]) with the campaign's
-/// [`ParamSpace`] plumbed into the searching tuners — it is part of the
-/// cache key, so it must be part of the measurement too.
-fn measure(s: &Scenario, space: &ParamSpace, seed: u64) -> CachedOutcome {
-    let c = compare_strategies_with_space(&s.workload, &s.cluster, seed, space);
+/// ([`crate::report::compare_strategies_with_opts`]) with the campaign's
+/// [`ParamSpace`] and evaluation fidelity plumbed into the searching
+/// tuners — both are part of the cache key, so both must be part of the
+/// measurement too.
+fn measure(s: &Scenario, space: &ParamSpace, fidelity: EvalMode, seed: u64) -> CachedOutcome {
+    let c = compare_strategies_with_opts(&s.workload, &s.cluster, seed, space, fidelity);
     CachedOutcome {
         nccl_iter: c.row("NCCL").iter_time,
         autoccl_iter: c.row("AutoCCL").iter_time,
         lagom_iter: c.row("Lagom").iter_time,
         lagom_tuning_iterations: c.row("Lagom").tuning_iterations,
         autoccl_tuning_iterations: c.row("AutoCCL").tuning_iterations,
+        lagom_sim_calls: c.row("Lagom").sim_calls,
+        autoccl_sim_calls: c.row("AutoCCL").sim_calls,
         seed,
     }
 }
@@ -95,6 +112,8 @@ fn outcome_of(s: &Scenario, n: &CachedOutcome, cached: bool) -> ScenarioOutcome 
         autoccl_vs_nccl: n.nccl_iter / n.autoccl_iter,
         lagom_tuning_iterations: n.lagom_tuning_iterations,
         autoccl_tuning_iterations: n.autoccl_tuning_iterations,
+        lagom_sim_calls: n.lagom_sim_calls,
+        autoccl_sim_calls: n.autoccl_sim_calls,
         cached,
     }
 }
@@ -130,11 +149,22 @@ pub fn run_campaign(
                     break;
                 }
                 let s = &scenarios[i];
-                let key = CacheKey::of(&s.cluster, &s.workload, &config.space, config.seed);
+                let key = CacheKey::of(
+                    &s.cluster,
+                    &s.workload,
+                    &config.space,
+                    config.seed,
+                    config.fidelity,
+                );
                 let (numbers, cached) = match cache.lookup(&key) {
                     Some(n) => (n, true),
                     None => {
-                        let n = measure(s, &config.space, scenario_seed(config.seed, key));
+                        let n = measure(
+                            s,
+                            &config.space,
+                            config.fidelity,
+                            scenario_seed(config.seed, key),
+                        );
                         cache.insert(key, n.clone());
                         (n, false)
                     }
@@ -225,13 +255,32 @@ mod tests {
     }
 
     #[test]
+    fn fidelity_is_part_of_scenario_identity() {
+        let grid: Vec<Scenario> = scenario_grid(Some(1)).into_iter().take(1).collect();
+        let cache = ResultCache::in_memory();
+        let r1 = run_campaign(&grid, &CampaignConfig::default(), &cache);
+        assert!(r1.outcomes[0].lagom_sim_calls > 0, "sim-call cost recorded");
+        assert!(r1.outcomes[0].autoccl_sim_calls > 0);
+        let tiered = CampaignConfig { fidelity: EvalMode::Tiered, ..CampaignConfig::default() };
+        let r2 = run_campaign(&grid, &tiered, &cache);
+        assert_eq!(r2.cache_hits, 0, "different fidelity, different cache key");
+        assert!(
+            r2.outcomes[0].lagom_sim_calls < r1.outcomes[0].lagom_sim_calls,
+            "tiering must cut simulator calls: {} vs {}",
+            r2.outcomes[0].lagom_sim_calls,
+            r1.outcomes[0].lagom_sim_calls
+        );
+    }
+
+    #[test]
     fn scenario_seeds_differ_across_scenarios() {
         let grid = tiny_grid();
         let cfg = CampaignConfig::default();
         let seeds: Vec<u64> = grid
             .iter()
             .map(|s| {
-                let key = CacheKey::of(&s.cluster, &s.workload, &cfg.space, cfg.seed);
+                let key =
+                    CacheKey::of(&s.cluster, &s.workload, &cfg.space, cfg.seed, cfg.fidelity);
                 scenario_seed(cfg.seed, key)
             })
             .collect();

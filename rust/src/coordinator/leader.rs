@@ -43,7 +43,7 @@ impl Coordinator {
             let (tx, rx) = channel::<LeaderMsg>();
             let env = SimEnv {
                 cluster: cluster.clone(),
-                noise_sigma: 0.015,
+                noise_sigma: SimEnv::DEFAULT_NOISE_SIGMA,
                 prng: root.fork(rank as u64),
             };
             let fault = faults.get(rank).copied().unwrap_or_else(FaultPlan::healthy);

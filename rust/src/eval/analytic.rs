@@ -1,0 +1,80 @@
+//! Analytic evaluation tier — the closed-form Eq. 4 predictor on the
+//! search path.
+
+use super::{EvalStats, Evaluation, Evaluator, Fidelity};
+use crate::comm::CommConfig;
+use crate::contention::predict_group;
+use crate::graph::OverlapGroup;
+use crate::hw::ClusterSpec;
+
+/// Nominal trust in an uncalibrated closed-form prediction
+/// (`ablation_model_fit` puts its mean makespan error around 10-25%).
+pub const ANALYTIC_CONFIDENCE: f64 = 0.6;
+
+/// Costs candidates with [`predict_group`] — no execution at all, so an
+/// evaluation is orders of magnitude cheaper than a simulator run. Used
+/// standalone (`--fidelity analytic`) and as the screening tier of
+/// [`crate::eval::TieredEvaluator`].
+pub struct AnalyticEvaluator {
+    pub cluster: ClusterSpec,
+    calls: u64,
+}
+
+impl AnalyticEvaluator {
+    pub fn new(cluster: ClusterSpec) -> AnalyticEvaluator {
+        AnalyticEvaluator { cluster, calls: 0 }
+    }
+}
+
+impl Evaluator for AnalyticEvaluator {
+    fn name(&self) -> String {
+        "analytic (Eq. 4 closed form)".into()
+    }
+
+    fn evaluate(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> Evaluation {
+        self.calls += 1;
+        let p = predict_group(group, configs, &self.cluster);
+        Evaluation {
+            comm_times: p.comm_times,
+            comp_total: p.comp_total,
+            comm_total: p.comm_total,
+            makespan: p.makespan,
+            fidelity: Fidelity::Analytic,
+            confidence: ANALYTIC_CONFIDENCE,
+            cached: false,
+        }
+    }
+
+    fn stats(&self) -> EvalStats {
+        EvalStats {
+            evaluations: self.calls,
+            analytic_calls: self.calls,
+            ..EvalStats::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn predicts_without_execution_and_counts_calls() {
+        let g = OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        let mut ev = AnalyticEvaluator::new(ClusterSpec::cluster_b(1));
+        let e = ev.evaluate(&g, &[CommConfig::default_ring()]);
+        assert_eq!(e.fidelity, Fidelity::Analytic);
+        assert!(!e.is_measured());
+        assert!((e.makespan - e.comm_total.max(e.comp_total)).abs() < 1e-12);
+        let s = ev.stats();
+        assert_eq!(s.analytic_calls, 1);
+        assert_eq!(s.sim_calls, 0);
+    }
+}

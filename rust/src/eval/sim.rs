@@ -1,0 +1,211 @@
+//! Simulated evaluation tier — the discrete-event engine with per-candidate
+//! memoization.
+
+use super::cache::{eval_key, EvalCache};
+use super::{EvalStats, Evaluation, Evaluator, Fidelity};
+use crate::comm::CommConfig;
+use crate::graph::OverlapGroup;
+use crate::hw::ClusterSpec;
+use crate::sim::{simulate_group, SimEnv};
+use crate::util::prng::{splitmix64, Prng};
+
+/// Costs candidates on the cluster simulator (averaged repetitions, like
+/// [`crate::profiler::SimProfiler`]) with one crucial addition: results
+/// are **memoized by content**. The noise stream of each evaluation is
+/// derived from its cache key, so an evaluation is a pure function of
+/// `(cluster, group, configs, seed, reps, sigma)` — revisiting a candidate
+/// returns the identical numbers without re-simulating, and results do not
+/// depend on evaluation order.
+pub struct SimEvaluator {
+    env: SimEnv,
+    base_seed: u64,
+    /// Repetitions averaged per measurement (noise control).
+    pub reps: u32,
+    cache: EvalCache,
+    evaluations: u64,
+    sim_calls: u64,
+}
+
+impl SimEvaluator {
+    pub fn new(cluster: ClusterSpec, seed: u64) -> SimEvaluator {
+        Self::with_reps(cluster, seed, 3)
+    }
+
+    pub fn with_reps(cluster: ClusterSpec, seed: u64, reps: u32) -> SimEvaluator {
+        SimEvaluator {
+            env: SimEnv::new(cluster, seed),
+            base_seed: seed,
+            reps: reps.max(1),
+            cache: EvalCache::new(),
+            evaluations: 0,
+            sim_calls: 0,
+        }
+    }
+
+    /// Noise-free variant (exact comparisons in tests/benches).
+    pub fn deterministic(cluster: ClusterSpec) -> SimEvaluator {
+        SimEvaluator {
+            env: SimEnv::with_noise(cluster, 0, 0.0),
+            base_seed: 0,
+            reps: 1,
+            cache: EvalCache::new(),
+            evaluations: 0,
+            sim_calls: 0,
+        }
+    }
+
+    /// Override the relative measurement-noise level.
+    pub fn with_noise_sigma(mut self, sigma: f64) -> SimEvaluator {
+        self.env.noise_sigma = sigma;
+        self
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.env.cluster
+    }
+
+    pub fn cache(&self) -> &EvalCache {
+        &self.cache
+    }
+}
+
+impl Evaluator for SimEvaluator {
+    fn name(&self) -> String {
+        format!("simulated (reps={}, memoized)", self.reps)
+    }
+
+    fn evaluate(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> Evaluation {
+        self.evaluations += 1;
+        let key = eval_key(
+            &self.env.cluster,
+            group,
+            configs,
+            self.base_seed,
+            self.reps,
+            self.env.noise_sigma,
+        );
+        if let Some(mut e) = self.cache.lookup(key) {
+            e.cached = true;
+            return e;
+        }
+        self.sim_calls += 1;
+
+        // Derive the noise stream from the key: the outcome is a pure
+        // function of the content, never of evaluation order.
+        let mut s = key;
+        self.env.prng = Prng::new(splitmix64(&mut s));
+
+        let mut comm_times = vec![0.0; group.comms.len()];
+        let mut comp_total = 0.0;
+        let mut comm_total = 0.0;
+        let mut makespan = 0.0;
+        for _ in 0..self.reps {
+            let r = simulate_group(group, configs, &mut self.env);
+            for (acc, t) in comm_times.iter_mut().zip(&r.comm_times) {
+                *acc += t;
+            }
+            comp_total += r.comp_total();
+            comm_total += r.comm_total();
+            makespan += r.makespan;
+        }
+        let n = self.reps as f64;
+        for t in &mut comm_times {
+            *t /= n;
+        }
+        let e = Evaluation {
+            comm_times,
+            comp_total: comp_total / n,
+            comm_total: comm_total / n,
+            makespan: makespan / n,
+            fidelity: Fidelity::Simulated,
+            confidence: 0.9,
+            cached: false,
+        };
+        self.cache.insert(key, e.clone());
+        e
+    }
+
+    fn stats(&self) -> EvalStats {
+        EvalStats {
+            evaluations: self.evaluations,
+            sim_calls: self.sim_calls,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            ..EvalStats::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::util::units::MIB;
+
+    fn group() -> OverlapGroup {
+        OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::ffn("ffn", 2048, 2560, 10240, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        )
+    }
+
+    #[test]
+    fn revisit_hits_memo_and_is_identical() {
+        let g = group();
+        let cfg = vec![CommConfig::default_ring()];
+        let mut ev = SimEvaluator::new(ClusterSpec::cluster_b(1), 42);
+        let a = ev.evaluate(&g, &cfg);
+        let b = ev.evaluate(&g, &cfg);
+        assert!(!a.cached && b.cached);
+        assert_eq!(a.makespan, b.makespan);
+        let s = ev.stats();
+        assert_eq!(s.evaluations, 2);
+        assert_eq!(s.sim_calls, 1, "second visit served from the cache");
+        assert_eq!(s.cache_hits, 1);
+    }
+
+    #[test]
+    fn results_are_order_independent() {
+        let g = group();
+        let light = vec![CommConfig { nc: 2, ..CommConfig::default_ring() }];
+        let heavy = vec![CommConfig { nc: 32, ..CommConfig::default_ring() }];
+        let mut fwd = SimEvaluator::new(ClusterSpec::cluster_b(1), 9);
+        let a1 = fwd.evaluate(&g, &light);
+        let b1 = fwd.evaluate(&g, &heavy);
+        let mut rev = SimEvaluator::new(ClusterSpec::cluster_b(1), 9);
+        let b2 = rev.evaluate(&g, &heavy);
+        let a2 = rev.evaluate(&g, &light);
+        assert_eq!(a1.makespan, a2.makespan, "key-derived noise streams");
+        assert_eq!(b1.makespan, b2.makespan);
+    }
+
+    #[test]
+    fn different_config_or_seed_misses() {
+        let g = group();
+        let cfg = vec![CommConfig::default_ring()];
+        let mut ev = SimEvaluator::new(ClusterSpec::cluster_b(1), 1);
+        ev.evaluate(&g, &cfg);
+        let mut other = cfg.clone();
+        other[0].chunk *= 2;
+        ev.evaluate(&g, &other);
+        assert_eq!(ev.stats().sim_calls, 2, "changed config re-simulates");
+
+        let mut ev2 = SimEvaluator::new(ClusterSpec::cluster_b(1), 2);
+        let a = ev2.evaluate(&g, &cfg);
+        let b = SimEvaluator::new(ClusterSpec::cluster_b(1), 1).evaluate(&g, &cfg);
+        assert_ne!(a.makespan, b.makespan, "seed is part of the content");
+    }
+
+    #[test]
+    fn deterministic_evaluator_matches_plain_sim() {
+        let g = group();
+        let cfg = vec![CommConfig::default_ring()];
+        let mut ev = SimEvaluator::deterministic(ClusterSpec::cluster_b(1));
+        let e = ev.evaluate(&g, &cfg);
+        let mut env = SimEnv::with_noise(ClusterSpec::cluster_b(1), 0, 0.0);
+        let r = simulate_group(&g, &cfg, &mut env);
+        assert!((e.makespan - r.makespan).abs() < 1e-12);
+    }
+}

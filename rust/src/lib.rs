@@ -33,6 +33,7 @@ pub mod cli;
 pub mod comm;
 pub mod contention;
 pub mod coordinator;
+pub mod eval;
 pub mod graph;
 pub mod hw;
 pub mod models;

@@ -16,12 +16,15 @@
 use lagom::bench::Table;
 use lagom::campaign::{run_campaign, scenario_grid, CampaignConfig, Leaderboard, ResultCache};
 use lagom::cli::Args;
-use lagom::comm::CommConfig;
+use lagom::comm::{CommConfig, ParamSpace};
+use lagom::eval::{make_evaluator, EvalMode};
 use lagom::hw::ClusterSpec;
 use lagom::models::ModelSpec;
 use lagom::parallel::{build_schedule, table2_workloads, Parallelism, Workload};
 use lagom::profiler::SimProfiler;
-use lagom::report::{bound_breakdown, compare_strategies, comparison_table, evaluate};
+use lagom::report::{
+    bound_breakdown, compare_strategies_with_opts, comparison_table, evaluate,
+};
 use lagom::sim::{simulate_schedule, SimEnv, TraceBuilder};
 use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
 use lagom::util::units::fmt_secs;
@@ -76,6 +79,12 @@ COMMON OPTIONS:
   --model phi2|llama3|mpt|deepseek-moe|olmoe
   --par fsdp|tp|ep|dp               parallelism (default fsdp)
   --strategy lagom|autoccl|nccl|liger (tune only; default lagom)
+  --fidelity analytic|sim|tiered    candidate-evaluation tier for tuning
+                                    (tune/compare/campaign; default sim):
+                                    analytic = Eq. 4 closed form only,
+                                    sim = memoized simulator,
+                                    tiered = analytic screening + simulated
+                                    verification of the survivors
   --mbs N  --seed N  --out PATH  --layers N (truncate model for speed)
 
 CAMPAIGN OPTIONS:
@@ -109,6 +118,12 @@ fn parse_workload(args: &Args, cluster: &ClusterSpec) -> Result<Workload, String
 fn cluster_of(args: &Args) -> Result<ClusterSpec, String> {
     let name = args.get_or("cluster", "b8");
     ClusterSpec::by_name(name).ok_or_else(|| format!("unknown cluster {name}"))
+}
+
+fn fidelity_of(args: &Args) -> Result<EvalMode, String> {
+    let name = args.get_or("fidelity", "sim");
+    EvalMode::parse(name)
+        .ok_or_else(|| format!("unknown fidelity {name} (expected analytic|sim|tiered)"))
 }
 
 fn run_or_exit<T>(r: Result<T, String>) -> T {
@@ -146,6 +161,7 @@ fn cmd_tune(args: &Args) -> i32 {
     let cluster = run_or_exit(cluster_of(args));
     let w = run_or_exit(parse_workload(args, &cluster));
     let seed = run_or_exit(args.get_u64("seed", 42));
+    let fidelity = run_or_exit(fidelity_of(args));
     let schedule = build_schedule(&w, &cluster);
     println!(
         "workload {} on {}: {} groups, {} comms",
@@ -165,16 +181,23 @@ fn cmd_tune(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut prof = SimProfiler::new(SimEnv::new(cluster.clone(), seed));
+    let mut ev = make_evaluator(fidelity, &cluster, seed);
     let t0 = std::time::Instant::now();
-    let r = tuner.tune_schedule(&schedule, &mut prof);
+    let r = tuner.tune_schedule(&schedule, ev.as_mut());
     let iter = evaluate(&schedule, &r.configs, &cluster, w.micro_steps(), seed ^ 1);
     println!(
-        "{}: tuned in {} ({} tuning iterations, {} profile calls)",
+        "{}: tuned in {} via {} ({} tuning iterations, {} simulator calls)",
         tuner.name(),
         fmt_secs(t0.elapsed().as_secs_f64()),
+        ev.name(),
         r.iterations,
         r.profile_calls
+    );
+    let s = ev.stats();
+    println!(
+        "evaluation: {} candidates — {} analytic, {} simulated ({} memo hits), \
+         {} promoted / {} pruned",
+        s.evaluations, s.analytic_calls, s.sim_calls, s.cache_hits, s.promoted, s.pruned
     );
     println!("iteration time: {}", fmt_secs(iter));
     // Distinct configs chosen:
@@ -197,8 +220,13 @@ fn cmd_compare(args: &Args) -> i32 {
     let cluster = run_or_exit(cluster_of(args));
     let w = run_or_exit(parse_workload(args, &cluster));
     let seed = run_or_exit(args.get_u64("seed", 42));
-    let c = compare_strategies(&w, &cluster, seed);
-    comparison_table("strategy comparison", &[c]).print();
+    let fidelity = run_or_exit(fidelity_of(args));
+    let c = compare_strategies_with_opts(&w, &cluster, seed, &ParamSpace::default(), fidelity);
+    comparison_table(
+        &format!("strategy comparison (fidelity: {})", fidelity.as_str()),
+        &[c],
+    )
+    .print();
     0
 }
 
@@ -234,6 +262,7 @@ fn cmd_campaign(args: &Args) -> i32 {
     let seed = run_or_exit(args.get_u64("seed", 42));
     let jobs = run_or_exit(args.get_u64("jobs", 0)) as usize;
     let layers = run_or_exit(args.get_u64("layers", 4)) as u32;
+    let fidelity = run_or_exit(fidelity_of(args));
     let max_layers = if layers == 0 { None } else { Some(layers) };
     let out = args.get_or("out", "target/leaderboard.json").to_string();
     let cache_path = args.get_or("cache", "target/campaign_cache.json").to_string();
@@ -241,10 +270,12 @@ fn cmd_campaign(args: &Args) -> i32 {
     let grid = scenario_grid(max_layers);
     let cache = ResultCache::open(&cache_path);
     let preloaded = cache.len();
-    let config = CampaignConfig { seed, jobs, ..CampaignConfig::default() };
+    let config = CampaignConfig { seed, jobs, fidelity, ..CampaignConfig::default() };
     println!(
-        "campaign: {} scenarios (model zoo x dp/fsdp/pp/ep x high-bw/low-bw), {} cached entries preloaded",
+        "campaign: {} scenarios (model zoo x dp/fsdp/pp/ep x high-bw/low-bw) at {} fidelity, \
+         {} cached entries preloaded",
         grid.len(),
+        fidelity.as_str(),
         preloaded
     );
     let result = run_campaign(&grid, &config, &cache);

@@ -1,9 +1,13 @@
-//! `ProfileTime` — the measurement interface between tuners and the world.
+//! `ProfileBackend` — the raw measurement primitive under the evaluation
+//! layer.
 //!
 //! On the paper's testbed this is an instrumented training iteration; here
-//! it executes the overlap group on the cluster simulator. Tuners are
-//! restricted to this interface (they never see simulator internals), and
-//! every call is counted — the tuning-cost currency of Fig 8c.
+//! it executes the overlap group on the cluster simulator (or, via
+//! [`crate::coordinator::DistributedProfiler`], across simulated ranks).
+//! Tuners no longer consume this trait directly: they cost candidates
+//! through [`crate::eval::Evaluator`], and every `ProfileBackend` *is* an
+//! `Evaluator` (simulated fidelity) via the impls in [`crate::eval`].
+//! Every call is counted — the tuning-cost currency of Fig 8c.
 
 use crate::comm::CommConfig;
 use crate::graph::{IterationSchedule, OverlapGroup};

@@ -5,9 +5,9 @@
 //!
 //! Two interchangeable backends behind one API:
 //! * `pjrt` feature **on** — the real thing: an `xla` PJRT-CPU client
-//!   compiles and executes the artifacts ([`pjrt`]).
+//!   compiles and executes the artifacts (`pjrt` module).
 //! * `pjrt` feature **off** (default; the offline crate set has no `xla`
-//!   bindings) — an API-compatible stub ([`stub`]): artifact discovery and
+//!   bindings) — an API-compatible stub (`stub` module): artifact discovery and
 //!   shape validation work, compilation/execution return descriptive
 //!   errors, and every caller degrades gracefully at runtime.
 

@@ -1,4 +1,4 @@
-//! Offline runtime backend (default build): same API as [`super::pjrt`],
+//! Offline runtime backend (default build): same API as `super::pjrt`,
 //! no `xla` dependency. Artifact discovery, path conventions and literal
 //! shape checks behave identically; compiling or executing an artifact
 //! returns a descriptive error instead, so `lagom train` and the e2e

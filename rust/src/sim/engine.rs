@@ -22,12 +22,21 @@ pub struct SimEnv {
 }
 
 impl SimEnv {
+    /// Default measurement-noise level of the simulated testbed.
+    pub const DEFAULT_NOISE_SIGMA: f64 = 0.015;
+
     pub fn new(cluster: ClusterSpec, seed: u64) -> Self {
-        SimEnv { cluster, noise_sigma: 0.015, prng: Prng::new(seed) }
+        Self::with_noise(cluster, seed, Self::DEFAULT_NOISE_SIGMA)
+    }
+
+    /// Explicit noise level — lets benches/tests sweep `sigma` without
+    /// mutating fields after construction.
+    pub fn with_noise(cluster: ClusterSpec, seed: u64, sigma: f64) -> Self {
+        SimEnv { cluster, noise_sigma: sigma, prng: Prng::new(seed) }
     }
 
     pub fn deterministic(cluster: ClusterSpec) -> Self {
-        SimEnv { cluster, noise_sigma: 0.0, prng: Prng::new(0) }
+        Self::with_noise(cluster, 0, 0.0)
     }
 
     #[inline]
@@ -374,6 +383,25 @@ mod tests {
         let mean = runs.iter().sum::<f64>() / runs.len() as f64;
         assert!((mean - det).abs() / det < 0.03, "mean {mean} det {det}");
         assert!(runs.iter().any(|&r| (r - det).abs() > 1e-9), "noise present");
+    }
+
+    #[test]
+    fn with_noise_sweeps_sigma_without_field_mutation() {
+        let g = group();
+        let c = [cfg(8, 2 * MIB)];
+        let spread = |sigma: f64| -> f64 {
+            let mut env = SimEnv::with_noise(cluster(), 5, sigma);
+            let runs: Vec<f64> =
+                (0..24).map(|_| simulate_group(&g, &c, &mut env).makespan).collect();
+            let m = runs.iter().sum::<f64>() / runs.len() as f64;
+            (runs.iter().map(|r| (r - m) * (r - m)).sum::<f64>() / runs.len() as f64).sqrt() / m
+        };
+        assert_eq!(spread(0.0), 0.0, "sigma 0 is deterministic");
+        assert!(spread(0.05) > spread(0.005), "larger sigma, larger spread");
+        // `new` is exactly `with_noise` at the default sigma.
+        let mut a = SimEnv::new(cluster(), 9);
+        let mut b = SimEnv::with_noise(cluster(), 9, SimEnv::DEFAULT_NOISE_SIGMA);
+        assert_eq!(simulate_group(&g, &c, &mut a), simulate_group(&g, &c, &mut b));
     }
 
     #[test]

@@ -8,9 +8,9 @@
 
 use super::{select_subspace, tune_groupwise, TuneResult, Tuner};
 use crate::comm::{CommConfig, ParamSpace};
+use crate::eval::Evaluator;
 use crate::graph::{IterationSchedule, OverlapGroup};
 use crate::hw::ClusterSpec;
-use crate::profiler::ProfileBackend;
 use crate::util::units::KIB;
 
 /// Coordinate ladders AutoCCL walks (coarse-to-fine hill climbing).
@@ -45,19 +45,21 @@ impl AutoCclTuner {
     /// Online coordinate descent on (NC, NT, C) for comm `j` of `group`,
     /// sampling the *real overlapped execution* (feedback includes
     /// contention, as AutoCCL's online sampling does) but optimizing only
-    /// `x_j`.
+    /// `x_j`. Each coordinate ladder is costed as one frontier, so a
+    /// tiered evaluator screens it analytically and only simulates the
+    /// most promising rungs.
     fn descend(
         &self,
         group: &OverlapGroup,
         configs: &mut [CommConfig],
         j: usize,
-        backend: &mut dyn ProfileBackend,
+        eval: &mut dyn Evaluator,
         iterations: &mut u64,
         trajectory: &mut Vec<(u64, f64)>,
         best_z: &mut f64,
     ) {
         let mut best_x = {
-            let m = backend.profile_group(group, configs);
+            let m = eval.evaluate_full(group, configs);
             *iterations += 1;
             *best_z = best_z.min(m.makespan);
             trajectory.push((*iterations, *best_z));
@@ -65,64 +67,87 @@ impl AutoCclTuner {
         };
         for _ in 0..self.max_rounds {
             let mut improved = false;
-            // NC coordinate.
-            for &nc in &NC_LADDER {
-                if nc == configs[j].nc {
-                    continue;
-                }
-                let prev = configs[j];
-                configs[j].nc = nc;
-                let m = backend.profile_group(group, configs);
-                *iterations += 1;
-                *best_z = best_z.min(m.makespan);
-                trajectory.push((*iterations, *best_z));
-                if m.comm_times[j] < best_x {
-                    best_x = m.comm_times[j];
-                    improved = true;
-                } else {
-                    configs[j] = prev;
-                }
-            }
-            // C coordinate.
-            for &c in &C_LADDER {
-                if c == configs[j].chunk {
-                    continue;
-                }
-                let prev = configs[j];
-                configs[j].chunk = c;
-                let m = backend.profile_group(group, configs);
-                *iterations += 1;
-                *best_z = best_z.min(m.makespan);
-                trajectory.push((*iterations, *best_z));
-                if m.comm_times[j] < best_x {
-                    best_x = m.comm_times[j];
-                    improved = true;
-                } else {
-                    configs[j] = prev;
-                }
-            }
-            // NT coordinate (coarse; §3.2 finds it near-irrelevant).
-            for &nt in &NT_LADDER {
-                if nt == configs[j].nt {
-                    continue;
-                }
-                let prev = configs[j];
-                configs[j].nt = nt;
-                let m = backend.profile_group(group, configs);
-                *iterations += 1;
-                *best_z = best_z.min(m.makespan);
-                trajectory.push((*iterations, *best_z));
-                if m.comm_times[j] < best_x {
-                    best_x = m.comm_times[j];
-                    improved = true;
-                } else {
-                    configs[j] = prev;
-                }
+            // NC, then C, then NT (coarse; §3.2 finds NT near-irrelevant).
+            for coord in 0..3usize {
+                let variants: Vec<CommConfig> = match coord {
+                    0 => NC_LADDER
+                        .iter()
+                        .filter(|&&nc| nc != configs[j].nc)
+                        .map(|&nc| CommConfig { nc, ..configs[j] })
+                        .collect(),
+                    1 => C_LADDER
+                        .iter()
+                        .filter(|&&c| c != configs[j].chunk)
+                        .map(|&c| CommConfig { chunk: c, ..configs[j] })
+                        .collect(),
+                    _ => NT_LADDER
+                        .iter()
+                        .filter(|&&nt| nt != configs[j].nt)
+                        .map(|&nt| CommConfig { nt, ..configs[j] })
+                        .collect(),
+                };
+                improved |= sweep_ladder(
+                    group, configs, j, &variants, eval, iterations, trajectory, best_z,
+                    &mut best_x,
+                );
             }
             if !improved {
                 break;
             }
         }
+    }
+}
+
+/// Cost one coordinate ladder as a single frontier and accept the rung
+/// with the best communication time — judged only among the answers at
+/// the frontier's highest fidelity, so a screened-out (analytic-only)
+/// candidate can never be accepted over a simulated one.
+#[allow(clippy::too_many_arguments)]
+fn sweep_ladder(
+    group: &OverlapGroup,
+    configs: &mut [CommConfig],
+    j: usize,
+    variants: &[CommConfig],
+    eval: &mut dyn Evaluator,
+    iterations: &mut u64,
+    trajectory: &mut Vec<(u64, f64)>,
+    best_z: &mut f64,
+    best_x: &mut f64,
+) -> bool {
+    if variants.is_empty() {
+        return false;
+    }
+    let candidates: Vec<Vec<CommConfig>> = variants
+        .iter()
+        .map(|v| {
+            let mut c = configs.to_vec();
+            c[j] = *v;
+            c
+        })
+        .collect();
+    let evals = eval.evaluate_batch(group, &candidates);
+    let top = evals.iter().map(|e| e.fidelity).max().expect("non-empty ladder");
+    let mut accepted: Option<usize> = None;
+    for (k, e) in evals.iter().enumerate() {
+        *iterations += 1;
+        if e.fidelity == top {
+            if e.makespan < *best_z {
+                *best_z = e.makespan;
+            }
+            let bar = accepted.map(|a| evals[a].comm_times[j]).unwrap_or(*best_x);
+            if e.comm_times[j] < bar {
+                accepted = Some(k);
+            }
+        }
+        trajectory.push((*iterations, *best_z));
+    }
+    match accepted {
+        Some(k) => {
+            configs[j] = variants[k];
+            *best_x = evals[k].comm_times[j];
+            true
+        }
+        None => false,
     }
 }
 
@@ -134,14 +159,14 @@ impl Tuner for AutoCclTuner {
     fn tune_schedule(
         &mut self,
         schedule: &IterationSchedule,
-        backend: &mut dyn ProfileBackend,
+        eval: &mut dyn Evaluator,
     ) -> TuneResult {
         // Cache identical groups like the other tuners (fair comparison).
         let mut cache: Vec<(super::lagom::GroupKey, Vec<CommConfig>)> = Vec::new();
         let cluster = self.cluster.clone();
         let space = self.space.clone();
         let max_self = AutoCclTuner { cluster: cluster.clone(), space: space.clone(), max_rounds: self.max_rounds };
-        tune_groupwise(schedule, backend, |g, backend| {
+        tune_groupwise(schedule, eval, |g, eval| {
             let key = super::lagom::GroupKey::of(g);
             if let Some((_, cfgs)) = cache.iter().find(|(k, _)| *k == key) {
                 return (cfgs.clone(), 0, vec![]);
@@ -161,7 +186,7 @@ impl Tuner for AutoCclTuner {
                     j,
                     &cluster,
                     &space,
-                    backend,
+                    eval,
                     &configs,
                 );
                 configs[j].algo = a;
@@ -177,7 +202,7 @@ impl Tuner for AutoCclTuner {
                     g,
                     &mut configs,
                     j,
-                    backend,
+                    eval,
                     &mut iterations,
                     &mut trajectory,
                     &mut best_z,

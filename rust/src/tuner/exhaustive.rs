@@ -5,9 +5,9 @@
 
 use super::{select_subspace, tune_groupwise, TuneResult, Tuner};
 use crate::comm::{CommConfig, ParamSpace};
+use crate::eval::Evaluator;
 use crate::graph::IterationSchedule;
 use crate::hw::ClusterSpec;
-use crate::profiler::ProfileBackend;
 use crate::util::units::KIB;
 
 pub struct ExhaustiveTuner {
@@ -46,14 +46,14 @@ impl Tuner for ExhaustiveTuner {
     fn tune_schedule(
         &mut self,
         schedule: &IterationSchedule,
-        backend: &mut dyn ProfileBackend,
+        eval: &mut dyn Evaluator,
     ) -> TuneResult {
         let cluster = self.cluster.clone();
         let space = self.space.clone();
         let nc_grid = self.nc_grid.clone();
         let c_grid = self.c_grid.clone();
         let max_comms = self.max_comms;
-        tune_groupwise(schedule, backend, |g, backend| {
+        tune_groupwise(schedule, eval, |g, eval| {
             let n = g.comms.len();
             assert!(
                 n <= max_comms,
@@ -68,7 +68,7 @@ impl Tuner for ExhaustiveTuner {
             }
             let mut subs = Vec::with_capacity(n);
             for j in 0..n {
-                subs.push(select_subspace(&g.comms[j], g, j, &cluster, &space, backend, &base));
+                subs.push(select_subspace(&g.comms[j], g, j, &cluster, &space, eval, &base));
             }
             // Joint cartesian product over the resource grid.
             let per_comm: Vec<Vec<CommConfig>> = (0..n)
@@ -83,34 +83,59 @@ impl Tuner for ExhaustiveTuner {
                     v
                 })
                 .collect();
+            // Enumerate the joint grid as bounded frontiers: a tiered
+            // evaluator screens each chunk analytically and simulates only
+            // the promising region, while memory stays bounded even if a
+            // caller raises `max_comms` beyond the default (the grid is
+            // `grid^N`; never materialize it whole).
+            const CHUNK: usize = 1024;
             let mut idx = vec![0usize; n];
-            let mut best: Option<(f64, Vec<CommConfig>)> = None;
+            let mut exhausted = false;
             let mut iterations = 0u64;
             let mut trajectory = Vec::new();
-            loop {
-                let cfgs: Vec<CommConfig> = (0..n).map(|j| per_comm[j][idx[j]]).collect();
-                let m = backend.profile_group(g, &cfgs);
-                iterations += 1;
-                let better = best.as_ref().map(|(z, _)| m.makespan < *z).unwrap_or(true);
-                if better {
-                    best = Some((m.makespan, cfgs));
+            let mut best: Option<(f64, Vec<CommConfig>)> = None;
+            while !exhausted {
+                let mut candidates: Vec<Vec<CommConfig>> = Vec::with_capacity(CHUNK);
+                while candidates.len() < CHUNK && !exhausted {
+                    candidates.push((0..n).map(|j| per_comm[j][idx[j]]).collect());
+                    // Odometer increment.
+                    let mut k = 0;
+                    loop {
+                        if k == n {
+                            exhausted = true;
+                            break;
+                        }
+                        idx[k] += 1;
+                        if idx[k] < per_comm[k].len() {
+                            break;
+                        }
+                        idx[k] = 0;
+                        k += 1;
+                    }
                 }
-                trajectory.push((iterations, best.as_ref().unwrap().0));
-                // Odometer increment.
-                let mut k = 0;
-                loop {
-                    if k == n {
-                        let (_, cfgs) = best.unwrap();
-                        return (cfgs, iterations, trajectory);
+                let evals = eval.evaluate_batch(g, &candidates);
+                let top =
+                    evals.iter().map(|e| e.fidelity).max().expect("non-empty chunk");
+                for (i, e) in evals.iter().enumerate() {
+                    iterations += 1;
+                    // Only answers at the chunk's top fidelity may win (a
+                    // screened-out prediction is never the returned
+                    // optimum; a tiered evaluator simulates at least one
+                    // candidate per chunk).
+                    if e.fidelity == top {
+                        let better =
+                            best.as_ref().map(|(z, _)| e.makespan < *z).unwrap_or(true);
+                        if better {
+                            best = Some((e.makespan, candidates[i].clone()));
+                        }
                     }
-                    idx[k] += 1;
-                    if idx[k] < per_comm[k].len() {
-                        break;
+                    if let Some((z, _)) = &best {
+                        trajectory.push((iterations, *z));
                     }
-                    idx[k] = 0;
-                    k += 1;
                 }
             }
+            let (_, cfgs) = best.expect("at least one candidate at top fidelity");
+            (cfgs, iterations, trajectory)
         })
     }
 }

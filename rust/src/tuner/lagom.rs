@@ -18,9 +18,9 @@
 
 use super::{select_subspace, TuneResult, Tuner};
 use crate::comm::{CommConfig, ParamSpace};
+use crate::eval::{Evaluation, Evaluator};
 use crate::graph::{IterationSchedule, OverlapGroup};
 use crate::hw::ClusterSpec;
-use crate::profiler::ProfileBackend;
 use crate::util::prng::Prng;
 
 /// Which communication to escalate next — metric H (the paper) or the
@@ -72,7 +72,7 @@ impl LagomTuner {
     fn tune_group(
         &mut self,
         group: &OverlapGroup,
-        backend: &mut dyn ProfileBackend,
+        eval: &mut dyn Evaluator,
     ) -> (Vec<CommConfig>, u64, Vec<(u64, f64)>) {
         let n = group.comms.len();
 
@@ -88,7 +88,7 @@ impl LagomTuner {
         }
         let mut subspaces = Vec::with_capacity(n);
         for (j, op) in group.comms.iter().enumerate() {
-            let sub = select_subspace(op, group, j, &self.cluster, &self.space, backend, &base);
+            let sub = select_subspace(op, group, j, &self.cluster, &self.space, eval, &base);
             subspaces.push(sub);
         }
 
@@ -108,11 +108,21 @@ impl LagomTuner {
         const WEAK_LIMIT: u32 = 2;
         const REL_TOL: f64 = 0.02;
 
-        // Baseline measurement at all-minimal.
-        let m0 = backend.profile_group(group, &cur);
+        // Baseline at all-minimal, always at the evaluator's full fidelity:
+        // it anchors every later comparison and the returned config.
+        let m0 = eval.evaluate_full(group, &cur);
+        // What counts as a trustworthy makespan depends on the evaluator:
+        // with a tiered one, only executed (simulated/runtime) answers may
+        // pick the final config; with a single-tier evaluator every answer
+        // is as good as the baseline.
+        let baseline_measured = m0.is_measured();
+        let trusted = |e: &Evaluation| e.is_measured() || !baseline_measured;
         let mut y = m0.comp_total;
         let mut xs = m0.comm_times.clone();
         let mut best_z = m0.makespan;
+        // Best trusted configuration seen — what tuning ultimately returns,
+        // so a screened-out candidate can never become the final answer.
+        let mut best_cfgs = cur.clone();
         let mut iterations = 1u64;
         let mut trajectory = vec![(iterations, best_z)];
 
@@ -141,12 +151,18 @@ impl LagomTuner {
                 continue;
             }
 
-            // Alg 2: escalate and profile the candidate.
+            // Alg 2: escalate and cost the candidate (a tiered evaluator
+            // answers analytically when the candidate is predicted clearly
+            // worse than the best simulated point of this group).
             let cand = self.space.escalate(cur[j], lr[j]);
             let mut trial = cur.clone();
             trial[j] = cand;
-            let m = backend.profile_group(group, &trial);
+            let m = eval.evaluate(group, &trial);
             iterations += 1;
+            if trusted(&m) && m.makespan < best_z {
+                best_z = m.makespan;
+                best_cfgs = trial.clone();
+            }
 
             let x_new = m.comm_times[j];
             let dx = xs[j] - x_new; // > 0 ⇒ communication improved
@@ -181,9 +197,6 @@ impl LagomTuner {
             cur[j] = cand;
             xs[j] = x_new;
             y = m.comp_total;
-            if m.makespan < best_z {
-                best_z = m.makespan;
-            }
             trajectory.push((iterations, best_z));
 
             // Alg 2 line 5, second condition: communication is no longer
@@ -193,7 +206,7 @@ impl LagomTuner {
             }
         }
 
-        (cur, iterations, trajectory)
+        (best_cfgs, iterations, trajectory)
     }
 }
 
@@ -209,7 +222,7 @@ impl Tuner for LagomTuner {
     fn tune_schedule(
         &mut self,
         schedule: &IterationSchedule,
-        backend: &mut dyn ProfileBackend,
+        eval: &mut dyn Evaluator,
     ) -> TuneResult {
         // Group-level caching: identical overlap groups (same layer shape
         // repeated L times) reuse the tuned configs — this is what makes
@@ -218,7 +231,7 @@ impl Tuner for LagomTuner {
         let mut cache: Vec<(GroupKey, Vec<CommConfig>)> = Vec::new();
         let mut configs = Vec::with_capacity(schedule.num_comms());
         let mut iterations = 0u64;
-        let start_calls = backend.calls();
+        let start_expensive = eval.stats().expensive_calls();
         let mut trajectory = Vec::new();
         for g in &schedule.groups {
             if g.comms.is_empty() {
@@ -229,7 +242,7 @@ impl Tuner for LagomTuner {
                 configs.extend(cfgs.iter().copied());
                 continue;
             }
-            let (cfgs, iters, mut traj) = self.tune_group(g, backend);
+            let (cfgs, iters, mut traj) = self.tune_group(g, eval);
             for (it, z) in traj.drain(..) {
                 trajectory.push((iterations + it, z));
             }
@@ -240,7 +253,7 @@ impl Tuner for LagomTuner {
         TuneResult {
             configs,
             iterations,
-            profile_calls: backend.calls() - start_calls,
+            profile_calls: eval.stats().expensive_calls() - start_expensive,
             trajectory,
         }
     }

@@ -7,7 +7,7 @@ use super::{TuneResult, Tuner};
 use crate::comm::nccl_default_config;
 use crate::graph::IterationSchedule;
 use crate::hw::ClusterSpec;
-use crate::profiler::ProfileBackend;
+use crate::eval::Evaluator;
 use crate::util::units::KIB;
 
 pub struct LigerTuner {
@@ -32,7 +32,7 @@ impl Tuner for LigerTuner {
     fn tune_schedule(
         &mut self,
         schedule: &IterationSchedule,
-        _backend: &mut dyn ProfileBackend,
+        _eval: &mut dyn Evaluator,
     ) -> TuneResult {
         let configs = schedule
             .comm_indices()

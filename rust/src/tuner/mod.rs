@@ -3,9 +3,14 @@
 //! plus Liger-style static capping and an exhaustive ground-truth search
 //! for small cases.
 //!
-//! All tuners interact with the world exclusively through
-//! [`crate::profiler::ProfileBackend`] — measured times, never model
-//! internals — mirroring how they would run on a real cluster.
+//! All tuners cost candidates exclusively through
+//! [`crate::eval::Evaluator`] — timing numbers, never model internals.
+//! Handing a tuner a different evaluator changes its fidelity, not its
+//! algorithm: the memoizing simulator ([`crate::eval::SimEvaluator`]), the
+//! closed form ([`crate::eval::AnalyticEvaluator`]), analytic screening in
+//! front of the simulator ([`crate::eval::TieredEvaluator`]), or — because every
+//! [`crate::profiler::ProfileBackend`] also implements `Evaluator` — the
+//! distributed coordinator, exactly as they would run on a real cluster.
 
 pub mod autoccl;
 pub mod exhaustive;
@@ -20,9 +25,9 @@ pub use liger::LigerTuner;
 pub use nccl::NcclTuner;
 
 use crate::comm::{Algorithm, CommConfig, CommOpDesc, ParamSpace, Protocol, Transport};
+use crate::eval::{best_index_by, Evaluator};
 use crate::graph::{IterationSchedule, OverlapGroup};
 use crate::hw::ClusterSpec;
-use crate::profiler::ProfileBackend;
 use crate::util::units::KIB;
 
 /// Outcome of tuning a schedule.
@@ -30,9 +35,12 @@ use crate::util::units::KIB;
 pub struct TuneResult {
     /// One config per comm op, in flat schedule order.
     pub configs: Vec<CommConfig>,
-    /// Tuning-loop iterations executed (the Fig 8c x-axis).
+    /// Tuning-loop iterations executed (the Fig 8c x-axis). Counts every
+    /// candidate the tuner considered, whatever tier answered it.
     pub iterations: u64,
-    /// Profile calls consumed (≥ iterations; includes setup probes).
+    /// Expensive (simulated/runtime) profile executions consumed — what
+    /// tiered evaluation reduces. With a pure-simulated evaluator this is
+    /// ≥ `iterations` (setup probes included).
     pub profile_calls: u64,
     /// Convergence trajectory: (cumulative iterations, best makespan seen).
     pub trajectory: Vec<(u64, f64)>,
@@ -42,26 +50,29 @@ pub struct TuneResult {
 pub trait Tuner {
     fn name(&self) -> String;
 
-    /// Tune every communication of `schedule`, measuring through `backend`.
+    /// Tune every communication of `schedule`, costing candidates through
+    /// `eval`.
     fn tune_schedule(
         &mut self,
         schedule: &IterationSchedule,
-        backend: &mut dyn ProfileBackend,
+        eval: &mut dyn Evaluator,
     ) -> TuneResult;
 }
 
 /// AutoCCL's divide-and-conquer first stage, shared by Lagom (§3.2 "we
 /// adopt a divide-and-conquer strategy"): pick the implementation-related
-/// subspace (Algorithm, Protocol, Transport) per communication by probing
-/// each candidate at a nominal resource configuration and keeping the one
-/// with the lowest measured communication time.
+/// subspace (Algorithm, Protocol, Transport) per communication by costing
+/// each candidate at a nominal resource configuration — as one frontier,
+/// so a tiered evaluator screens it analytically and simulates only the
+/// survivors — and keeping the best communication time at the highest
+/// fidelity answered.
 pub fn select_subspace(
     op: &CommOpDesc,
     group: &OverlapGroup,
     op_index: usize,
     cluster: &ClusterSpec,
     space: &ParamSpace,
-    backend: &mut dyn ProfileBackend,
+    eval: &mut dyn Evaluator,
     base_configs: &[CommConfig],
 ) -> (Algorithm, Protocol, Transport) {
     let spans_net = cluster.topology.spans_nodes(op.base_rank, op.world);
@@ -73,19 +84,18 @@ pub fn select_subspace(
         nt: 256,
         chunk: 512 * KIB,
     };
-    let mut best = None;
-    let mut best_t = f64::INFINITY;
-    for (a, p, t) in space.subspaces(spans_net) {
-        let mut cfgs = base_configs.to_vec();
-        cfgs[op_index] = nominal(a, p, t);
-        let m = backend.profile_group(group, &cfgs);
-        let x = m.comm_times[op_index];
-        if x < best_t {
-            best_t = x;
-            best = Some((a, p, t));
-        }
-    }
-    best.expect("at least one subspace")
+    let subs = space.subspaces(spans_net);
+    let candidates: Vec<Vec<CommConfig>> = subs
+        .iter()
+        .map(|&(a, p, t)| {
+            let mut cfgs = base_configs.to_vec();
+            cfgs[op_index] = nominal(a, p, t);
+            cfgs
+        })
+        .collect();
+    let evals = eval.evaluate_batch(group, &candidates);
+    let best = best_index_by(&evals, |e| e.comm_times[op_index]).expect("at least one subspace");
+    subs[best]
 }
 
 /// Convenience: tune group-by-group with a per-group closure, stitching the
@@ -93,13 +103,13 @@ pub fn select_subspace(
 /// overlap groups are separated by stream syncs.
 pub fn tune_groupwise<F>(
     schedule: &IterationSchedule,
-    backend: &mut dyn ProfileBackend,
+    eval: &mut dyn Evaluator,
     mut tune_group: F,
 ) -> TuneResult
 where
-    F: FnMut(&OverlapGroup, &mut dyn ProfileBackend) -> (Vec<CommConfig>, u64, Vec<(u64, f64)>),
+    F: FnMut(&OverlapGroup, &mut dyn Evaluator) -> (Vec<CommConfig>, u64, Vec<(u64, f64)>),
 {
-    let start_calls = backend.calls();
+    let start_expensive = eval.stats().expensive_calls();
     let mut configs = Vec::with_capacity(schedule.num_comms());
     let mut iterations = 0;
     let mut trajectory = Vec::new();
@@ -107,7 +117,7 @@ where
         if g.comms.is_empty() {
             continue;
         }
-        let (cfgs, iters, mut traj) = tune_group(g, backend);
+        let (cfgs, iters, mut traj) = tune_group(g, eval);
         assert_eq!(cfgs.len(), g.comms.len());
         configs.extend(cfgs);
         // Offset this group's trajectory by iterations consumed so far.
@@ -119,7 +129,7 @@ where
     TuneResult {
         configs,
         iterations,
-        profile_calls: backend.calls() - start_calls,
+        profile_calls: eval.stats().expensive_calls() - start_expensive,
         trajectory,
     }
 }

@@ -4,7 +4,7 @@ use super::{TuneResult, Tuner};
 use crate::comm::nccl_default_config;
 use crate::graph::IterationSchedule;
 use crate::hw::ClusterSpec;
-use crate::profiler::ProfileBackend;
+use crate::eval::Evaluator;
 
 pub struct NcclTuner {
     pub cluster: ClusterSpec,
@@ -24,7 +24,7 @@ impl Tuner for NcclTuner {
     fn tune_schedule(
         &mut self,
         schedule: &IterationSchedule,
-        _backend: &mut dyn ProfileBackend,
+        _eval: &mut dyn Evaluator,
     ) -> TuneResult {
         let configs = schedule
             .comm_indices()
@@ -39,6 +39,7 @@ impl Tuner for NcclTuner {
 mod tests {
     use super::super::testutil::*;
     use super::*;
+    use crate::profiler::ProfileBackend;
 
     #[test]
     fn zero_cost_and_full_coverage() {

@@ -1,0 +1,79 @@
+//! Incremental FNV-1a (64-bit) content hashing.
+//!
+//! Not cryptographic — it only needs to be stable across runs and
+//! sensitive to every pushed field. Used wherever the crate keys results
+//! by *content* rather than by label: the campaign's scenario cache
+//! ([`crate::campaign::cache`]) and the evaluation memo cache
+//! ([`crate::eval::cache`]).
+
+/// Incremental FNV-1a (64-bit) content hasher.
+#[derive(Debug, Clone)]
+pub struct Fingerprint {
+    state: u64,
+}
+
+impl Default for Fingerprint {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fingerprint {
+    pub fn new() -> Fingerprint {
+        Fingerprint { state: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn push_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn push_u64(&mut self, v: u64) {
+        self.push_bytes(&v.to_le_bytes());
+    }
+
+    pub fn push_f64(&mut self, v: f64) {
+        self.push_bytes(&v.to_bits().to_le_bytes());
+    }
+
+    /// Length-prefixed so `("ab","c")` and `("a","bc")` hash differently.
+    pub fn push_str(&mut self, s: &str) {
+        self.push_u64(s.len() as u64);
+        self.push_bytes(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_field_sensitive() {
+        let mut a = Fingerprint::new();
+        a.push_u64(1);
+        a.push_f64(2.0);
+        let mut b = Fingerprint::new();
+        b.push_u64(1);
+        b.push_f64(2.0);
+        assert_eq!(a.finish(), b.finish());
+        b.push_u64(0);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn string_boundaries_matter() {
+        let mut a = Fingerprint::new();
+        a.push_str("ab");
+        a.push_str("c");
+        let mut b = Fingerprint::new();
+        b.push_str("a");
+        b.push_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

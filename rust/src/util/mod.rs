@@ -4,12 +4,14 @@
 //! pieces a networked project would pull from crates.io (PRNG, JSON, stats,
 //! logging, unit formatting) are implemented here from scratch.
 
+pub mod fingerprint;
 pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod stats;
 pub mod units;
 
+pub use fingerprint::Fingerprint;
 pub use json::Json;
 pub use prng::Prng;
 pub use stats::Summary;

@@ -65,7 +65,9 @@ fn cache_keys_unique_across_grid() {
     let config = CampaignConfig::default();
     let mut keys: Vec<CacheKey> = grid
         .iter()
-        .map(|s| CacheKey::of(&s.cluster, &s.workload, &config.space, config.seed))
+        .map(|s| {
+            CacheKey::of(&s.cluster, &s.workload, &config.space, config.seed, config.fidelity)
+        })
         .collect();
     let n = keys.len();
     keys.sort_unstable();

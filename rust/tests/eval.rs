@@ -1,0 +1,203 @@
+//! Cross-tier integration tests for the evaluation layer: analytic vs
+//! simulated agreement on the Table-2-style fixtures, tiered-tuning
+//! safety, and evaluation-cache semantics.
+
+use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
+use lagom::eval::cache::eval_key;
+use lagom::eval::{
+    AnalyticEvaluator, EvalMode, Evaluator, Fidelity, SimEvaluator, TieredEvaluator,
+};
+use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::report::evaluate;
+use lagom::sim::SimEnv;
+use lagom::tuner::{LagomTuner, Tuner};
+use lagom::util::units::MIB;
+
+/// Computation-bound overlap (Y >> X at sane configs) — the regime where
+/// Lagom must beat comm-greedy tuning (Table 2's FSDP-style patterns).
+fn comp_bound_group() -> OverlapGroup {
+    OverlapGroup::with(
+        "comp_bound",
+        vec![
+            CompOpDesc::ffn("ffn0", 2048, 2560, 10240, 2),
+            CompOpDesc::ffn("ffn1", 2048, 2560, 10240, 2),
+        ],
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+    )
+}
+
+/// Communication-bound overlap (X >> Y).
+fn comm_bound_group() -> OverlapGroup {
+    OverlapGroup::with(
+        "comm_bound",
+        vec![CompOpDesc::matmul("mm", 1024, 1024, 1024, 2)],
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 256 * MIB, 8)],
+    )
+}
+
+fn schedule_of(groups: Vec<OverlapGroup>) -> IterationSchedule {
+    let mut s = IterationSchedule::new("eval-test");
+    for g in groups {
+        s.push(g);
+    }
+    s
+}
+
+#[test]
+fn analytic_and_simulated_tiers_agree_within_tolerance() {
+    // The closed form can replace the simulator for *screening*: its
+    // makespan must track ground truth within the error budget
+    // `ablation_model_fit` establishes, and it must classify each fixture
+    // onto the correct side of the comp/comm-bound divide.
+    let cluster = ClusterSpec::cluster_b(1);
+    let cfg = vec![CommConfig::default_ring()];
+    for group in [comp_bound_group(), comm_bound_group()] {
+        let mut analytic = AnalyticEvaluator::new(cluster.clone());
+        let mut sim = SimEvaluator::deterministic(cluster.clone());
+        let a = analytic.evaluate(&group, &cfg);
+        let s = sim.evaluate(&group, &cfg);
+        let rel = (a.makespan - s.makespan).abs() / s.makespan;
+        assert!(
+            rel < 0.35,
+            "{}: analytic {} vs simulated {} ({}% off)",
+            group.name,
+            a.makespan,
+            s.makespan,
+            (rel * 100.0).round()
+        );
+        assert_eq!(
+            a.comp_total > a.comm_total,
+            s.comp_total > s.comm_total,
+            "{}: tiers disagree on the comp/comm-bound regime",
+            group.name
+        );
+        assert_eq!(a.fidelity, Fidelity::Analytic);
+        assert_eq!(s.fidelity, Fidelity::Simulated);
+        assert!(a.confidence < s.confidence);
+    }
+}
+
+#[test]
+fn tiered_tuning_matches_simulated_path_with_fewer_sim_calls() {
+    // TieredEvaluator must never hand tuning a final config the plain
+    // simulated path would reject: re-scored on fresh simulator noise,
+    // the tiered-tuned schedule stays within tolerance of the
+    // simulated-tuned one — while spending fewer simulator executions.
+    let cluster = ClusterSpec::cluster_b(1);
+    let s = schedule_of(vec![comp_bound_group(), comm_bound_group()]);
+
+    let mut sim_eval = SimEvaluator::new(cluster.clone(), 17);
+    let r_sim = LagomTuner::new(cluster.clone()).tune_schedule(&s, &mut sim_eval);
+
+    let mut tiered_eval = TieredEvaluator::new(cluster.clone(), 17);
+    let r_tiered = LagomTuner::new(cluster.clone()).tune_schedule(&s, &mut tiered_eval);
+
+    // Fresh-noise scoring (the report's protocol): neither path gets
+    // credit for overfitting its own noise stream.
+    let z_sim = evaluate(&s, &r_sim.configs, &cluster, 1, 9090);
+    let z_tiered = evaluate(&s, &r_tiered.configs, &cluster, 1, 9090);
+    assert!(
+        z_tiered <= z_sim * 1.10,
+        "tiered config {z_tiered} must not lose to simulated path {z_sim}"
+    );
+    assert!(
+        r_tiered.profile_calls < r_sim.profile_calls,
+        "tiering must save simulator calls: {} vs {}",
+        r_tiered.profile_calls,
+        r_sim.profile_calls
+    );
+    let stats = tiered_eval.stats();
+    assert!(stats.pruned > 0, "screening actually pruned candidates");
+    // Every simulator execution is accounted for by a promotion (some
+    // promotions may additionally be served from the memo cache).
+    assert!(stats.promoted >= stats.sim_calls && stats.sim_calls > 0);
+}
+
+#[test]
+fn memo_cache_hits_on_identical_content_only() {
+    // Satellite acceptance: identical (group, config, seed) hits the memo
+    // cache; changing any cost-affecting field — including the cluster's
+    // link bandwidth — misses.
+    let cluster = ClusterSpec::cluster_b(1);
+    let group = comp_bound_group();
+    let cfg = vec![CommConfig::default_ring()];
+
+    let mut ev = SimEvaluator::new(cluster.clone(), 5);
+    let first = ev.evaluate(&group, &cfg);
+    let again = ev.evaluate(&group, &cfg);
+    assert!(again.cached, "identical (group, config, seed) is a hit");
+    assert_eq!(first.makespan, again.makespan);
+    assert_eq!(ev.stats().sim_calls, 1);
+
+    // Any cost-affecting change must miss: config, group content, seed,
+    // noise level, and cluster bandwidth all key the cache.
+    let base = eval_key(&cluster, &group, &cfg, 5, 3, 0.015);
+    let mut faster = cluster.clone();
+    faster.topology.intra.bandwidth *= 1.5;
+    assert_ne!(base, eval_key(&faster, &group, &cfg, 5, 3, 0.015), "cluster bandwidth");
+    let mut heavier = group.clone();
+    heavier.comms[0].bytes *= 2;
+    assert_ne!(base, eval_key(&cluster, &heavier, &cfg, 5, 3, 0.015), "group content");
+    let mut other_cfg = cfg.clone();
+    other_cfg[0].nt = 128;
+    assert_ne!(base, eval_key(&cluster, &group, &other_cfg, 5, 3, 0.015), "config");
+    assert_ne!(base, eval_key(&cluster, &group, &cfg, 6, 3, 0.015), "seed");
+
+    // And the simulated numbers genuinely differ on the changed cluster.
+    let mut ev_fast = SimEvaluator::new(faster, 5);
+    let fast = ev_fast.evaluate(&group, &cfg);
+    assert!(fast.makespan < first.makespan, "more bandwidth, faster comm");
+}
+
+#[test]
+fn batch_and_single_evaluation_agree() {
+    // evaluate_batch is an amortization, not a different measurement: on a
+    // single-tier evaluator it must return exactly the per-call results.
+    let cluster = ClusterSpec::cluster_b(1);
+    let group = comp_bound_group();
+    let frontier: Vec<Vec<CommConfig>> = [2u32, 8, 32]
+        .iter()
+        .map(|&nc| vec![CommConfig { nc, ..CommConfig::default_ring() }])
+        .collect();
+    let mut batch_ev = SimEvaluator::new(cluster.clone(), 11);
+    let batched = batch_ev.evaluate_batch(&group, &frontier);
+    let mut single_ev = SimEvaluator::new(cluster, 11);
+    for (cand, b) in frontier.iter().zip(&batched) {
+        let s = single_ev.evaluate(&group, cand);
+        assert_eq!(s.makespan, b.makespan, "content-keyed noise: order-independent");
+    }
+}
+
+#[test]
+fn noise_level_sweeps_through_with_noise() {
+    // `SimEnv::with_noise` lets the evaluation layer sweep sigma without
+    // post-construction field mutation; sigma is part of the cache key.
+    let cluster = ClusterSpec::cluster_b(1);
+    let group = comm_bound_group();
+    let cfg = vec![CommConfig::default_ring()];
+    let quiet = SimEnv::with_noise(cluster.clone(), 3, 0.0);
+    assert_eq!(quiet.noise_sigma, 0.0);
+    let mut noisy = SimEvaluator::new(cluster.clone(), 3).with_noise_sigma(0.08);
+    let mut calm = SimEvaluator::new(cluster, 3);
+    let a = noisy.evaluate(&group, &cfg);
+    let b = calm.evaluate(&group, &cfg);
+    assert_ne!(a.makespan, b.makespan, "sigma changes the keyed noise stream");
+}
+
+#[test]
+fn eval_mode_factory_drives_all_three_tiers() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let s = schedule_of(vec![comp_bound_group()]);
+    for (mode, expect_sim) in [
+        (EvalMode::Analytic, false),
+        (EvalMode::Simulated, true),
+        (EvalMode::Tiered, true),
+    ] {
+        let mut ev = lagom::eval::make_evaluator(mode, &cluster, 23);
+        let r = LagomTuner::new(cluster.clone()).tune_schedule(&s, ev.as_mut());
+        assert_eq!(r.configs.len(), 1, "{mode:?}");
+        assert_eq!(r.profile_calls > 0, expect_sim, "{mode:?}: sim usage");
+        assert!(ev.stats().evaluations > 0);
+    }
+}
