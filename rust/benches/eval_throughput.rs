@@ -1,0 +1,146 @@
+//! Perf trajectory — candidate-evaluation throughput on the hot path.
+//!
+//! Measures candidates/sec on a fixed frontier over a **many-wave**
+//! overlap group (hundreds of threadblock waves per comp op — the regime
+//! where fine-grained overlap schedules live, and where the pre-PR
+//! per-wave inner loop was slowest) for:
+//!
+//! * the analytic tier (closed form, the screening cost),
+//! * the serial per-wave simulator (`simulate_group_reference`:
+//!   O(#waves) stepping + full `GroupResult` allocation — a
+//!   *conservative* stand-in for the PR 2 baseline, which additionally
+//!   recomputed the whole per-wave cost model and ran the comm-stream
+//!   window logic every wave, so the true pre-PR cost was higher than
+//!   what this measures),
+//! * the compressed serial simulator (`SimEvaluator`, allocation-free
+//!   summary path + closed-form wave jumps),
+//! * the compressed parallel simulator (`--jobs 0`, one worker per core),
+//! * the tiered evaluator (screened frontier).
+//!
+//! Acceptance (asserted): parallel+compressed ≥ 5× the serial per-wave
+//! baseline — a lower bound on the real improvement over PR 2. Appends
+//! its table to `target/bench_results.jsonl`.
+
+use lagom::bench::{save_table, Table};
+use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
+use lagom::eval::{AnalyticEvaluator, Evaluator, SimEvaluator, TieredEvaluator};
+use lagom::graph::{CompOpDesc, OverlapGroup};
+use lagom::hw::ClusterSpec;
+use lagom::sim::{simulate_group_reference, SimEnv};
+use lagom::util::parallel::effective_jobs;
+use lagom::util::units::{KIB, MIB};
+use std::time::Instant;
+
+/// Thousands of waves per candidate: 4 × 262144-threadblock GEMMs
+/// (512×512 output tiles each) against a long-running collective, so the
+/// per-wave baseline pays O(#waves) per candidate while the compressed
+/// path pays O(#comm-op transitions) — the structural gap the assertion
+/// rides on, independent of the runner's core count.
+fn many_wave_group() -> OverlapGroup {
+    OverlapGroup::with(
+        "many_wave",
+        (0..4)
+            .map(|i| CompOpDesc::matmul(format!("mm{i}"), 65536, 65536, 4096, 2))
+            .collect(),
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 512 * MIB, 8)],
+    )
+}
+
+fn frontier() -> Vec<Vec<CommConfig>> {
+    let mut f = Vec::new();
+    for nc in [1u32, 2, 4, 8, 16, 32] {
+        for shift in 0..8u32 {
+            let chunk = (64 * KIB) << shift;
+            f.push(vec![CommConfig { nc, chunk, ..CommConfig::default_ring() }]);
+        }
+    }
+    f
+}
+
+/// Run `round` (returning candidates evaluated) until `min_secs` elapsed;
+/// returns candidates/sec.
+fn cps<F: FnMut() -> usize>(min_secs: f64, mut round: F) -> f64 {
+    let mut n = 0usize;
+    let t0 = Instant::now();
+    loop {
+        n += round();
+        if t0.elapsed().as_secs_f64() >= min_secs {
+            break;
+        }
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let group = many_wave_group();
+    let frontier = frontier();
+    let n = frontier.len();
+    let min_secs = 0.2;
+
+    // Closed-form screening tier.
+    let analytic = cps(min_secs, || {
+        let mut ev = AnalyticEvaluator::new(cluster.clone());
+        ev.evaluate_batch(&group, &frontier).len()
+    });
+
+    // Per-wave serial baseline (conservative PR 2 stand-in): O(#waves)
+    // stepping, full GroupResult per candidate.
+    let serial_ref = cps(min_secs, || {
+        let mut env = SimEnv::deterministic(cluster.clone());
+        for cand in &frontier {
+            std::hint::black_box(simulate_group_reference(&group, cand, &mut env));
+        }
+        n
+    });
+
+    // Compressed + allocation-free, serial. Fresh evaluator per round so
+    // the memo cache never answers (we are timing simulation, not lookup).
+    let serial_fast = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone());
+        ev.evaluate_batch(&group, &frontier).len()
+    });
+
+    // Compressed + parallel (one worker per core).
+    let jobs = effective_jobs(0, n);
+    let parallel_fast = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(0);
+        ev.evaluate_batch(&group, &frontier).len()
+    });
+
+    // Tiered: analytic screen, top-k simulated survivors.
+    let tiered = cps(min_secs, || {
+        let mut ev = TieredEvaluator::new(cluster.clone(), 7).with_jobs(0);
+        ev.evaluate_batch(&group, &frontier).len()
+    });
+
+    let mut t = Table::new(
+        format!(
+            "Evaluation throughput — {n}-candidate frontier, many-wave group ({} comps)",
+            group.comps.len()
+        ),
+        &["mode", "candidates/sec", "vs per-wave serial"],
+    );
+    let mut row = |name: &str, v: f64, base: f64| {
+        t.row(vec![name.to_string(), format!("{v:.0}"), format!("{:.1}x", v / base)]);
+    };
+    row("analytic (closed form)", analytic, serial_ref);
+    row("sim serial per-wave (conservative PR2 stand-in)", serial_ref, serial_ref);
+    row("sim serial compressed", serial_fast, serial_ref);
+    row(&format!("sim parallel compressed (jobs={jobs})"), parallel_fast, serial_ref);
+    row("tiered (screen + top-k sim)", tiered, serial_ref);
+    t.print();
+    save_table(&t);
+
+    let speedup = parallel_fast / serial_ref;
+    println!(
+        "\nparallel+compressed vs per-wave serial baseline: {speedup:.1}x \
+         (compression alone: {:.1}x)",
+        serial_fast / serial_ref
+    );
+    assert!(
+        speedup >= 5.0,
+        "acceptance: parallel+compressed sim must be >=5x the serial per-wave \
+         baseline, got {speedup:.2}x"
+    );
+}

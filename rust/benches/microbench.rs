@@ -10,7 +10,10 @@ use lagom::hw::ClusterSpec;
 use lagom::models::ModelSpec;
 use lagom::parallel::{build_schedule, Parallelism, Workload};
 use lagom::profiler::SimProfiler;
-use lagom::sim::{simulate_group, simulate_schedule, SimEnv};
+use lagom::sim::{
+    simulate_group, simulate_group_reference, simulate_group_summary, simulate_schedule, SimEnv,
+    SimScratch,
+};
 use lagom::tuner::{LagomTuner, NcclTuner, Tuner};
 
 fn main() {
@@ -42,6 +45,20 @@ fn main() {
     let mut env = SimEnv::new(cluster.clone(), 2);
     runner.bench("simulate_group(bwd layer, 2 comms)", || {
         std::hint::black_box(simulate_group(&group, &gcfg, &mut env));
+    });
+
+    // The deterministic hot path: per-wave reference vs wave-compressed vs
+    // the allocation-free summary entry point (what the tuners now pay).
+    let mut det = SimEnv::deterministic(cluster.clone());
+    runner.bench("simulate_group det (per-wave reference)", || {
+        std::hint::black_box(simulate_group_reference(&group, &gcfg, &mut det));
+    });
+    runner.bench("simulate_group det (wave-compressed)", || {
+        std::hint::black_box(simulate_group(&group, &gcfg, &mut det));
+    });
+    let mut scratch = SimScratch::new();
+    runner.bench("simulate_group_summary det (alloc-free)", || {
+        std::hint::black_box(simulate_group_summary(&group, &gcfg, &mut det, &mut scratch));
     });
 
     // Full 32-layer Phi-2 FSDP iteration.

@@ -24,6 +24,13 @@ use std::sync::Mutex;
 // compatibility with existing `campaign::Fingerprint` users.
 pub use crate::util::fingerprint::Fingerprint;
 
+/// On-disk schema tag; a loaded file with any other tag starts empty.
+/// v2 added per-strategy sim-call counts and fidelity-aware keys; v3
+/// invalidates v2 numbers because the engine's deterministic arithmetic
+/// changed with wave compression (identical to the last ulps, but "cache
+/// hit == recompute" must stay exactly true).
+const SCHEMA: &str = "lagom.campaign.cache/v3";
+
 /// Content hash identifying one scenario's tuning problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CacheKey(u64);
@@ -190,18 +197,23 @@ impl ResultCache {
         }
     }
 
-    /// File-backed cache: loads existing entries if the file parses, and
-    /// [`ResultCache::save`] writes them back. A missing or corrupt file
-    /// simply starts empty — the cache is an accelerator, never a failure.
+    /// File-backed cache: loads existing entries if the file parses *and*
+    /// carries the current schema tag, and [`ResultCache::save`] writes
+    /// them back. A missing, corrupt or outdated-schema file simply starts
+    /// empty — the cache is an accelerator, never a failure.
     pub fn open(path: impl Into<PathBuf>) -> ResultCache {
         let path = path.into();
         let mut entries = BTreeMap::new();
         if let Ok(text) = std::fs::read_to_string(&path) {
             if let Ok(doc) = Json::parse(&text) {
-                if let Some(Json::Obj(map)) = doc.get("entries").cloned() {
-                    for (k, v) in map {
-                        if let Some(o) = CachedOutcome::from_json(&v) {
-                            entries.insert(k, o);
+                let schema_ok =
+                    doc.get("schema").and_then(|s| s.as_str()) == Some(SCHEMA);
+                if schema_ok {
+                    if let Some(Json::Obj(map)) = doc.get("entries").cloned() {
+                        for (k, v) in map {
+                            if let Some(o) = CachedOutcome::from_json(&v) {
+                                entries.insert(k, o);
+                            }
                         }
                     }
                 }
@@ -248,8 +260,7 @@ impl ResultCache {
     fn to_json(&self) -> Json {
         let entries = self.entries.lock().unwrap();
         Json::obj(vec![
-            // v2: adds per-strategy sim-call counts and fidelity-aware keys.
-            ("schema", Json::str("lagom.campaign.cache/v2")),
+            ("schema", Json::str(SCHEMA)),
             (
                 "entries",
                 Json::Obj(entries.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
@@ -377,4 +388,28 @@ mod tests {
         let _ = std::fs::remove_file(&path);
     }
 
+    #[test]
+    fn outdated_schema_starts_empty() {
+        // A v2-era cache carries numbers from the pre-compression engine
+        // (ulp-level different): it must be discarded wholesale, not mixed
+        // with freshly measured scenarios.
+        let path = std::env::temp_dir()
+            .join(format!("lagom_cache_v2_{}.json", std::process::id()));
+        {
+            let cache = ResultCache::open(&path);
+            let (cluster, w) = workload();
+            let key =
+                CacheKey::of(&cluster, &w, &ParamSpace::default(), 7, EvalMode::Simulated);
+            cache.insert(key, outcome());
+            cache.save().unwrap();
+        }
+        let stale = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace(SCHEMA, "lagom.campaign.cache/v2");
+        assert_ne!(stale, std::fs::read_to_string(&path).unwrap(), "schema rewritten");
+        std::fs::write(&path, stale).unwrap();
+        let reopened = ResultCache::open(&path);
+        assert!(reopened.is_empty(), "old-schema entries discarded");
+        let _ = std::fs::remove_file(&path);
+    }
 }

@@ -5,10 +5,9 @@ use super::cache::{CacheKey, CachedOutcome, ResultCache};
 use super::grid::Scenario;
 use crate::comm::ParamSpace;
 use crate::eval::EvalMode;
-use crate::report::compare_strategies_with_opts;
+use crate::report::compare_strategies_with_jobs;
+use crate::util::parallel::{effective_jobs, run_indexed};
 use crate::util::prng::splitmix64;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 /// Campaign-wide knobs.
@@ -19,6 +18,13 @@ pub struct CampaignConfig {
     pub seed: u64,
     /// Worker threads; `0` = one per available core (capped by the grid).
     pub jobs: usize,
+    /// Worker threads *per scenario* for the evaluators' parallel
+    /// `evaluate_batch` path (`--eval-jobs`). Composes with `jobs` as
+    /// scenarios × in-scenario candidates; the default of 1 keeps the
+    /// scenario level as the sole parallelism. NOT part of the cache key:
+    /// evaluation results are key-derived, so this knob cannot change a
+    /// single number.
+    pub eval_jobs: usize,
     /// Tunable parameter space: both part of the cache key and the space
     /// the AutoCCL/Lagom tuners actually search.
     pub space: ParamSpace,
@@ -32,6 +38,7 @@ impl Default for CampaignConfig {
         CampaignConfig {
             seed: 42,
             jobs: 0,
+            eval_jobs: 1,
             space: ParamSpace::default(),
             fidelity: EvalMode::Simulated,
         }
@@ -80,12 +87,19 @@ fn scenario_seed(base: u64, key: CacheKey) -> u64 {
 }
 
 /// Measure one scenario: the Fig 7 protocol
-/// ([`crate::report::compare_strategies_with_opts`]) with the campaign's
+/// ([`crate::report::compare_strategies_with_jobs`]) with the campaign's
 /// [`ParamSpace`] and evaluation fidelity plumbed into the searching
 /// tuners — both are part of the cache key, so both must be part of the
 /// measurement too.
-fn measure(s: &Scenario, space: &ParamSpace, fidelity: EvalMode, seed: u64) -> CachedOutcome {
-    let c = compare_strategies_with_opts(&s.workload, &s.cluster, seed, space, fidelity);
+fn measure(
+    s: &Scenario,
+    space: &ParamSpace,
+    fidelity: EvalMode,
+    seed: u64,
+    eval_jobs: usize,
+) -> CachedOutcome {
+    let c =
+        compare_strategies_with_jobs(&s.workload, &s.cluster, seed, space, fidelity, eval_jobs);
     CachedOutcome {
         nccl_iter: c.row("NCCL").iter_time,
         autoccl_iter: c.row("AutoCCL").iter_time,
@@ -118,15 +132,10 @@ fn outcome_of(s: &Scenario, n: &CachedOutcome, cached: bool) -> ScenarioOutcome 
     }
 }
 
-fn effective_jobs(requested: usize, scenarios: usize) -> usize {
-    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let jobs = if requested == 0 { auto } else { requested };
-    jobs.clamp(1, scenarios.max(1))
-}
-
-/// Run every scenario of the grid across a thread pool, filling and
-/// consulting `cache`. Outcomes come back in grid order regardless of
-/// which worker finished first.
+/// Run every scenario of the grid across a thread pool (the shared
+/// [`crate::util::parallel`] worklist), filling and consulting `cache`.
+/// Outcomes come back in grid order regardless of which worker finished
+/// first.
 pub fn run_campaign(
     scenarios: &[Scenario],
     config: &CampaignConfig,
@@ -137,47 +146,32 @@ pub fn run_campaign(
     let misses0 = cache.misses();
     let threads = effective_jobs(config.jobs, scenarios.len());
 
-    let cursor = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<ScenarioOutcome>>> =
-        scenarios.iter().map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= scenarios.len() {
-                    break;
-                }
-                let s = &scenarios[i];
-                let key = CacheKey::of(
-                    &s.cluster,
-                    &s.workload,
+    let outcomes = run_indexed(threads, scenarios.len(), |i| {
+        let s = &scenarios[i];
+        let key = CacheKey::of(
+            &s.cluster,
+            &s.workload,
+            &config.space,
+            config.seed,
+            config.fidelity,
+        );
+        let (numbers, cached) = match cache.lookup(&key) {
+            Some(n) => (n, true),
+            None => {
+                let n = measure(
+                    s,
                     &config.space,
-                    config.seed,
                     config.fidelity,
+                    scenario_seed(config.seed, key),
+                    config.eval_jobs,
                 );
-                let (numbers, cached) = match cache.lookup(&key) {
-                    Some(n) => (n, true),
-                    None => {
-                        let n = measure(
-                            s,
-                            &config.space,
-                            config.fidelity,
-                            scenario_seed(config.seed, key),
-                        );
-                        cache.insert(key, n.clone());
-                        (n, false)
-                    }
-                };
-                *slots[i].lock().unwrap() = Some(outcome_of(s, &numbers, cached));
-            });
-        }
+                cache.insert(key, n.clone());
+                (n, false)
+            }
+        };
+        outcome_of(s, &numbers, cached)
     });
 
-    let outcomes = slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worklist covered every scenario"))
-        .collect();
     CampaignResult {
         outcomes,
         cache_hits: cache.hits() - hits0,
@@ -251,6 +245,25 @@ mod tests {
                 a.lagom_iter, b.lagom_iter,
                 "per-scenario seeds make results scheduling-independent"
             );
+        }
+    }
+
+    #[test]
+    fn eval_jobs_is_invisible_in_the_numbers() {
+        // Candidate-level parallelism inside a scenario must not perturb a
+        // single outcome (and therefore is not part of the cache key).
+        let grid: Vec<Scenario> = scenario_grid(Some(1)).into_iter().take(2).collect();
+        let serial = run_campaign(&grid, &CampaignConfig::default(), &ResultCache::in_memory());
+        let nested = run_campaign(
+            &grid,
+            &CampaignConfig { eval_jobs: 4, ..CampaignConfig::default() },
+            &ResultCache::in_memory(),
+        );
+        for (a, b) in serial.outcomes.iter().zip(&nested.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.lagom_iter, b.lagom_iter, "eval_jobs changes wall time only");
+            assert_eq!(a.autoccl_iter, b.autoccl_iter);
+            assert_eq!(a.lagom_sim_calls, b.lagom_sim_calls);
         }
     }
 

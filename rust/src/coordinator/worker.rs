@@ -3,7 +3,7 @@
 
 use super::msg::{FaultPlan, LeaderMsg, ReportPayload, WorkerReport};
 use crate::profiler::GroupMeasurement;
-use crate::sim::{simulate_group, SimEnv};
+use crate::sim::{simulate_group_summary, SimEnv, SimScratch};
 use std::sync::mpsc::{Receiver, Sender};
 
 /// Worker thread main loop. Returns when `Shutdown` arrives, the channel
@@ -17,6 +17,8 @@ pub fn worker_main(
 ) {
     let mut jobs_done = 0u64;
     let mut epoch = 0u64;
+    // Engine scratch reused across every profile job this rank executes.
+    let mut scratch = SimScratch::new();
     while let Ok(msg) = rx.recv() {
         if let Some(limit) = fault.die_after_jobs {
             if jobs_done >= limit {
@@ -33,12 +35,12 @@ pub fn worker_main(
                 let mut comm_total = 0.0;
                 let mut makespan = 0.0;
                 for _ in 0..reps {
-                    let r = simulate_group(&group, &configs, &mut env);
-                    for (acc, t) in comm_times.iter_mut().zip(&r.comm_times) {
+                    let r = simulate_group_summary(&group, &configs, &mut env, &mut scratch);
+                    for (acc, t) in comm_times.iter_mut().zip(scratch.comm_times()) {
                         *acc += t;
                     }
-                    comp_total += r.comp_total();
-                    comm_total += r.comm_total();
+                    comp_total += r.comp_total;
+                    comm_total += r.comm_total;
                     makespan += r.makespan;
                 }
                 let n = reps as f64 / fault.straggle_factor.max(1e-6);

@@ -14,7 +14,10 @@ pub const ANALYTIC_CONFIDENCE: f64 = 0.6;
 /// Costs candidates with [`predict_group`] — no execution at all, so an
 /// evaluation is orders of magnitude cheaper than a simulator run. Used
 /// standalone (`--fidelity analytic`) and as the screening tier of
-/// [`crate::eval::TieredEvaluator`].
+/// [`crate::eval::TieredEvaluator`]. Deliberately serial even under
+/// `--jobs`: a closed-form prediction is far cheaper than the thread
+/// hand-off it would take to parallelize it, so screening stays on the
+/// caller's stack and only the simulated survivors fan out.
 pub struct AnalyticEvaluator {
     pub cluster: ClusterSpec,
     calls: u64,

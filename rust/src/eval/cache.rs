@@ -9,6 +9,10 @@
 //! candidate are answered from the cache instead of re-simulating — the
 //! same FNV-1a keying idiom as the campaign's scenario cache
 //! ([`crate::campaign::cache`]), one level lower in the stack.
+//!
+//! The cache itself is lock-striped ([`ShardedEvalCache`]): the parallel
+//! `evaluate_batch` path inserts from worker threads while the batch
+//! driver reads, and the serial path pays only an uncontended lock.
 
 use super::Evaluation;
 use crate::comm::CommConfig;
@@ -16,6 +20,8 @@ use crate::graph::OverlapGroup;
 use crate::hw::{ClusterSpec, LinkSpec};
 use crate::util::Fingerprint;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 pub(crate) fn push_link(fp: &mut Fingerprint, link: &LinkSpec) {
     fp.push_str(link.kind.as_str());
@@ -107,51 +113,77 @@ pub fn eval_key(
     fp.finish()
 }
 
-/// In-memory memo cache for [`Evaluation`]s with hit/miss accounting.
-#[derive(Debug, Default)]
-pub struct EvalCache {
-    entries: HashMap<u64, Evaluation>,
-    hits: u64,
-    misses: u64,
+/// Lock-striped in-memory memo cache for [`Evaluation`]s:
+/// keys are distributed across independently-locked shards (FNV keys are
+/// well mixed, so the low bits shard evenly), and hit/miss accounting is
+/// atomic — worker threads insert results concurrently while the batch
+/// driver reads, without a single global lock serializing the hot path.
+#[derive(Debug)]
+pub struct ShardedEvalCache {
+    shards: Vec<Mutex<HashMap<u64, Evaluation>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
-impl EvalCache {
-    pub fn new() -> EvalCache {
-        EvalCache::default()
+impl ShardedEvalCache {
+    /// Default shard count: enough stripes that the per-candidate insert
+    /// contention is negligible at any sane `--jobs`.
+    pub fn new() -> ShardedEvalCache {
+        Self::with_shards(16)
     }
 
-    /// Look up a key, counting a hit or a miss.
-    pub fn lookup(&mut self, key: u64) -> Option<Evaluation> {
-        match self.entries.get(&key) {
+    pub fn with_shards(n: usize) -> ShardedEvalCache {
+        ShardedEvalCache {
+            shards: (0..n.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Evaluation>> {
+        &self.shards[key as usize % self.shards.len()]
+    }
+
+    /// Look up a key, counting a hit or a miss. `&self`: safe from any
+    /// worker thread.
+    pub fn lookup(&self, key: u64) -> Option<Evaluation> {
+        let found = self.shard(key).lock().unwrap().get(&key).cloned();
+        match found {
             Some(e) => {
-                self.hits += 1;
-                Some(e.clone())
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e)
             }
             None => {
-                self.misses += 1;
+                self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
-    pub fn insert(&mut self, key: u64, e: Evaluation) {
-        self.entries.insert(key, e);
+    pub fn insert(&self, key: u64, e: Evaluation) {
+        self.shard(key).lock().unwrap().insert(key, e);
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits
+        self.hits.load(Ordering::Relaxed)
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for ShardedEvalCache {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -211,7 +243,7 @@ mod tests {
     fn cache_accounting() {
         let (cl, g, cfgs) = fixture();
         let key = eval_key(&cl, &g, &cfgs, 1, 1, 0.0);
-        let mut cache = EvalCache::new();
+        let cache = ShardedEvalCache::new();
         assert!(cache.lookup(key).is_none());
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
         let e = Evaluation {
@@ -224,9 +256,47 @@ mod tests {
             cached: false,
         };
         cache.insert(key, e.clone());
-        assert_eq!(cache.lookup(key), Some(e));
+        assert_eq!(cache.lookup(key), Some(e.clone()));
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert_eq!(cache.len(), 1);
         assert!(!cache.is_empty());
+
+        // Keys landing on every shard behave identically.
+        let cache = ShardedEvalCache::new();
+        for key in 0..64u64 {
+            assert!(cache.lookup(key).is_none());
+            cache.insert(key, e.clone());
+            assert_eq!(cache.lookup(key).unwrap().makespan, e.makespan);
+        }
+        assert_eq!(cache.len(), 64);
+        assert_eq!((cache.hits(), cache.misses()), (64, 64));
+    }
+
+    #[test]
+    fn sharded_cache_is_safe_under_concurrent_inserts() {
+        let e = Evaluation {
+            comm_times: vec![],
+            comp_total: 0.0,
+            comm_total: 0.0,
+            makespan: 1.0,
+            fidelity: crate::eval::Fidelity::Simulated,
+            confidence: 0.9,
+            cached: false,
+        };
+        let cache = ShardedEvalCache::with_shards(4);
+        std::thread::scope(|scope| {
+            for w in 0..4u64 {
+                let cache = &cache;
+                let e = &e;
+                scope.spawn(move || {
+                    for i in 0..100u64 {
+                        cache.insert(w * 1000 + i, e.clone());
+                        assert!(cache.lookup(w * 1000 + i).is_some());
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), 400);
+        assert_eq!(cache.hits(), 400);
     }
 }

@@ -9,7 +9,7 @@
 //!   ([`crate::contention::predict_group`]): free, ~10-25% error.
 //! * [`Fidelity::Simulated`] — the discrete-event simulator
 //!   ([`crate::sim`]): the testbed stand-in, expensive relative to the
-//!   closed form, memoized per candidate ([`cache::EvalCache`]).
+//!   closed form, memoized per candidate ([`cache::ShardedEvalCache`]).
 //! * [`Fidelity::Runtime`] — real execution through the `pjrt`-gated
 //!   runtime ([`runtime::RuntimeEvaluator`]); unavailable offline.
 //!
@@ -20,6 +20,12 @@
 //! stay on one scale. Any [`crate::profiler::ProfileBackend`] — including
 //! the distributed coordinator — is an [`Evaluator`] via the per-backend
 //! impls below, so tuners run unchanged on every measurement path.
+//!
+//! Frontier evaluation parallelizes: [`SimEvaluator`]'s `evaluate_batch`
+//! fans candidates across scoped worker threads
+//! ([`crate::util::parallel`]), and because every simulated result is a
+//! pure function of its content key, `jobs = 1` and `jobs = N` return
+//! bitwise-identical evaluations, stats included.
 
 pub mod analytic;
 pub mod cache;
@@ -28,7 +34,7 @@ pub mod sim;
 pub mod tiered;
 
 pub use analytic::AnalyticEvaluator;
-pub use cache::EvalCache;
+pub use cache::ShardedEvalCache;
 pub use sim::SimEvaluator;
 pub use tiered::TieredEvaluator;
 
@@ -243,12 +249,26 @@ pub fn best_index_by<F: Fn(&Evaluation) -> f64>(evals: &[Evaluation], key: F) ->
         .map(|(i, _)| i)
 }
 
-/// Build the evaluator a CLI `--fidelity` / campaign mode selects.
+/// Build the evaluator a CLI `--fidelity` / campaign mode selects, with
+/// the serial batch path.
 pub fn make_evaluator(mode: EvalMode, cluster: &ClusterSpec, seed: u64) -> Box<dyn Evaluator> {
+    make_evaluator_jobs(mode, cluster, seed, 1)
+}
+
+/// [`make_evaluator`] with an explicit `--jobs` worker count for the
+/// parallel `evaluate_batch` path (`1` = serial, `0` = one per core).
+/// Because simulated results are key-derived, the chosen value changes
+/// wall time only — never a single returned number.
+pub fn make_evaluator_jobs(
+    mode: EvalMode,
+    cluster: &ClusterSpec,
+    seed: u64,
+    jobs: usize,
+) -> Box<dyn Evaluator> {
     match mode {
         EvalMode::Analytic => Box::new(AnalyticEvaluator::new(cluster.clone())),
-        EvalMode::Simulated => Box::new(SimEvaluator::new(cluster.clone(), seed)),
-        EvalMode::Tiered => Box::new(TieredEvaluator::new(cluster.clone(), seed)),
+        EvalMode::Simulated => Box::new(SimEvaluator::new(cluster.clone(), seed).with_jobs(jobs)),
+        EvalMode::Tiered => Box::new(TieredEvaluator::new(cluster.clone(), seed).with_jobs(jobs)),
     }
 }
 

@@ -50,6 +50,9 @@ mod real {
 
     impl RuntimeEvaluator {
         pub fn new(cluster: ClusterSpec, seed: u64) -> Result<RuntimeEvaluator, String> {
+            // The backing simulator stays serial (jobs = 1): real-runtime
+            // calibration wall-clocks executions, and concurrent candidate
+            // runs would contend for the device and skew the scale factor.
             let rt = Runtime::cpu().map_err(|e| format!("PJRT init failed: {e:#}"))?;
             if !rt.has_artifact("train_step") {
                 return Err("artifacts missing — run `make artifacts` first".to_string());

@@ -1,12 +1,14 @@
 //! Simulated evaluation tier — the discrete-event engine with per-candidate
-//! memoization.
+//! memoization, allocation-free scoring, and a deterministic parallel
+//! batch path.
 
-use super::cache::{eval_key, EvalCache};
+use super::cache::{eval_key, ShardedEvalCache};
 use super::{EvalStats, Evaluation, Evaluator, Fidelity};
 use crate::comm::CommConfig;
 use crate::graph::OverlapGroup;
 use crate::hw::ClusterSpec;
-use crate::sim::{simulate_group, SimEnv};
+use crate::sim::{simulate_group_summary, SimEnv, SimScratch};
+use crate::util::parallel::run_indexed_with;
 use crate::util::prng::{splitmix64, Prng};
 
 /// Costs candidates on the cluster simulator (averaged repetitions, like
@@ -15,13 +17,24 @@ use crate::util::prng::{splitmix64, Prng};
 /// derived from its cache key, so an evaluation is a pure function of
 /// `(cluster, group, configs, seed, reps, sigma)` — revisiting a candidate
 /// returns the identical numbers without re-simulating, and results do not
-/// depend on evaluation order.
+/// depend on evaluation order **or thread count**: `evaluate_batch` fans
+/// candidates across `jobs` scoped worker threads (each with its own
+/// engine scratch), and `jobs = 1` vs `jobs = N` are bitwise identical.
+///
+/// The engine runs through the allocation-free summary path
+/// ([`crate::sim::simulate_group_summary`]); the only per-evaluation heap
+/// allocation left is the `comm_times` vector of the returned
+/// [`Evaluation`] itself.
 pub struct SimEvaluator {
     env: SimEnv,
     base_seed: u64,
     /// Repetitions averaged per measurement (noise control).
     pub reps: u32,
-    cache: EvalCache,
+    /// Worker threads `evaluate_batch` fans candidates across (`1` =
+    /// serial, `0` = one per core). Results are identical at any value.
+    pub jobs: usize,
+    cache: ShardedEvalCache,
+    scratch: SimScratch,
     evaluations: u64,
     sim_calls: u64,
 }
@@ -36,7 +49,9 @@ impl SimEvaluator {
             env: SimEnv::new(cluster, seed),
             base_seed: seed,
             reps: reps.max(1),
-            cache: EvalCache::new(),
+            jobs: 1,
+            cache: ShardedEvalCache::new(),
+            scratch: SimScratch::new(),
             evaluations: 0,
             sim_calls: 0,
         }
@@ -48,7 +63,9 @@ impl SimEvaluator {
             env: SimEnv::with_noise(cluster, 0, 0.0),
             base_seed: 0,
             reps: 1,
-            cache: EvalCache::new(),
+            jobs: 1,
+            cache: ShardedEvalCache::new(),
+            scratch: SimScratch::new(),
             evaluations: 0,
             sim_calls: 0,
         }
@@ -60,69 +77,160 @@ impl SimEvaluator {
         self
     }
 
+    /// Set the `evaluate_batch` worker count (builder style).
+    pub fn with_jobs(mut self, jobs: usize) -> SimEvaluator {
+        self.jobs = jobs;
+        self
+    }
+
     pub fn cluster(&self) -> &ClusterSpec {
         &self.env.cluster
     }
 
-    pub fn cache(&self) -> &EvalCache {
+    pub fn cache(&self) -> &ShardedEvalCache {
         &self.cache
     }
-}
 
-impl Evaluator for SimEvaluator {
-    fn name(&self) -> String {
-        format!("simulated (reps={}, memoized)", self.reps)
-    }
-
-    fn evaluate(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> Evaluation {
-        self.evaluations += 1;
-        let key = eval_key(
+    fn key_of(&self, group: &OverlapGroup, configs: &[CommConfig]) -> u64 {
+        eval_key(
             &self.env.cluster,
             group,
             configs,
             self.base_seed,
             self.reps,
             self.env.noise_sigma,
-        );
+        )
+    }
+}
+
+/// Simulate one candidate with the key-derived noise stream: a pure
+/// function of `(env.cluster, env.noise_sigma, group, configs, key, reps)`
+/// — any caller on any thread computes identical numbers, which is what
+/// makes the parallel batch path deterministic. Only `env.prng` is
+/// clobbered (re-seeded from the key); `scratch` is reused engine state.
+fn simulate_candidate(
+    env: &mut SimEnv,
+    group: &OverlapGroup,
+    configs: &[CommConfig],
+    key: u64,
+    reps: u32,
+    scratch: &mut SimScratch,
+) -> Evaluation {
+    let mut s = key;
+    env.prng = Prng::new(splitmix64(&mut s));
+
+    let mut comm_times = vec![0.0; group.comms.len()];
+    let mut comp_total = 0.0;
+    let mut comm_total = 0.0;
+    let mut makespan = 0.0;
+    for _ in 0..reps {
+        let r = simulate_group_summary(group, configs, env, scratch);
+        for (acc, t) in comm_times.iter_mut().zip(scratch.comm_times()) {
+            *acc += t;
+        }
+        comp_total += r.comp_total;
+        comm_total += r.comm_total;
+        makespan += r.makespan;
+    }
+    let n = reps as f64;
+    for t in &mut comm_times {
+        *t /= n;
+    }
+    Evaluation {
+        comm_times,
+        comp_total: comp_total / n,
+        comm_total: comm_total / n,
+        makespan: makespan / n,
+        fidelity: Fidelity::Simulated,
+        confidence: 0.9,
+        cached: false,
+    }
+}
+
+impl Evaluator for SimEvaluator {
+    fn name(&self) -> String {
+        format!("simulated (reps={}, memoized, jobs={})", self.reps, self.jobs.max(1))
+    }
+
+    fn evaluate(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> Evaluation {
+        self.evaluations += 1;
+        let key = self.key_of(group, configs);
         if let Some(mut e) = self.cache.lookup(key) {
             e.cached = true;
             return e;
         }
         self.sim_calls += 1;
-
-        // Derive the noise stream from the key: the outcome is a pure
-        // function of the content, never of evaluation order.
-        let mut s = key;
-        self.env.prng = Prng::new(splitmix64(&mut s));
-
-        let mut comm_times = vec![0.0; group.comms.len()];
-        let mut comp_total = 0.0;
-        let mut comm_total = 0.0;
-        let mut makespan = 0.0;
-        for _ in 0..self.reps {
-            let r = simulate_group(group, configs, &mut self.env);
-            for (acc, t) in comm_times.iter_mut().zip(&r.comm_times) {
-                *acc += t;
-            }
-            comp_total += r.comp_total();
-            comm_total += r.comm_total();
-            makespan += r.makespan;
-        }
-        let n = self.reps as f64;
-        for t in &mut comm_times {
-            *t /= n;
-        }
-        let e = Evaluation {
-            comm_times,
-            comp_total: comp_total / n,
-            comm_total: comm_total / n,
-            makespan: makespan / n,
-            fidelity: Fidelity::Simulated,
-            confidence: 0.9,
-            cached: false,
-        };
+        let e =
+            simulate_candidate(&mut self.env, group, configs, key, self.reps, &mut self.scratch);
         self.cache.insert(key, e.clone());
         e
+    }
+
+    fn evaluate_batch(
+        &mut self,
+        group: &OverlapGroup,
+        candidates: &[Vec<CommConfig>],
+    ) -> Vec<Evaluation> {
+        if self.jobs == 1 || candidates.len() < 2 {
+            return candidates.iter().map(|c| self.evaluate(group, c)).collect();
+        }
+        self.evaluations += candidates.len() as u64;
+        let keys: Vec<u64> = candidates.iter().map(|c| self.key_of(group, c)).collect();
+
+        // Resolve what the memo cache already has, keeping the hit/miss
+        // accounting identical to the serial path: each candidate performs
+        // exactly one lookup, and an in-batch duplicate of a missing key
+        // defers its lookup until after the computation lands (where the
+        // serial path would score it as a hit).
+        let mut out: Vec<Option<Evaluation>> = vec![None; candidates.len()];
+        let mut miss: Vec<usize> = Vec::new();
+        let mut deferred: Vec<usize> = Vec::new();
+        for i in 0..candidates.len() {
+            if miss.iter().any(|&m| keys[m] == keys[i]) {
+                deferred.push(i);
+                continue;
+            }
+            match self.cache.lookup(keys[i]) {
+                Some(mut e) => {
+                    e.cached = true;
+                    out[i] = Some(e);
+                }
+                None => miss.push(i),
+            }
+        }
+        self.sim_calls += miss.len() as u64;
+
+        // Fan the distinct misses across worker threads. Every result is a
+        // pure function of its key, so scheduling cannot change anything.
+        {
+            let env = &self.env;
+            let cache = &self.cache;
+            let reps = self.reps;
+            let miss = &miss;
+            let keys = &keys;
+            let evals = run_indexed_with(
+                self.jobs,
+                miss.len(),
+                || (env.clone(), SimScratch::new()),
+                |(wenv, scratch), k| {
+                    let i = miss[k];
+                    simulate_candidate(wenv, group, &candidates[i], keys[i], reps, scratch)
+                },
+            );
+            for (&i, e) in miss.iter().zip(evals) {
+                cache.insert(keys[i], e.clone());
+                out[i] = Some(e);
+            }
+        }
+
+        // Deferred duplicates are cache hits now, exactly as in the serial
+        // order.
+        for i in deferred {
+            let mut e = self.cache.lookup(keys[i]).expect("duplicate of a computed key");
+            e.cached = true;
+            out[i] = Some(e);
+        }
+        out.into_iter().map(|e| e.expect("every slot filled")).collect()
     }
 
     fn stats(&self) -> EvalStats {
@@ -141,6 +249,7 @@ mod tests {
     use super::*;
     use crate::comm::{CollectiveKind, CommOpDesc};
     use crate::graph::CompOpDesc;
+    use crate::sim::simulate_group;
     use crate::util::units::MIB;
 
     fn group() -> OverlapGroup {
@@ -207,5 +316,25 @@ mod tests {
         let mut env = SimEnv::with_noise(ClusterSpec::cluster_b(1), 0, 0.0);
         let r = simulate_group(&g, &cfg, &mut env);
         assert!((e.makespan - r.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_batch_bitwise_matches_serial_batch() {
+        let g = group();
+        // A frontier with an in-batch duplicate, to exercise dedup.
+        let mut frontier: Vec<Vec<CommConfig>> = [1u32, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&nc| vec![CommConfig { nc, ..CommConfig::default_ring() }])
+            .collect();
+        frontier.push(frontier[2].clone());
+
+        let mut serial = SimEvaluator::new(ClusterSpec::cluster_b(1), 7);
+        let a = serial.evaluate_batch(&g, &frontier);
+        let mut parallel = SimEvaluator::new(ClusterSpec::cluster_b(1), 7).with_jobs(8);
+        let b = parallel.evaluate_batch(&g, &frontier);
+        assert_eq!(a, b, "results identical at any thread count");
+        assert_eq!(serial.stats(), parallel.stats(), "and so is the accounting");
+        assert!(b.last().unwrap().cached, "in-batch duplicate served from memo");
+        assert_eq!(parallel.stats().sim_calls, frontier.len() as u64 - 1);
     }
 }

@@ -75,17 +75,19 @@ impl TieredEvaluator {
         }
     }
 
-    /// Simulate `configs`, refresh the group's calibration from the
-    /// (prediction, simulation) pair, and return the simulated result.
-    fn promote(
-        &mut self,
-        key: u64,
-        group: &OverlapGroup,
-        configs: &[CommConfig],
-        prediction: &Evaluation,
-    ) -> Evaluation {
-        let s = self.sim.evaluate(group, configs);
-        self.promoted += 1;
+    /// Expose the underlying simulated tier's `evaluate_batch` worker
+    /// count (builder style): survivor frontiers fan across this many
+    /// threads. Calibration remains thread-count-independent because the
+    /// simulated results are key-derived and applied in frontier order.
+    pub fn with_jobs(mut self, jobs: usize) -> TieredEvaluator {
+        self.sim = self.sim.with_jobs(jobs);
+        self
+    }
+
+    /// Refresh the group's calibration from one (prediction, simulation)
+    /// pair. Always applied in deterministic candidate order, whatever
+    /// thread computed the simulation.
+    fn calibrate(&mut self, key: u64, prediction: &Evaluation, s: &Evaluation) {
         let ratio = |num: f64, den: f64| if den > 1e-15 { num / den } else { 1.0 };
         let rz = ratio(s.makespan, prediction.makespan);
         let rx = ratio(s.comm_total, prediction.comm_total);
@@ -101,6 +103,20 @@ impl TieredEvaluator {
         st.scale_x = 0.5 * st.scale_x + 0.5 * rx;
         st.scale_y = 0.5 * st.scale_y + 0.5 * ry;
         st.best_z = st.best_z.min(s.makespan);
+    }
+
+    /// Simulate `configs`, refresh the group's calibration from the
+    /// (prediction, simulation) pair, and return the simulated result.
+    fn promote(
+        &mut self,
+        key: u64,
+        group: &OverlapGroup,
+        configs: &[CommConfig],
+        prediction: &Evaluation,
+    ) -> Evaluation {
+        let s = self.sim.evaluate(group, configs);
+        self.promoted += 1;
+        self.calibrate(key, prediction, &s);
         s
     }
 
@@ -201,9 +217,18 @@ impl Evaluator for TieredEvaluator {
             }
         }
 
+        // Simulate all survivors as one sub-batch: the simulated tier fans
+        // it across worker threads when `jobs > 1`, and because its results
+        // are key-derived the calibration sequence below is identical at
+        // any thread count.
+        let survivor_cands: Vec<Vec<CommConfig>> =
+            survivors.iter().map(|&i| candidates[i].clone()).collect();
+        let sims = self.sim.evaluate_batch(group, &survivor_cands);
         let mut out: Vec<Option<Evaluation>> = vec![None; candidates.len()];
-        for &i in &survivors {
-            out[i] = Some(self.promote(key, group, &candidates[i], &predictions[i]));
+        for (&i, s) in survivors.iter().zip(sims) {
+            self.promoted += 1;
+            self.calibrate(key, &predictions[i], &s);
+            out[i] = Some(s);
         }
         let st = *self.states.get(&key).expect("promotion created the state");
         for (i, slot) in out.iter_mut().enumerate() {

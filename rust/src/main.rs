@@ -17,13 +17,13 @@ use lagom::bench::Table;
 use lagom::campaign::{run_campaign, scenario_grid, CampaignConfig, Leaderboard, ResultCache};
 use lagom::cli::Args;
 use lagom::comm::{CommConfig, ParamSpace};
-use lagom::eval::{make_evaluator, EvalMode};
+use lagom::eval::{make_evaluator_jobs, EvalMode};
 use lagom::hw::ClusterSpec;
 use lagom::models::ModelSpec;
 use lagom::parallel::{build_schedule, table2_workloads, Parallelism, Workload};
 use lagom::profiler::SimProfiler;
 use lagom::report::{
-    bound_breakdown, compare_strategies_with_opts, comparison_table, evaluate,
+    bound_breakdown, compare_strategies_with_jobs, comparison_table, evaluate,
 };
 use lagom::sim::{simulate_schedule, SimEnv, TraceBuilder};
 use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
@@ -85,12 +85,18 @@ COMMON OPTIONS:
                                     sim = memoized simulator,
                                     tiered = analytic screening + simulated
                                     verification of the survivors
+  --jobs N                          worker threads for candidate evaluation
+                                    (tune/compare; default 1, 0 = one per
+                                    core). Deterministic: results are
+                                    bitwise-identical at any value
   --mbs N  --seed N  --out PATH  --layers N (truncate model for speed)
 
 CAMPAIGN OPTIONS:
   --out PATH      leaderboard JSON (default target/leaderboard.json)
   --cache PATH    result cache file (default target/campaign_cache.json)
-  --jobs N        worker threads (default: one per core)
+  --jobs N        scenario worker threads (default: one per core)
+  --eval-jobs N   candidate-evaluation threads per scenario (default 1;
+                  composes: scenarios x in-scenario candidates)
   --layers N      per-model depth cap (default 4; 0 = full depth)
 "
     );
@@ -162,6 +168,7 @@ fn cmd_tune(args: &Args) -> i32 {
     let w = run_or_exit(parse_workload(args, &cluster));
     let seed = run_or_exit(args.get_u64("seed", 42));
     let fidelity = run_or_exit(fidelity_of(args));
+    let jobs = run_or_exit(args.get_u64("jobs", 1)) as usize;
     let schedule = build_schedule(&w, &cluster);
     println!(
         "workload {} on {}: {} groups, {} comms",
@@ -181,7 +188,7 @@ fn cmd_tune(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut ev = make_evaluator(fidelity, &cluster, seed);
+    let mut ev = make_evaluator_jobs(fidelity, &cluster, seed, jobs);
     let t0 = std::time::Instant::now();
     let r = tuner.tune_schedule(&schedule, ev.as_mut());
     let iter = evaluate(&schedule, &r.configs, &cluster, w.micro_steps(), seed ^ 1);
@@ -221,7 +228,15 @@ fn cmd_compare(args: &Args) -> i32 {
     let w = run_or_exit(parse_workload(args, &cluster));
     let seed = run_or_exit(args.get_u64("seed", 42));
     let fidelity = run_or_exit(fidelity_of(args));
-    let c = compare_strategies_with_opts(&w, &cluster, seed, &ParamSpace::default(), fidelity);
+    let jobs = run_or_exit(args.get_u64("jobs", 1)) as usize;
+    let c = compare_strategies_with_jobs(
+        &w,
+        &cluster,
+        seed,
+        &ParamSpace::default(),
+        fidelity,
+        jobs,
+    );
     comparison_table(
         &format!("strategy comparison (fidelity: {})", fidelity.as_str()),
         &[c],
@@ -261,6 +276,7 @@ fn cmd_breakdown(args: &Args) -> i32 {
 fn cmd_campaign(args: &Args) -> i32 {
     let seed = run_or_exit(args.get_u64("seed", 42));
     let jobs = run_or_exit(args.get_u64("jobs", 0)) as usize;
+    let eval_jobs = run_or_exit(args.get_u64("eval-jobs", 1)) as usize;
     let layers = run_or_exit(args.get_u64("layers", 4)) as u32;
     let fidelity = run_or_exit(fidelity_of(args));
     let max_layers = if layers == 0 { None } else { Some(layers) };
@@ -270,7 +286,8 @@ fn cmd_campaign(args: &Args) -> i32 {
     let grid = scenario_grid(max_layers);
     let cache = ResultCache::open(&cache_path);
     let preloaded = cache.len();
-    let config = CampaignConfig { seed, jobs, fidelity, ..CampaignConfig::default() };
+    let config =
+        CampaignConfig { seed, jobs, eval_jobs, fidelity, ..CampaignConfig::default() };
     println!(
         "campaign: {} scenarios (model zoo x dp/fsdp/pp/ep x high-bw/low-bw) at {} fidelity, \
          {} cached entries preloaded",

@@ -11,7 +11,7 @@
 
 use crate::comm::CommConfig;
 use crate::graph::{IterationSchedule, OverlapGroup};
-use crate::sim::{simulate_group, SimEnv};
+use crate::sim::{simulate_group_summary, SimEnv, SimScratch};
 
 /// One measured execution of an overlap group (possibly averaged reps).
 #[derive(Debug, Clone, PartialEq)]
@@ -38,21 +38,24 @@ pub trait ProfileBackend {
     fn calls(&self) -> u64;
 }
 
-/// Local profiler over the cluster simulator.
+/// Local profiler over the cluster simulator. Measurements run through the
+/// engine's allocation-free summary path, with the comm-stream buffer
+/// reused across calls — this is the tuning loop's innermost cost.
 pub struct SimProfiler {
     pub env: SimEnv,
     /// Repetitions averaged per measurement (noise control).
     pub reps: u32,
     calls: u64,
+    scratch: SimScratch,
 }
 
 impl SimProfiler {
     pub fn new(env: SimEnv) -> Self {
-        SimProfiler { env, reps: 3, calls: 0 }
+        Self::with_reps(env, 3)
     }
 
     pub fn with_reps(env: SimEnv, reps: u32) -> Self {
-        SimProfiler { env, reps: reps.max(1), calls: 0 }
+        SimProfiler { env, reps: reps.max(1), calls: 0, scratch: SimScratch::new() }
     }
 }
 
@@ -64,12 +67,12 @@ impl ProfileBackend for SimProfiler {
         let mut comm_total = 0.0;
         let mut makespan = 0.0;
         for _ in 0..self.reps {
-            let r = simulate_group(group, configs, &mut self.env);
-            for (acc, t) in comm_times.iter_mut().zip(&r.comm_times) {
+            let r = simulate_group_summary(group, configs, &mut self.env, &mut self.scratch);
+            for (acc, t) in comm_times.iter_mut().zip(self.scratch.comm_times()) {
                 *acc += t;
             }
-            comp_total += r.comp_total();
-            comm_total += r.comm_total();
+            comp_total += r.comp_total;
+            comm_total += r.comm_total;
             makespan += r.makespan;
         }
         let n = self.reps as f64;

@@ -4,7 +4,7 @@
 
 use crate::bench::Table;
 use crate::comm::{CommConfig, ParamSpace};
-use crate::eval::{make_evaluator, EvalMode};
+use crate::eval::{make_evaluator_jobs, EvalMode};
 use crate::graph::IterationSchedule;
 use crate::hw::ClusterSpec;
 use crate::parallel::{build_schedule, Workload};
@@ -91,6 +91,22 @@ pub fn compare_strategies_with_opts(
     space: &ParamSpace,
     fidelity: EvalMode,
 ) -> Comparison {
+    compare_strategies_with_jobs(w, cluster, seed, space, fidelity, 1)
+}
+
+/// [`compare_strategies_with_opts`] with an explicit `--jobs` worker count
+/// for the evaluators' parallel `evaluate_batch` path. Evaluation results
+/// are key-derived, so `jobs` changes wall time only — every row is
+/// bitwise-identical at any value (which is why it is *not* part of the
+/// campaign's cache key).
+pub fn compare_strategies_with_jobs(
+    w: &Workload,
+    cluster: &ClusterSpec,
+    seed: u64,
+    space: &ParamSpace,
+    fidelity: EvalMode,
+    jobs: usize,
+) -> Comparison {
     let schedule = build_schedule(w, cluster);
     let micro = w.micro_steps();
 
@@ -103,7 +119,7 @@ pub fn compare_strategies_with_opts(
 
     let mut rows = Vec::new();
     for t in tuners.iter_mut() {
-        let mut ev = make_evaluator(fidelity, cluster, seed ^ 0xfeed);
+        let mut ev = make_evaluator_jobs(fidelity, cluster, seed ^ 0xfeed, jobs);
         let r = t.tune_schedule(&schedule, ev.as_mut());
         let iter_time = evaluate(&schedule, &r.configs, cluster, micro, seed ^ 0xbeef);
         rows.push(StrategyRow {
@@ -237,6 +253,24 @@ mod tests {
         assert_eq!(c.row("AutoCCL").sim_calls, 0);
         // Scored on fresh simulation regardless, so speedups stay comparable.
         assert!(c.row("Lagom").iter_time > 0.0);
+    }
+
+    #[test]
+    fn jobs_change_wall_time_only() {
+        // The parallel evaluate_batch path must be invisible in the
+        // numbers: every row bitwise-identical at jobs=1 vs jobs=4.
+        let cl = ClusterSpec::cluster_a(1);
+        let w = small_workload();
+        let space = ParamSpace::default();
+        for fidelity in [EvalMode::Simulated, EvalMode::Tiered] {
+            let serial = compare_strategies_with_jobs(&w, &cl, 7, &space, fidelity, 1);
+            let parallel = compare_strategies_with_jobs(&w, &cl, 7, &space, fidelity, 4);
+            for (a, b) in serial.rows.iter().zip(&parallel.rows) {
+                assert_eq!(a.iter_time, b.iter_time, "{fidelity:?}/{}", a.strategy);
+                assert_eq!(a.configs, b.configs, "{fidelity:?}/{}", a.strategy);
+                assert_eq!(a.sim_calls, b.sim_calls, "{fidelity:?}/{}", a.strategy);
+            }
+        }
     }
 
     #[test]

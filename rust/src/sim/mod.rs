@@ -10,9 +10,19 @@
 //!
 //! Tuners must never read simulator internals — only the measured times a
 //! real profiler would report.
+//!
+//! The deterministic (`sigma == 0`) engine compresses runs of identical
+//! waves into closed-form jumps (O(#comm-op transitions) per group), and
+//! the scoring entry points ([`simulate_group_summary`],
+//! [`simulate_group_cost`], [`simulate_schedule_cost`]) execute without
+//! allocating — see [`engine`] for the invariants.
 
 pub mod engine;
 pub mod trace;
 
-pub use engine::{simulate_group, simulate_schedule, GroupResult, IterResult, SimEnv};
+pub use engine::{
+    simulate_group, simulate_group_cost, simulate_group_reference, simulate_group_summary,
+    simulate_schedule, simulate_schedule_cost, GroupResult, GroupSummary, IterResult, SimEnv,
+    SimScratch,
+};
 pub use trace::TraceBuilder;

@@ -7,6 +7,7 @@
 pub mod fingerprint;
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod prng;
 pub mod stats;
 pub mod units;

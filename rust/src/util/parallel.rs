@@ -1,0 +1,122 @@
+//! Scoped worker-pool helpers shared by every parallel fan-out in the
+//! crate: the campaign runner (scenario-level parallelism) and the
+//! evaluation layer's parallel `evaluate_batch` (candidate-level
+//! parallelism). One implementation of the worklist/thread-pool idiom, so
+//! the two layers compose (`campaign --jobs` × `--eval-jobs`) without
+//! duplicating the scheduling logic.
+//!
+//! All helpers guarantee **index-ordered results**: item `i`'s output lands
+//! in slot `i` regardless of which worker finished first, so callers that
+//! are deterministic per item stay deterministic at any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a `--jobs`-style request against the machine and the worklist:
+/// `0` means one worker per available core, and there is never a reason to
+/// spawn more workers than items.
+pub fn effective_jobs(requested: usize, items: usize) -> usize {
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let jobs = if requested == 0 { auto } else { requested };
+    jobs.clamp(1, items.max(1))
+}
+
+/// Drain the worklist `0..items` across `jobs` scoped worker threads, each
+/// worker owning a private state built once by `init` (a simulator
+/// environment, scratch buffers, …). Returns the outputs in index order.
+///
+/// With `jobs <= 1` (after [`effective_jobs`] clamping) no thread is
+/// spawned at all — the items run inline on the caller's stack, so the
+/// serial path stays allocation- and synchronization-free.
+pub fn run_indexed_with<S, T, I, F>(jobs: usize, items: usize, init: I, work: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    if items == 0 {
+        return Vec::new();
+    }
+    let jobs = effective_jobs(jobs, items);
+    if jobs == 1 {
+        let mut state = init();
+        return (0..items).map(|i| work(&mut state, i)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..items).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items {
+                        break;
+                    }
+                    *slots[i].lock().unwrap() = Some(work(&mut state, i));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worklist covered every item"))
+        .collect()
+}
+
+/// Stateless variant of [`run_indexed_with`].
+pub fn run_indexed<T, F>(jobs: usize, items: usize, work: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    run_indexed_with(jobs, items, || (), |_, i| work(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn effective_jobs_clamps_to_worklist_and_floor() {
+        assert_eq!(effective_jobs(8, 3), 3);
+        assert_eq!(effective_jobs(2, 100), 2);
+        assert_eq!(effective_jobs(5, 0), 1);
+        assert!(effective_jobs(0, 1000) >= 1, "auto resolves to >= 1");
+    }
+
+    #[test]
+    fn results_in_index_order_at_any_thread_count() {
+        for jobs in [1usize, 2, 7] {
+            let out = run_indexed(jobs, 25, |i| i * i);
+            assert_eq!(out, (0..25).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+        assert!(run_indexed(4, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn per_worker_state_built_once_per_worker() {
+        let inits = AtomicU64::new(0);
+        let out = run_indexed_with(
+            3,
+            12,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0u64
+            },
+            |count, i| {
+                *count += 1;
+                (*count, i)
+            },
+        );
+        let workers = inits.load(Ordering::Relaxed);
+        assert!(workers <= 3, "at most one state per worker: {workers}");
+        // Every item ran exactly once, each under some worker's counter.
+        let items: HashSet<usize> = out.iter().map(|&(_, i)| i).collect();
+        assert_eq!(items.len(), 12);
+        assert!(out.iter().all(|&(count, _)| count >= 1));
+    }
+}

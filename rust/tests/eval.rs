@@ -11,7 +11,9 @@ use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
 use lagom::hw::ClusterSpec;
 use lagom::report::evaluate;
 use lagom::sim::SimEnv;
-use lagom::tuner::{LagomTuner, Tuner};
+use lagom::tuner::{
+    AutoCclTuner, ExhaustiveTuner, LagomTuner, LigerTuner, NcclTuner, Tuner,
+};
 use lagom::util::units::MIB;
 
 /// Computation-bound overlap (Y >> X at sane configs) — the regime where
@@ -183,6 +185,45 @@ fn noise_level_sweeps_through_with_noise() {
     let a = noisy.evaluate(&group, &cfg);
     let b = calm.evaluate(&group, &cfg);
     assert_ne!(a.makespan, b.makespan, "sigma changes the keyed noise stream");
+}
+
+fn tuner_by_name(name: &str, cluster: &ClusterSpec) -> Box<dyn Tuner> {
+    match name {
+        "lagom" => Box::new(LagomTuner::new(cluster.clone())),
+        "autoccl" => Box::new(AutoCclTuner::new(cluster.clone())),
+        "liger" => Box::new(LigerTuner::new(cluster.clone())),
+        "nccl" => Box::new(NcclTuner::new(cluster.clone())),
+        "exhaustive" => Box::new(ExhaustiveTuner::new(cluster.clone())),
+        other => panic!("unknown tuner {other}"),
+    }
+}
+
+#[test]
+fn every_tuner_identical_at_jobs_1_vs_8() {
+    // Satellite acceptance: the parallel evaluate_batch path must be
+    // invisible to every tuner — final configs, iteration counts and
+    // trajectories bitwise-identical at jobs=1 vs jobs=8, at both
+    // simulated and tiered fidelity.
+    let cluster = ClusterSpec::cluster_b(1);
+    let s = schedule_of(vec![comp_bound_group()]);
+    for name in ["lagom", "autoccl", "liger", "nccl", "exhaustive"] {
+        let mut e1 = SimEvaluator::with_reps(cluster.clone(), 33, 1);
+        let r1 = tuner_by_name(name, &cluster).tune_schedule(&s, &mut e1);
+        let mut e8 = SimEvaluator::with_reps(cluster.clone(), 33, 1).with_jobs(8);
+        let r8 = tuner_by_name(name, &cluster).tune_schedule(&s, &mut e8);
+        assert_eq!(r1.configs, r8.configs, "{name}: sim-fidelity configs");
+        assert_eq!(r1.iterations, r8.iterations, "{name}: sim-fidelity iterations");
+        assert_eq!(r1.trajectory, r8.trajectory, "{name}: sim-fidelity trajectory");
+        assert_eq!(e1.stats(), e8.stats(), "{name}: sim-fidelity eval accounting");
+
+        let mut t1 = TieredEvaluator::new(cluster.clone(), 33);
+        let q1 = tuner_by_name(name, &cluster).tune_schedule(&s, &mut t1);
+        let mut t8 = TieredEvaluator::new(cluster.clone(), 33).with_jobs(8);
+        let q8 = tuner_by_name(name, &cluster).tune_schedule(&s, &mut t8);
+        assert_eq!(q1.configs, q8.configs, "{name}: tiered configs");
+        assert_eq!(q1.trajectory, q8.trajectory, "{name}: tiered trajectory");
+        assert_eq!(t1.stats(), t8.stats(), "{name}: tiered eval accounting");
+    }
 }
 
 #[test]

@@ -8,7 +8,7 @@ use lagom::comm::{
 use lagom::contention::model::comp_time_contended;
 use lagom::graph::{CompOpDesc, OverlapGroup};
 use lagom::hw::ClusterSpec;
-use lagom::sim::{simulate_group, SimEnv};
+use lagom::sim::{simulate_group, simulate_group_reference, SimEnv};
 use lagom::testing::{default_cases, for_all, one_of, range_u32, range_u64, vec_of, Check, Gen};
 use lagom::util::units::KIB;
 
@@ -126,6 +126,29 @@ fn prop_sim_makespan_bounds() {
             r.makespan >= lower && r.makespan <= upper,
             &format!("Z={} not in [{lower}, {upper}]", r.makespan),
         )
+    });
+}
+
+#[test]
+fn prop_wave_compression_is_exact() {
+    // The engine's closed-form wave jumps must reproduce the wave-by-wave
+    // reference stepper **bitwise** on deterministic runs — across random
+    // comp/comm mixes covering comp-bound, comm-bound and comm-free
+    // groups (the satellite acceptance for the hot-path rewrite).
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| {
+        let comps = vec_of(arb_comp(), 1, 4).sample(rng);
+        let comms = vec_of(arb_comm(), 0, 3).sample(rng);
+        let cfgs: Vec<CommConfig> =
+            (0..comms.len()).map(|_| arb_config().sample(rng)).collect();
+        (comps, comms, cfgs)
+    });
+    for_all("compression exact", &g, default_cases() / 2, |(comps, comms, cfgs)| {
+        let group = OverlapGroup::with("p", comps.clone(), comms.clone());
+        let fast = simulate_group(&group, cfgs, &mut SimEnv::deterministic(cl.clone()));
+        let slow =
+            simulate_group_reference(&group, cfgs, &mut SimEnv::deterministic(cl.clone()));
+        Check::from_bool(fast == slow, "compressed != per-wave reference")
     });
 }
 
