@@ -1,25 +1,27 @@
 //! Perf trajectory — candidate-evaluation throughput on the hot path.
 //!
-//! Measures candidates/sec on a fixed frontier over a **many-wave**
-//! overlap group (hundreds of threadblock waves per comp op — the regime
-//! where fine-grained overlap schedules live, and where the pre-PR
-//! per-wave inner loop was slowest) for:
+//! Two fixtures, two CI-gated floors:
 //!
-//! * the analytic tier (closed form, the screening cost),
-//! * the serial per-wave simulator (`simulate_group_reference`:
-//!   O(#waves) stepping + full `GroupResult` allocation — a
-//!   *conservative* stand-in for the PR 2 baseline, which additionally
-//!   recomputed the whole per-wave cost model and ran the comm-stream
-//!   window logic every wave, so the true pre-PR cost was higher than
-//!   what this measures),
-//! * the compressed serial simulator (`SimEvaluator`, allocation-free
-//!   summary path + closed-form wave jumps),
-//! * the compressed parallel simulator (`--jobs 0`, one worker per core),
-//! * the tiered evaluator (screened frontier).
+//! **Many-wave group** (PR 3 regression floor): hundreds of threadblock
+//! waves per comp op — the regime where the pre-PR-3 per-wave inner loop
+//! was slowest. Rows: the analytic tier, the serial per-wave reference
+//! (`simulate_group_reference`, a *conservative* PR 2 stand-in), the
+//! compressed serial simulator, the compressed parallel simulator
+//! (`--jobs 0`), and the tiered evaluator. Gate: parallel+compressed
+//! ≥ 5× the per-wave serial baseline.
 //!
-//! Acceptance (asserted): parallel+compressed ≥ 5× the serial per-wave
-//! baseline — a lower bound on the real improvement over PR 2. Appends
-//! its table to `target/bench_results.jsonl`.
+//! **Deep pipeline** (PR 6 SoA floor): hundreds of comp ops per group
+//! against a small collective that drains within the first few, so per
+//! candidate the compressed per-candidate path still pays
+//! O(#comps) scalar engine dispatch (context + wave-capacity + closed-form
+//! jump per comp) plus a content-key hash, while the lockstep SoA frontier
+//! ([`lagom::sim::FrontierBatch`]) hoists all of that once per comp *per
+//! frontier* and advances every candidate with a couple of float adds.
+//! Gate: SoA (jobs=0) ≥ 5× the PR 3 compressed-parallel path (jobs=0) on
+//! the same frontier, with bitwise-identical results and accounting
+//! (asserted here, not just in unit tests).
+//!
+//! Appends both tables to `target/bench_results.jsonl`.
 
 use lagom::bench::{save_table, Table};
 use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
@@ -57,6 +59,37 @@ fn frontier() -> Vec<Vec<CommConfig>> {
     f
 }
 
+/// Hundreds of comp ops, one small collective that drains early: after the
+/// first few comps every candidate is in the comm-free lane, where the
+/// scalar engine still re-derives the per-comp context/capacity/jump per
+/// candidate but the SoA batch reuses one hoisted context for the whole
+/// frontier. This is the transformer-like deep-pipeline regime (an
+/// iteration schedule is hundreds of ops deep), and the structural gap the
+/// SoA floor rides on.
+fn deep_pipeline_group() -> OverlapGroup {
+    OverlapGroup::with(
+        "deep_pipeline",
+        (0..384)
+            .map(|i| CompOpDesc::matmul(format!("mm{i}"), 8192, 8192, 1024, 2))
+            .collect(),
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 8 * MIB, 8)],
+    )
+}
+
+/// A wide frontier (6 channel counts × 86 chunk sizes = 516 candidates,
+/// all distinct) so the SoA path both amortizes per-comp work across many
+/// candidates and shards across `--jobs` workers.
+fn deep_frontier() -> Vec<Vec<CommConfig>> {
+    let mut f = Vec::new();
+    for nc in [1u32, 2, 4, 8, 16, 32] {
+        for step in 0..86u64 {
+            let chunk = (32 + 8 * step) * KIB;
+            f.push(vec![CommConfig { nc, chunk, ..CommConfig::default_ring() }]);
+        }
+    }
+    f
+}
+
 /// Run `round` (returning candidates evaluated) until `min_secs` elapsed;
 /// returns candidates/sec.
 fn cps<F: FnMut() -> usize>(min_secs: f64, mut round: F) -> f64 {
@@ -78,6 +111,8 @@ fn main() {
     let n = frontier.len();
     let min_secs = 0.2;
 
+    // ---- Fixture 1: many-wave group (PR 3 floor) -----------------------
+
     // Closed-form screening tier.
     let analytic = cps(min_secs, || {
         let mut ev = AnalyticEvaluator::new(cluster.clone());
@@ -94,17 +129,18 @@ fn main() {
         n
     });
 
-    // Compressed + allocation-free, serial. Fresh evaluator per round so
+    // Compressed + allocation-free, serial per-candidate (SoA disabled so
+    // this row keeps measuring the PR 3 path). Fresh evaluator per round so
     // the memo cache never answers (we are timing simulation, not lookup).
     let serial_fast = cps(min_secs, || {
-        let mut ev = SimEvaluator::deterministic(cluster.clone());
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
         ev.evaluate_batch(&group, &frontier).len()
     });
 
-    // Compressed + parallel (one worker per core).
+    // Compressed + parallel (one worker per core), still per-candidate.
     let jobs = effective_jobs(0, n);
     let parallel_fast = cps(min_secs, || {
-        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(0);
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false).with_jobs(0);
         ev.evaluate_batch(&group, &frontier).len()
     });
 
@@ -142,5 +178,72 @@ fn main() {
         speedup >= 5.0,
         "acceptance: parallel+compressed sim must be >=5x the serial per-wave \
          baseline, got {speedup:.2}x"
+    );
+
+    // ---- Fixture 2: deep pipeline (PR 6 SoA floor) ---------------------
+
+    let deep = deep_pipeline_group();
+    let dfrontier = deep_frontier();
+    let dn = dfrontier.len();
+
+    // Bitwise identity first: the SoA frontier and the per-candidate path
+    // must agree on every number and every counter before a throughput
+    // claim means anything.
+    {
+        let mut soa_ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(0);
+        let a = soa_ev.evaluate_batch(&deep, &dfrontier);
+        let mut ref_ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
+        let b = ref_ev.evaluate_batch(&deep, &dfrontier);
+        assert_eq!(a, b, "SoA results must be bitwise-identical to the per-candidate path");
+        assert_eq!(soa_ev.stats(), ref_ev.stats(), "and so must the accounting");
+    }
+
+    // PR 3 path, serial and parallel (per-candidate compressed engine).
+    let pr3_serial = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
+        ev.evaluate_batch(&deep, &dfrontier).len()
+    });
+    let pr3_parallel = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false).with_jobs(0);
+        ev.evaluate_batch(&deep, &dfrontier).len()
+    });
+
+    // Lockstep SoA frontier, one shard and sharded across cores.
+    let soa_serial = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone());
+        ev.evaluate_batch(&deep, &dfrontier).len()
+    });
+    let soa_sharded = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(0);
+        ev.evaluate_batch(&deep, &dfrontier).len()
+    });
+
+    let mut t2 = Table::new(
+        format!(
+            "SoA frontier throughput — {dn}-candidate frontier, deep pipeline ({} comps)",
+            deep.comps.len()
+        ),
+        &["mode", "candidates/sec", "vs pr3 parallel"],
+    );
+    let mut row2 = |name: &str, v: f64, base: f64| {
+        t2.row(vec![name.to_string(), format!("{v:.0}"), format!("{:.1}x", v / base)]);
+    };
+    row2("pr3 per-candidate serial (--no-soa, jobs=1)", pr3_serial, pr3_parallel);
+    row2(&format!("pr3 per-candidate parallel (--no-soa, jobs={jobs})"), pr3_parallel, pr3_parallel);
+    row2("soa lockstep serial (jobs=1)", soa_serial, pr3_parallel);
+    row2(&format!("soa lockstep sharded (jobs={jobs})"), soa_sharded, pr3_parallel);
+    t2.print();
+    save_table(&t2);
+
+    let soa_speedup = soa_sharded / pr3_parallel;
+    println!(
+        "\nSoA sharded vs PR3 compressed-parallel: {soa_speedup:.1}x \
+         (SoA serial vs PR3 serial: {:.1}x)",
+        soa_serial / pr3_serial
+    );
+    assert!(
+        soa_speedup >= 5.0,
+        "acceptance: lockstep SoA frontier must be >=5x the PR 3 \
+         compressed-parallel path on the deep-pipeline fixture, got {soa_speedup:.2}x"
     );
 }

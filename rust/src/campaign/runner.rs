@@ -4,8 +4,8 @@
 use super::cache::{CacheKey, CachedOutcome, ResultCache};
 use super::grid::Scenario;
 use crate::comm::ParamSpace;
-use crate::eval::EvalMode;
-use crate::report::compare_strategies_with_jobs;
+use crate::eval::{EvalMode, EvalOpts};
+use crate::report::compare_strategies_with_eval;
 use crate::util::parallel::{effective_jobs, run_indexed};
 use crate::util::prng::splitmix64;
 use std::time::Instant;
@@ -25,6 +25,11 @@ pub struct CampaignConfig {
     /// evaluation results are key-derived, so this knob cannot change a
     /// single number.
     pub eval_jobs: usize,
+    /// Allow the evaluators' lockstep SoA frontier path (`--no-soa`
+    /// clears it). Like `eval_jobs`, NOT part of the cache key: the SoA
+    /// path is bitwise-identical to the per-candidate path, so this knob
+    /// cannot change a single number either.
+    pub eval_soa: bool,
     /// Tunable parameter space: both part of the cache key and the space
     /// the AutoCCL/Lagom tuners actually search.
     pub space: ParamSpace,
@@ -39,6 +44,7 @@ impl Default for CampaignConfig {
             seed: 42,
             jobs: 0,
             eval_jobs: 1,
+            eval_soa: true,
             space: ParamSpace::default(),
             fidelity: EvalMode::Simulated,
         }
@@ -87,19 +93,19 @@ fn scenario_seed(base: u64, key: CacheKey) -> u64 {
 }
 
 /// Measure one scenario: the Fig 7 protocol
-/// ([`crate::report::compare_strategies_with_jobs`]) with the campaign's
+/// ([`crate::report::compare_strategies_with_eval`]) with the campaign's
 /// [`ParamSpace`] and evaluation fidelity plumbed into the searching
 /// tuners — both are part of the cache key, so both must be part of the
-/// measurement too.
+/// measurement too. `opts` carries the wall-time-only execution knobs
+/// (`eval_jobs`, `eval_soa`), which are deliberately *not* in the key.
 fn measure(
     s: &Scenario,
     space: &ParamSpace,
     fidelity: EvalMode,
     seed: u64,
-    eval_jobs: usize,
+    opts: EvalOpts,
 ) -> CachedOutcome {
-    let c =
-        compare_strategies_with_jobs(&s.workload, &s.cluster, seed, space, fidelity, eval_jobs);
+    let c = compare_strategies_with_eval(&s.workload, &s.cluster, seed, space, fidelity, opts);
     CachedOutcome {
         nccl_iter: c.row("NCCL").iter_time,
         autoccl_iter: c.row("AutoCCL").iter_time,
@@ -163,7 +169,7 @@ pub fn run_campaign(
                     &config.space,
                     config.fidelity,
                     scenario_seed(config.seed, key),
-                    config.eval_jobs,
+                    EvalOpts { jobs: config.eval_jobs, soa: config.eval_soa, noise_sigma: None },
                 );
                 cache.insert(key, n.clone());
                 (n, false)
@@ -263,6 +269,22 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.lagom_iter, b.lagom_iter, "eval_jobs changes wall time only");
             assert_eq!(a.autoccl_iter, b.autoccl_iter);
+            assert_eq!(a.lagom_sim_calls, b.lagom_sim_calls);
+        }
+    }
+
+    #[test]
+    fn eval_soa_is_invisible_in_the_numbers() {
+        let grid: Vec<Scenario> = scenario_grid(Some(1)).into_iter().take(2).collect();
+        let on = run_campaign(&grid, &CampaignConfig::default(), &ResultCache::in_memory());
+        let off = run_campaign(
+            &grid,
+            &CampaignConfig { eval_soa: false, ..CampaignConfig::default() },
+            &ResultCache::in_memory(),
+        );
+        for (a, b) in on.outcomes.iter().zip(&off.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.lagom_iter, b.lagom_iter, "SoA changes wall time only");
             assert_eq!(a.lagom_sim_calls, b.lagom_sim_calls);
         }
     }

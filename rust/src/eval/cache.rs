@@ -91,18 +91,30 @@ pub(crate) fn group_key(group: &OverlapGroup) -> u64 {
     fp.finish()
 }
 
-/// Content key of one `(cluster, group, configs, noise model)` evaluation.
-pub fn eval_key(
-    cluster: &ClusterSpec,
-    group: &OverlapGroup,
+/// The frontier-constant half of [`eval_key`]: the cluster and group
+/// fingerprint, which `evaluate_batch` amortizes once per frontier. On a
+/// deep group this is by far the most expensive part of the key (one FNV
+/// step per comp-op byte), so hoisting it out of the per-candidate loop is
+/// a real win for the SoA batch path.
+pub fn eval_key_prefix(cluster: &ClusterSpec, group: &OverlapGroup) -> Fingerprint {
+    let mut fp = Fingerprint::new();
+    push_cluster(&mut fp, cluster);
+    push_group(&mut fp, group);
+    fp
+}
+
+/// Complete a [`eval_key_prefix`] with the per-candidate half. By
+/// construction `eval_key_suffix(&eval_key_prefix(cl, g), ..) ==
+/// eval_key(cl, g, ..)` — [`eval_key`] is literally implemented this way,
+/// so the split can never drift out of sync.
+pub fn eval_key_suffix(
+    prefix: &Fingerprint,
     configs: &[CommConfig],
     seed: u64,
     reps: u32,
     noise_sigma: f64,
 ) -> u64 {
-    let mut fp = Fingerprint::new();
-    push_cluster(&mut fp, cluster);
-    push_group(&mut fp, group);
+    let mut fp = prefix.clone();
     fp.push_u64(configs.len() as u64);
     for c in configs {
         push_config(&mut fp, c);
@@ -113,16 +125,45 @@ pub fn eval_key(
     fp.finish()
 }
 
+/// Content key of one `(cluster, group, configs, noise model)` evaluation.
+pub fn eval_key(
+    cluster: &ClusterSpec,
+    group: &OverlapGroup,
+    configs: &[CommConfig],
+    seed: u64,
+    reps: u32,
+    noise_sigma: f64,
+) -> u64 {
+    eval_key_suffix(&eval_key_prefix(cluster, group), configs, seed, reps, noise_sigma)
+}
+
 /// Lock-striped in-memory memo cache for [`Evaluation`]s:
 /// keys are distributed across independently-locked shards (FNV keys are
 /// well mixed, so the low bits shard evenly), and hit/miss accounting is
 /// atomic — worker threads insert results concurrently while the batch
 /// driver reads, without a single global lock serializing the hot path.
+///
+/// **Counter-ordering audit.** `hits`/`misses`/`lookups` are updated with
+/// `Ordering::Relaxed`, which is safe here for two reasons. First, the
+/// counters are pure monotonic statistics: no code path makes a control
+/// decision from them, and no data is published *through* them — every
+/// `Evaluation` travels through the shard `Mutex`es, whose lock/unlock
+/// pairs provide all the synchronization the payload needs. Second, every
+/// exact read (`stats()` equality assertions in tests, end-of-run reports)
+/// happens after the `std::thread::scope` in
+/// [`crate::util::parallel::run_indexed_with`] has joined its workers, and
+/// the join itself establishes the happens-before edge that makes all
+/// worker-side `fetch_add`s visible. Relaxed only permits *mid-flight*
+/// reads to see a momentary partial count — which is exactly what a live
+/// statistic means. The invariant `hits + misses == lookups` therefore
+/// holds at every quiescent point; `rust/tests/eval.rs` asserts it after
+/// an 8-worker batch.
 #[derive(Debug)]
 pub struct ShardedEvalCache {
     shards: Vec<Mutex<HashMap<u64, Evaluation>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    lookups: AtomicU64,
 }
 
 impl ShardedEvalCache {
@@ -137,6 +178,7 @@ impl ShardedEvalCache {
             shards: (0..n.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            lookups: AtomicU64::new(0),
         }
     }
 
@@ -147,6 +189,7 @@ impl ShardedEvalCache {
     /// Look up a key, counting a hit or a miss. `&self`: safe from any
     /// worker thread.
     pub fn lookup(&self, key: u64) -> Option<Evaluation> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
         let found = self.shard(key).lock().unwrap().get(&key).cloned();
         match found {
             Some(e) => {
@@ -178,6 +221,13 @@ impl ShardedEvalCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total [`ShardedEvalCache::lookup`] calls. At any quiescent point
+    /// (no in-flight lookup) `hits() + misses() == lookups()` — every
+    /// lookup counts exactly one of the two.
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
     }
 }
 
@@ -240,6 +290,27 @@ mod tests {
     }
 
     #[test]
+    fn prefix_suffix_split_reproduces_eval_key() {
+        let (cl, g, cfgs) = fixture();
+        let prefix = eval_key_prefix(&cl, &g);
+        for (seed, reps, sigma) in [(1u64, 3u32, 0.015), (7, 1, 0.0), (42, 5, 0.1)] {
+            assert_eq!(
+                eval_key_suffix(&prefix, &cfgs, seed, reps, sigma),
+                eval_key(&cl, &g, &cfgs, seed, reps, sigma),
+                "split keying must equal one-shot keying"
+            );
+        }
+        // The prefix is reusable: completing it twice with different
+        // configs matches two independent one-shot keys.
+        let mut other = cfgs.clone();
+        other[0].nc += 1;
+        assert_eq!(
+            eval_key_suffix(&prefix, &other, 1, 3, 0.015),
+            eval_key(&cl, &g, &other, 1, 3, 0.015)
+        );
+    }
+
+    #[test]
     fn cache_accounting() {
         let (cl, g, cfgs) = fixture();
         let key = eval_key(&cl, &g, &cfgs, 1, 1, 0.0);
@@ -270,6 +341,42 @@ mod tests {
         }
         assert_eq!(cache.len(), 64);
         assert_eq!((cache.hits(), cache.misses()), (64, 64));
+        assert_eq!(cache.lookups(), 128, "every lookup counts a hit or a miss");
+    }
+
+    #[test]
+    fn hit_miss_lookup_invariant_under_concurrent_workers() {
+        // The relaxed-atomics audit in the type docs: after the scope
+        // joins (happens-before for all worker fetch_adds), the counters
+        // must balance exactly — no lookup lost, none double-counted.
+        let e = Evaluation {
+            comm_times: vec![],
+            comp_total: 0.0,
+            comm_total: 0.0,
+            makespan: 1.0,
+            fidelity: crate::eval::Fidelity::Simulated,
+            confidence: 0.9,
+            cached: false,
+        };
+        let cache = ShardedEvalCache::new();
+        std::thread::scope(|scope| {
+            for w in 0..8u64 {
+                let cache = &cache;
+                let e = &e;
+                scope.spawn(move || {
+                    for i in 0..200u64 {
+                        let key = w * 10_000 + i;
+                        assert!(cache.lookup(key).is_none(), "miss first");
+                        cache.insert(key, e.clone());
+                        assert!(cache.lookup(key).is_some(), "hit second");
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.lookups(), 8 * 200 * 2);
+        assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+        assert_eq!(cache.hits(), 8 * 200);
+        assert_eq!(cache.misses(), 8 * 200);
     }
 
     #[test]

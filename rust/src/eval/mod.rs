@@ -249,6 +249,30 @@ pub fn best_index_by<F: Fn(&Evaluation) -> f64>(evals: &[Evaluation], key: F) ->
         .map(|(i, _)| i)
 }
 
+/// Execution knobs for [`make_evaluator_opts`] — everything about *how*
+/// evaluation runs (threads, batch route, noise level) as opposed to
+/// *what* is evaluated. `jobs` and `soa` are pure wall-time knobs; only
+/// `noise_sigma` changes returned numbers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalOpts {
+    /// Worker threads for the batch paths (`1` = serial, `0` = one per
+    /// core).
+    pub jobs: usize,
+    /// Allow the lockstep SoA frontier path for deterministic batches
+    /// (`--no-soa` clears it). Results are identical either way.
+    pub soa: bool,
+    /// Override the simulator's measurement-noise sigma (`None` keeps
+    /// [`crate::sim::SimEnv::DEFAULT_NOISE_SIGMA`]). `Some(0.0)` makes
+    /// simulated evaluation deterministic — and thereby SoA-eligible.
+    pub noise_sigma: Option<f64>,
+}
+
+impl Default for EvalOpts {
+    fn default() -> EvalOpts {
+        EvalOpts { jobs: 1, soa: true, noise_sigma: None }
+    }
+}
+
 /// Build the evaluator a CLI `--fidelity` / campaign mode selects, with
 /// the serial batch path.
 pub fn make_evaluator(mode: EvalMode, cluster: &ClusterSpec, seed: u64) -> Box<dyn Evaluator> {
@@ -265,10 +289,34 @@ pub fn make_evaluator_jobs(
     seed: u64,
     jobs: usize,
 ) -> Box<dyn Evaluator> {
+    make_evaluator_opts(mode, cluster, seed, EvalOpts { jobs, ..EvalOpts::default() })
+}
+
+/// [`make_evaluator`] with the full execution-knob set ([`EvalOpts`]).
+pub fn make_evaluator_opts(
+    mode: EvalMode,
+    cluster: &ClusterSpec,
+    seed: u64,
+    opts: EvalOpts,
+) -> Box<dyn Evaluator> {
     match mode {
         EvalMode::Analytic => Box::new(AnalyticEvaluator::new(cluster.clone())),
-        EvalMode::Simulated => Box::new(SimEvaluator::new(cluster.clone(), seed).with_jobs(jobs)),
-        EvalMode::Tiered => Box::new(TieredEvaluator::new(cluster.clone(), seed).with_jobs(jobs)),
+        EvalMode::Simulated => {
+            let mut ev =
+                SimEvaluator::new(cluster.clone(), seed).with_jobs(opts.jobs).with_soa(opts.soa);
+            if let Some(sigma) = opts.noise_sigma {
+                ev = ev.with_noise_sigma(sigma);
+            }
+            Box::new(ev)
+        }
+        EvalMode::Tiered => {
+            let mut ev =
+                TieredEvaluator::new(cluster.clone(), seed).with_jobs(opts.jobs).with_soa(opts.soa);
+            if let Some(sigma) = opts.noise_sigma {
+                ev = ev.with_noise_sigma(sigma);
+            }
+            Box::new(ev)
+        }
     }
 }
 

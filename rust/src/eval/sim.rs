@@ -1,15 +1,24 @@
 //! Simulated evaluation tier — the discrete-event engine with per-candidate
-//! memoization, allocation-free scoring, and a deterministic parallel
-//! batch path.
+//! memoization, allocation-free scoring, and two batch fast paths: the
+//! lockstep SoA frontier ([`crate::sim::FrontierBatch`], deterministic
+//! groups) and the per-candidate parallel fan-out (noisy groups, or
+//! `--no-soa`). Both are bitwise-identical to the serial path, results
+//! *and* accounting.
 
-use super::cache::{eval_key, ShardedEvalCache};
+use super::cache::{eval_key, eval_key_prefix, eval_key_suffix, group_key, ShardedEvalCache};
 use super::{EvalStats, Evaluation, Evaluator, Fidelity};
 use crate::comm::CommConfig;
 use crate::graph::OverlapGroup;
 use crate::hw::ClusterSpec;
-use crate::sim::{simulate_group_summary, SimEnv, SimScratch};
-use crate::util::parallel::run_indexed_with;
+use crate::sim::{simulate_group_summary, FrontierBatch, SimEnv, SimScratch};
+use crate::util::parallel::{chunk_ranges, effective_jobs, run_indexed_with};
 use crate::util::prng::{splitmix64, Prng};
+
+/// Minimum candidates per SoA shard: below this, scoped-thread setup costs
+/// more than the lockstep inner loop saves, so small frontiers stay on one
+/// worker regardless of `--jobs` (sharding can never change the numbers,
+/// only the wall time).
+const SOA_MIN_SHARD: usize = 32;
 
 /// Costs candidates on the cluster simulator (averaged repetitions, like
 /// [`crate::profiler::SimProfiler`]) with one crucial addition: results
@@ -33,8 +42,14 @@ pub struct SimEvaluator {
     /// Worker threads `evaluate_batch` fans candidates across (`1` =
     /// serial, `0` = one per core). Results are identical at any value.
     pub jobs: usize,
+    /// Use the lockstep SoA frontier path ([`FrontierBatch`]) for
+    /// deterministic (`sigma == 0`) batches. On by default; `--no-soa`
+    /// falls back to the per-candidate path — results are identical
+    /// either way (asserted in tests and `benches/eval_throughput.rs`).
+    pub soa: bool,
     cache: ShardedEvalCache,
     scratch: SimScratch,
+    batch: FrontierBatch,
     evaluations: u64,
     sim_calls: u64,
 }
@@ -50,8 +65,10 @@ impl SimEvaluator {
             base_seed: seed,
             reps: reps.max(1),
             jobs: 1,
+            soa: true,
             cache: ShardedEvalCache::new(),
             scratch: SimScratch::new(),
+            batch: FrontierBatch::new(),
             evaluations: 0,
             sim_calls: 0,
         }
@@ -64,8 +81,10 @@ impl SimEvaluator {
             base_seed: 0,
             reps: 1,
             jobs: 1,
+            soa: true,
             cache: ShardedEvalCache::new(),
             scratch: SimScratch::new(),
+            batch: FrontierBatch::new(),
             evaluations: 0,
             sim_calls: 0,
         }
@@ -80,6 +99,13 @@ impl SimEvaluator {
     /// Set the `evaluate_batch` worker count (builder style).
     pub fn with_jobs(mut self, jobs: usize) -> SimEvaluator {
         self.jobs = jobs;
+        self
+    }
+
+    /// Enable/disable the lockstep SoA frontier path (builder style).
+    /// Purely a wall-time knob: results and stats are identical.
+    pub fn with_soa(mut self, soa: bool) -> SimEvaluator {
+        self.soa = soa;
         self
     }
 
@@ -100,6 +126,121 @@ impl SimEvaluator {
             self.reps,
             self.env.noise_sigma,
         )
+    }
+
+    /// Whether a batch over `n` candidates takes the lockstep SoA path:
+    /// only the deterministic engine can run candidates in lockstep (the
+    /// noisy engine draws per-candidate noise streams in wave order), and
+    /// a single candidate has nothing to share.
+    fn soa_eligible(&self, n: usize) -> bool {
+        self.soa && self.env.noise_sigma == 0.0 && n >= 2
+    }
+
+    /// Run the distinct cache misses of a frontier through the lockstep
+    /// SoA batch, sharded across `--jobs` workers when the frontier is
+    /// large enough to amortize thread setup. Each worker owns a private
+    /// [`FrontierBatch`] over a contiguous candidate range; ranges are
+    /// independent and results come back in range order, so the shard
+    /// count cannot change a single number.
+    fn run_soa(
+        &mut self,
+        group: &OverlapGroup,
+        candidates: &[Vec<CommConfig>],
+        miss: &[usize],
+    ) -> Vec<Evaluation> {
+        let views: Vec<&[CommConfig]> = miss.iter().map(|&i| candidates[i].as_slice()).collect();
+        let reps = self.reps;
+        let shards = effective_jobs(self.jobs, views.len() / SOA_MIN_SHARD);
+        if shards <= 1 {
+            // Serial: reuse the evaluator-owned batch buffers (split
+            // borrow: `batch` mutably, the cluster read-only).
+            let SimEvaluator { env, batch, .. } = self;
+            batch.run(group, &views, &env.cluster);
+            return (0..views.len()).map(|k| evaluation_from_batch(batch, k, reps)).collect();
+        }
+        let ranges = chunk_ranges(views.len(), shards);
+        let env = &self.env;
+        let views = &views;
+        let ranges_ref = &ranges;
+        run_indexed_with(
+            shards,
+            ranges.len(),
+            FrontierBatch::new,
+            |batch, s| {
+                let (lo, hi) = ranges_ref[s];
+                batch.run(group, &views[lo..hi], &env.cluster);
+                (0..hi - lo)
+                    .map(|k| evaluation_from_batch(batch, k, reps))
+                    .collect::<Vec<Evaluation>>()
+            },
+        )
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Evaluate a frontier that may span *different* overlap groups — one
+    /// `(group, configs)` item per candidate. Consecutive items sharing a
+    /// group (by content key) form homogeneous segments that take the
+    /// batched fast path (lockstep SoA when eligible); heterogeneous
+    /// stretches degrade to singleton segments on the per-candidate path.
+    /// Results and accounting are identical to evaluating the items one by
+    /// one in order.
+    pub fn evaluate_groups(&mut self, items: &[(&OverlapGroup, Vec<CommConfig>)]) -> Vec<Evaluation> {
+        let mut out = Vec::with_capacity(items.len());
+        let mut lo = 0;
+        while lo < items.len() {
+            let gk = group_key(items[lo].0);
+            let mut hi = lo + 1;
+            while hi < items.len() && group_key(items[hi].0) == gk {
+                hi += 1;
+            }
+            if hi - lo == 1 {
+                out.push(self.evaluate(items[lo].0, &items[lo].1));
+            } else {
+                let cands: Vec<Vec<CommConfig>> =
+                    items[lo..hi].iter().map(|(_, c)| c.clone()).collect();
+                out.extend(self.evaluate_batch(items[lo].0, &cands));
+            }
+            lo = hi;
+        }
+        out
+    }
+}
+
+/// Assemble candidate `k` of a finished [`FrontierBatch`] run into an
+/// [`Evaluation`], replicating [`simulate_candidate`]'s accumulation
+/// arithmetic. At `sigma == 0` every repetition of the engine is
+/// identical (the noise closure never touches the PRNG), so one lockstep
+/// pass stands in for all `reps`: accumulate the same summary `reps`
+/// times and divide — the *exact* float sequence the per-candidate loop
+/// performs, hence bitwise-equal output.
+fn evaluation_from_batch(batch: &FrontierBatch, k: usize, reps: u32) -> Evaluation {
+    let s = batch.summaries()[k];
+    let mut comm_times: Vec<f64> = batch.comm_times(k).map(|_| 0.0).collect();
+    let mut comp_total = 0.0;
+    let mut comm_total = 0.0;
+    let mut makespan = 0.0;
+    for _ in 0..reps {
+        for (acc, t) in comm_times.iter_mut().zip(batch.comm_times(k)) {
+            *acc += t;
+        }
+        comp_total += s.comp_total;
+        comm_total += s.comm_total;
+        makespan += s.makespan;
+    }
+    let n = reps as f64;
+    for t in &mut comm_times {
+        *t /= n;
+    }
+    Evaluation {
+        comm_times,
+        comp_total: comp_total / n,
+        comm_total: comm_total / n,
+        makespan: makespan / n,
+        fidelity: Fidelity::Simulated,
+        confidence: 0.9,
+        cached: false,
     }
 }
 
@@ -171,11 +312,24 @@ impl Evaluator for SimEvaluator {
         group: &OverlapGroup,
         candidates: &[Vec<CommConfig>],
     ) -> Vec<Evaluation> {
-        if self.jobs == 1 || candidates.len() < 2 {
+        let soa = self.soa_eligible(candidates.len());
+        if candidates.len() < 2 || (!soa && self.jobs == 1) {
             return candidates.iter().map(|c| self.evaluate(group, c)).collect();
         }
         self.evaluations += candidates.len() as u64;
-        let keys: Vec<u64> = candidates.iter().map(|c| self.key_of(group, c)).collect();
+        // All candidates share `(cluster, group)`, the expensive part of the
+        // content key — hash it once and append only the per-candidate
+        // suffix. `eval_key` delegates to the same split, so the values are
+        // identical by construction.
+        let keys: Vec<u64> = {
+            let prefix = eval_key_prefix(&self.env.cluster, group);
+            candidates
+                .iter()
+                .map(|c| {
+                    eval_key_suffix(&prefix, c, self.base_seed, self.reps, self.env.noise_sigma)
+                })
+                .collect()
+        };
 
         // Resolve what the memo cache already has, keeping the hit/miss
         // accounting identical to the serial path: each candidate performs
@@ -184,9 +338,10 @@ impl Evaluator for SimEvaluator {
         // serial path would score it as a hit).
         let mut out: Vec<Option<Evaluation>> = vec![None; candidates.len()];
         let mut miss: Vec<usize> = Vec::new();
+        let mut missing: std::collections::HashSet<u64> = std::collections::HashSet::new();
         let mut deferred: Vec<usize> = Vec::new();
         for i in 0..candidates.len() {
-            if miss.iter().any(|&m| keys[m] == keys[i]) {
+            if missing.contains(&keys[i]) {
                 deferred.push(i);
                 continue;
             }
@@ -195,20 +350,26 @@ impl Evaluator for SimEvaluator {
                     e.cached = true;
                     out[i] = Some(e);
                 }
-                None => miss.push(i),
+                None => {
+                    missing.insert(keys[i]);
+                    miss.push(i);
+                }
             }
         }
         self.sim_calls += miss.len() as u64;
 
-        // Fan the distinct misses across worker threads. Every result is a
-        // pure function of its key, so scheduling cannot change anything.
-        {
+        // Score the distinct misses: the lockstep SoA frontier when the
+        // engine is deterministic, else the per-candidate fan-out. Every
+        // result is a pure function of its key (SoA is bitwise-identical to
+        // the scalar engine), so the route cannot change anything.
+        let evals = if soa {
+            self.run_soa(group, candidates, &miss)
+        } else {
             let env = &self.env;
-            let cache = &self.cache;
             let reps = self.reps;
             let miss = &miss;
             let keys = &keys;
-            let evals = run_indexed_with(
+            run_indexed_with(
                 self.jobs,
                 miss.len(),
                 || (env.clone(), SimScratch::new()),
@@ -216,11 +377,11 @@ impl Evaluator for SimEvaluator {
                     let i = miss[k];
                     simulate_candidate(wenv, group, &candidates[i], keys[i], reps, scratch)
                 },
-            );
-            for (&i, e) in miss.iter().zip(evals) {
-                cache.insert(keys[i], e.clone());
-                out[i] = Some(e);
-            }
+            )
+        };
+        for (&i, e) in miss.iter().zip(evals) {
+            self.cache.insert(keys[i], e.clone());
+            out[i] = Some(e);
         }
 
         // Deferred duplicates are cache hits now, exactly as in the serial
@@ -316,6 +477,77 @@ mod tests {
         let mut env = SimEnv::with_noise(ClusterSpec::cluster_b(1), 0, 0.0);
         let r = simulate_group(&g, &cfg, &mut env);
         assert!((e.makespan - r.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn soa_batch_bitwise_matches_per_candidate_path() {
+        let g = group();
+        let mut frontier: Vec<Vec<CommConfig>> = (0u32..6)
+            .map(|s| vec![CommConfig { nc: 1 << s, ..CommConfig::default_ring() }])
+            .collect();
+        frontier.push(frontier[3].clone()); // in-batch duplicate
+
+        // Deterministic engine: SoA on (default) vs off, serial vs threaded.
+        let mut soa = SimEvaluator::deterministic(ClusterSpec::cluster_b(1));
+        let a = soa.evaluate_batch(&g, &frontier);
+        let mut scalar = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_soa(false);
+        let b = scalar.evaluate_batch(&g, &frontier);
+        assert_eq!(a, b, "lockstep SoA bitwise-matches the per-candidate path");
+        assert_eq!(soa.stats(), scalar.stats(), "and so does the accounting");
+        assert!(a.last().unwrap().cached, "duplicate still served from memo");
+
+        let mut threaded = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_jobs(8);
+        let c = threaded.evaluate_batch(&g, &frontier);
+        assert_eq!(a, c, "sharded SoA identical to serial SoA");
+        assert_eq!(soa.stats(), threaded.stats());
+
+        // Revisiting the frontier is pure cache hits on every route.
+        let d = soa.evaluate_batch(&g, &frontier);
+        assert!(d.iter().all(|e| e.cached));
+        assert_eq!(soa.stats().sim_calls, frontier.len() as u64 - 1);
+    }
+
+    #[test]
+    fn noisy_batches_never_take_the_soa_path() {
+        let g = group();
+        let frontier: Vec<Vec<CommConfig>> = [1u32, 4, 16]
+            .iter()
+            .map(|&nc| vec![CommConfig { nc, ..CommConfig::default_ring() }])
+            .collect();
+        // sigma > 0: `soa = true` must be inert — identical to `--no-soa`.
+        let mut on = SimEvaluator::new(ClusterSpec::cluster_b(1), 5).with_jobs(4);
+        let mut off =
+            SimEvaluator::new(ClusterSpec::cluster_b(1), 5).with_jobs(4).with_soa(false);
+        assert_eq!(on.evaluate_batch(&g, &frontier), off.evaluate_batch(&g, &frontier));
+        assert_eq!(on.stats(), off.stats());
+    }
+
+    #[test]
+    fn evaluate_groups_segments_and_matches_one_by_one() {
+        let g1 = group();
+        let g2 = OverlapGroup::with(
+            "h",
+            vec![CompOpDesc::ffn("ffn", 1024, 2048, 4096, 2)],
+            vec![CommOpDesc::new("ag", CollectiveKind::AllGather, 16 * MIB, 8)],
+        );
+        let cfg = |nc: u32| vec![CommConfig { nc, ..CommConfig::default_ring() }];
+        // Homogeneous runs of g1 and g2 with a singleton g1 in between.
+        let items: Vec<(&OverlapGroup, Vec<CommConfig>)> = vec![
+            (&g1, cfg(1)),
+            (&g1, cfg(2)),
+            (&g1, cfg(4)),
+            (&g2, cfg(8)),
+            (&g1, cfg(16)),
+            (&g2, cfg(1)),
+            (&g2, cfg(2)),
+        ];
+        let mut batched = SimEvaluator::deterministic(ClusterSpec::cluster_b(1));
+        let got = batched.evaluate_groups(&items);
+        let mut serial = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_soa(false);
+        let want: Vec<Evaluation> =
+            items.iter().map(|(g, c)| serial.evaluate(g, c)).collect();
+        assert_eq!(got, want, "mixed-group frontier identical to one-by-one");
+        assert_eq!(batched.stats(), serial.stats());
     }
 
     #[test]

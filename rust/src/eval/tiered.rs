@@ -84,6 +84,24 @@ impl TieredEvaluator {
         self
     }
 
+    /// Enable/disable the simulated tier's lockstep SoA frontier path
+    /// (builder style). Survivor promotion goes through
+    /// `SimEvaluator::evaluate_batch`, so this is where the SoA fast path
+    /// lands for tiered runs. Purely a wall-time knob: results and
+    /// accounting are identical either way.
+    pub fn with_soa(mut self, soa: bool) -> TieredEvaluator {
+        self.sim = self.sim.with_soa(soa);
+        self
+    }
+
+    /// Override the simulated tier's measurement-noise level (builder
+    /// style). `0.0` makes survivor promotion deterministic — and thereby
+    /// SoA-eligible.
+    pub fn with_noise_sigma(mut self, sigma: f64) -> TieredEvaluator {
+        self.sim = self.sim.with_noise_sigma(sigma);
+        self
+    }
+
     /// Refresh the group's calibration from one (prediction, simulation)
     /// pair. Always applied in deterministic candidate order, whatever
     /// thread computed the simulation.

@@ -17,20 +17,20 @@ use lagom::bench::Table;
 use lagom::campaign::{run_campaign, scenario_grid, CampaignConfig, Leaderboard, ResultCache};
 use lagom::cli::Args;
 use lagom::comm::{CommConfig, ParamSpace};
-use lagom::eval::{make_evaluator_jobs, EvalMode};
+use lagom::eval::{make_evaluator_opts, EvalMode, EvalOpts};
 use lagom::hw::ClusterSpec;
 use lagom::models::ModelSpec;
 use lagom::parallel::{build_schedule, table2_workloads, Parallelism, Workload};
 use lagom::profiler::SimProfiler;
 use lagom::report::{
-    bound_breakdown, compare_strategies_with_jobs, comparison_table, evaluate,
+    bound_breakdown, compare_strategies_with_eval, comparison_table, evaluate,
 };
 use lagom::sim::{simulate_schedule, SimEnv, TraceBuilder};
 use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
 use lagom::util::units::fmt_secs;
 
 fn main() {
-    let args = match Args::from_env(&["help", "verbose"]) {
+    let args = match Args::from_env(&["help", "verbose", "no-soa"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -89,6 +89,13 @@ COMMON OPTIONS:
                                     (tune/compare; default 1, 0 = one per
                                     core). Deterministic: results are
                                     bitwise-identical at any value
+  --sigma S                         simulator measurement-noise sigma
+                                    (tune/compare; default 0.015). 0 makes
+                                    evaluation deterministic, which enables
+                                    the lockstep SoA frontier fast path
+  --no-soa                          disable the SoA frontier path (falls
+                                    back to per-candidate evaluation;
+                                    results identical, only slower)
   --mbs N  --seed N  --out PATH  --layers N (truncate model for speed)
 
 CAMPAIGN OPTIONS:
@@ -132,6 +139,18 @@ fn fidelity_of(args: &Args) -> Result<EvalMode, String> {
         .ok_or_else(|| format!("unknown fidelity {name} (expected analytic|sim|tiered)"))
 }
 
+/// Shared `--jobs` / `--no-soa` / `--sigma` execution knobs (tune/compare).
+fn eval_opts_of(args: &Args) -> Result<EvalOpts, String> {
+    let jobs = args.get_u64("jobs", 1)? as usize;
+    let noise_sigma = match args.get("sigma") {
+        Some(s) => {
+            Some(s.parse::<f64>().map_err(|_| format!("--sigma expects a float, got {s}"))?)
+        }
+        None => None,
+    };
+    Ok(EvalOpts { jobs, soa: !args.flag("no-soa"), noise_sigma })
+}
+
 fn run_or_exit<T>(r: Result<T, String>) -> T {
     match r {
         Ok(v) => v,
@@ -168,7 +187,7 @@ fn cmd_tune(args: &Args) -> i32 {
     let w = run_or_exit(parse_workload(args, &cluster));
     let seed = run_or_exit(args.get_u64("seed", 42));
     let fidelity = run_or_exit(fidelity_of(args));
-    let jobs = run_or_exit(args.get_u64("jobs", 1)) as usize;
+    let opts = run_or_exit(eval_opts_of(args));
     let schedule = build_schedule(&w, &cluster);
     println!(
         "workload {} on {}: {} groups, {} comms",
@@ -188,7 +207,7 @@ fn cmd_tune(args: &Args) -> i32 {
             return 2;
         }
     };
-    let mut ev = make_evaluator_jobs(fidelity, &cluster, seed, jobs);
+    let mut ev = make_evaluator_opts(fidelity, &cluster, seed, opts);
     let t0 = std::time::Instant::now();
     let r = tuner.tune_schedule(&schedule, ev.as_mut());
     let iter = evaluate(&schedule, &r.configs, &cluster, w.micro_steps(), seed ^ 1);
@@ -228,14 +247,14 @@ fn cmd_compare(args: &Args) -> i32 {
     let w = run_or_exit(parse_workload(args, &cluster));
     let seed = run_or_exit(args.get_u64("seed", 42));
     let fidelity = run_or_exit(fidelity_of(args));
-    let jobs = run_or_exit(args.get_u64("jobs", 1)) as usize;
-    let c = compare_strategies_with_jobs(
+    let opts = run_or_exit(eval_opts_of(args));
+    let c = compare_strategies_with_eval(
         &w,
         &cluster,
         seed,
         &ParamSpace::default(),
         fidelity,
-        jobs,
+        opts,
     );
     comparison_table(
         &format!("strategy comparison (fidelity: {})", fidelity.as_str()),
@@ -286,8 +305,14 @@ fn cmd_campaign(args: &Args) -> i32 {
     let grid = scenario_grid(max_layers);
     let cache = ResultCache::open(&cache_path);
     let preloaded = cache.len();
-    let config =
-        CampaignConfig { seed, jobs, eval_jobs, fidelity, ..CampaignConfig::default() };
+    let config = CampaignConfig {
+        seed,
+        jobs,
+        eval_jobs,
+        eval_soa: !args.flag("no-soa"),
+        fidelity,
+        ..CampaignConfig::default()
+    };
     println!(
         "campaign: {} scenarios (model zoo x dp/fsdp/pp/ep x high-bw/low-bw) at {} fidelity, \
          {} cached entries preloaded",

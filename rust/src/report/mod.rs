@@ -4,7 +4,7 @@
 
 use crate::bench::Table;
 use crate::comm::{CommConfig, ParamSpace};
-use crate::eval::{make_evaluator_jobs, EvalMode};
+use crate::eval::{make_evaluator_opts, EvalMode, EvalOpts};
 use crate::graph::IterationSchedule;
 use crate::hw::ClusterSpec;
 use crate::parallel::{build_schedule, Workload};
@@ -107,6 +107,29 @@ pub fn compare_strategies_with_jobs(
     fidelity: EvalMode,
     jobs: usize,
 ) -> Comparison {
+    compare_strategies_with_eval(
+        w,
+        cluster,
+        seed,
+        space,
+        fidelity,
+        EvalOpts { jobs, ..EvalOpts::default() },
+    )
+}
+
+/// [`compare_strategies_with_opts`] with the full execution-knob set
+/// ([`EvalOpts`]): worker count, SoA frontier path, noise override. `jobs`
+/// and `soa` change wall time only; `noise_sigma` changes what the tuners
+/// measure (and so *is* a legitimate part of any result-cache key, unlike
+/// the other two).
+pub fn compare_strategies_with_eval(
+    w: &Workload,
+    cluster: &ClusterSpec,
+    seed: u64,
+    space: &ParamSpace,
+    fidelity: EvalMode,
+    opts: EvalOpts,
+) -> Comparison {
     let schedule = build_schedule(w, cluster);
     let micro = w.micro_steps();
 
@@ -119,7 +142,7 @@ pub fn compare_strategies_with_jobs(
 
     let mut rows = Vec::new();
     for t in tuners.iter_mut() {
-        let mut ev = make_evaluator_jobs(fidelity, cluster, seed ^ 0xfeed, jobs);
+        let mut ev = make_evaluator_opts(fidelity, cluster, seed ^ 0xfeed, opts);
         let r = t.tune_schedule(&schedule, ev.as_mut());
         let iter_time = evaluate(&schedule, &r.configs, cluster, micro, seed ^ 0xbeef);
         rows.push(StrategyRow {
@@ -269,6 +292,26 @@ mod tests {
                 assert_eq!(a.iter_time, b.iter_time, "{fidelity:?}/{}", a.strategy);
                 assert_eq!(a.configs, b.configs, "{fidelity:?}/{}", a.strategy);
                 assert_eq!(a.sim_calls, b.sim_calls, "{fidelity:?}/{}", a.strategy);
+            }
+        }
+    }
+
+    #[test]
+    fn soa_changes_wall_time_only() {
+        // At sigma=0 the tuners' frontiers take the lockstep SoA path; the
+        // rows must be bitwise-identical to the per-candidate path.
+        let cl = ClusterSpec::cluster_a(1);
+        let w = small_workload();
+        let space = ParamSpace::default();
+        let det = EvalOpts { jobs: 2, soa: true, noise_sigma: Some(0.0) };
+        let scalar = EvalOpts { soa: false, ..det };
+        for fidelity in [EvalMode::Simulated, EvalMode::Tiered] {
+            let a = compare_strategies_with_eval(&w, &cl, 7, &space, fidelity, det);
+            let b = compare_strategies_with_eval(&w, &cl, 7, &space, fidelity, scalar);
+            for (x, y) in a.rows.iter().zip(&b.rows) {
+                assert_eq!(x.iter_time, y.iter_time, "{fidelity:?}/{}", x.strategy);
+                assert_eq!(x.configs, y.configs, "{fidelity:?}/{}", x.strategy);
+                assert_eq!(x.sim_calls, y.sim_calls, "{fidelity:?}/{}", x.strategy);
             }
         }
     }

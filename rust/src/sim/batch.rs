@@ -1,0 +1,357 @@
+//! Lockstep structure-of-arrays (SoA) evaluation of a candidate frontier.
+//!
+//! The per-candidate engine ([`super::engine`]) walks one candidate at a
+//! time: per candidate it re-derives every per-comp constant
+//! ([`CompContext`], wave capacity, free-running wave durations) and
+//! re-dispatches the whole wave loop. But a frontier — the unit the
+//! priority search evaluates (Alg. 1) — is *many configs of the same
+//! group*: the comp ops, and therefore every comp-derived constant, are
+//! shared across all candidates. Only the comm-stream state differs.
+//!
+//! [`FrontierBatch`] exploits that: per-candidate state lives in parallel
+//! arrays (`t[i]`, `head[i]`, `comp_total[i]`, and a flat `ops[i·NC + j]`
+//! comm-op stripe per candidate), and the batch advances **all candidates
+//! through one comp op at a time** — the comp-derived constants are hoisted
+//! once per comp for the whole frontier, and the inner loop over candidates
+//! is a tight branch-light pass over the arrays (no per-candidate dispatch,
+//! no per-candidate [`super::SimScratch`]).
+//!
+//! Candidates whose comm stream has already drained hit the fastest lane:
+//! once `head[i] == NC`, a comp op's effect on candidate `i` is a pair of
+//! frontier-constant additions (the closed-form full-wave jump plus the
+//! partial-wave tail), computed once per comp with the *exact* float
+//! expressions [`run_waves_det`] would evaluate.
+//!
+//! The contract carried over from the wave-compression work: results are
+//! **bitwise-identical** to the per-candidate compressed path and to the
+//! per-wave reference stepper, because every candidate still executes the
+//! identical sequence of float operations — the batch only reorders work
+//! *across independent candidates* (comp-major instead of
+//! candidate-major). Property-tested in `rust/tests/proptests.rs` and
+//! re-checked against the scalar engine under `debug_assertions`.
+//!
+//! Only the deterministic (`sigma == 0`) engine can run in lockstep: the
+//! noisy engine draws per-wave noise from a per-candidate PRNG stream, so
+//! batching would change draw order. [`crate::eval::SimEvaluator`] routes
+//! `sigma > 0` to the per-candidate parallel path instead.
+
+use super::engine::{run_waves_det, wave_capacity, CommOpState, CommStream, GroupSummary};
+use crate::comm::{comm_resources, comm_time, CommConfig};
+use crate::contention::model::{wave_time, CompContext};
+use crate::graph::OverlapGroup;
+use crate::hw::ClusterSpec;
+
+/// Reusable SoA state for one frontier run. Buffers persist across
+/// [`FrontierBatch::run`] calls, so a tuner evaluating frontier after
+/// frontier allocates only on the first (or a larger) batch.
+#[derive(Debug, Default)]
+pub struct FrontierBatch {
+    /// Comm ops per candidate (`NC`) of the last run.
+    num_comms: usize,
+    /// Flat comm-op state, candidate-major: candidate `i`'s op `j` lives
+    /// at `ops[i * num_comms + j]`.
+    ops: Vec<CommOpState>,
+    /// Per-candidate comm-stream head index.
+    head: Vec<usize>,
+    /// Per-candidate compute-stream wall clock.
+    t: Vec<f64>,
+    /// Per-candidate Σ comp durations (the measured Y).
+    comp_total: Vec<f64>,
+    /// Per-candidate scalar outcomes of the last run.
+    summaries: Vec<GroupSummary>,
+}
+
+impl FrontierBatch {
+    pub fn new() -> FrontierBatch {
+        FrontierBatch::default()
+    }
+
+    /// Candidates of the last run.
+    pub fn len(&self) -> usize {
+        self.summaries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.summaries.is_empty()
+    }
+
+    /// Scalar outcomes of the last run, in candidate order.
+    pub fn summaries(&self) -> &[GroupSummary] {
+        &self.summaries
+    }
+
+    /// Per-comm wall durations of candidate `i` from the last run, in op
+    /// order (the batch analogue of [`super::SimScratch::comm_times`]).
+    pub fn comm_times(&self, i: usize) -> impl Iterator<Item = f64> + '_ {
+        let nc = self.num_comms;
+        self.ops[i * nc..(i + 1) * nc].iter().map(|o| o.span.1 - o.span.0)
+    }
+
+    /// Run every candidate of `candidates` (one config slice per comm op
+    /// of `group`) through the deterministic engine in lockstep. Results
+    /// are bitwise-identical to per-candidate
+    /// [`super::simulate_group_summary`] runs at `sigma == 0`.
+    pub fn run(
+        &mut self,
+        group: &OverlapGroup,
+        candidates: &[&[CommConfig]],
+        cluster: &ClusterSpec,
+    ) {
+        let n = candidates.len();
+        let nc = group.comms.len();
+        self.num_comms = nc;
+        let gpu = cluster.gpu();
+        let topo = &cluster.topology;
+
+        // SoA setup: the same per-op state `sim_group_core` builds, laid
+        // out candidate-major (`noise()` is identically 1 at sigma == 0,
+        // so `remaining` is the bare `comm_time` — the engine multiplies
+        // by 1.0, and `w * 1.0 == w` bitwise).
+        self.ops.clear();
+        self.ops.reserve(n * nc);
+        for configs in candidates {
+            assert_eq!(configs.len(), nc, "one config per communication op required");
+            for (op, cfg) in group.comms.iter().zip(*configs) {
+                let w = comm_time(op, cfg, topo, gpu);
+                self.ops.push(CommOpState {
+                    remaining: w,
+                    res: comm_resources(op, cfg, topo, gpu, w),
+                    span: (0.0, 0.0),
+                });
+            }
+        }
+        self.head.clear();
+        self.head.resize(n, 0);
+        self.t.clear();
+        self.t.resize(n, 0.0);
+        self.comp_total.clear();
+        self.comp_total.resize(n, 0.0);
+
+        // Lockstep compute stream: outer loop over the *shared* comp ops,
+        // inner loop over candidates. Everything derived from the comp op
+        // alone is hoisted out of the candidate loop.
+        for comp in &group.comps {
+            let ctx = CompContext::new(comp, gpu);
+            let launch = gpu.launch_overhead;
+            let tbs = comp.threadblocks.max(1);
+
+            // Comm-free lane constants: with no active comm the capacity,
+            // wave duration and wave count are candidate-independent, so
+            // the whole comp collapses to at most two additions. The
+            // expressions mirror `run_waves_det` with `comm.done()`:
+            // `full` whole waves jumped as `full as f64 * d`, then one
+            // partial wave of `rem` threadblocks.
+            let capacity = wave_capacity(&ctx, gpu, None);
+            let full = tbs / capacity;
+            let rem = tbs - full * capacity;
+            let free_jump =
+                if full > 0 { Some(full as f64 * wave_time(&ctx, capacity, gpu, None)) } else { None };
+            let free_tail = if full == 0 {
+                Some(wave_time(&ctx, tbs, gpu, None))
+            } else if rem > 0 {
+                Some(wave_time(&ctx, rem, gpu, None))
+            } else {
+                None
+            };
+
+            for i in 0..n {
+                let start = self.t[i];
+                // Launch overhead runs on the compute stream (noise factor
+                // is 1 at sigma == 0).
+                let mut t = start + launch;
+                if self.head[i] >= nc {
+                    // Drained comm stream: `advance` is a no-op and the
+                    // wave loop reduces to the hoisted constants.
+                    if let Some(d) = free_jump {
+                        t += d;
+                    }
+                    if let Some(d) = free_tail {
+                        t += d;
+                    }
+                } else {
+                    let mut comm = CommStream {
+                        ops: &mut self.ops[i * nc..(i + 1) * nc],
+                        head: self.head[i],
+                    };
+                    comm.advance(start, launch, 1.0);
+                    t = run_waves_det(&mut comm, &ctx, tbs, gpu, t, true);
+                    self.head[i] = comm.head;
+                }
+                self.comp_total[i] += t - start;
+                self.t[i] = t;
+            }
+        }
+
+        // Per-candidate finalization: drain the comm tail, stamp the
+        // summary — the same epilogue as `sim_group_core`, per stripe.
+        self.summaries.clear();
+        self.summaries.reserve(n);
+        for i in 0..n {
+            let mut comm =
+                CommStream { ops: &mut self.ops[i * nc..(i + 1) * nc], head: self.head[i] };
+            let comm_end = comm.drain(self.t[i]);
+            self.head[i] = comm.head;
+            let makespan = self.t[i].max(comm_end);
+            let comm_total = self.comm_times(i).sum();
+            self.summaries.push(GroupSummary {
+                makespan,
+                comp_total: self.comp_total[i],
+                comm_total,
+            });
+        }
+
+        // The strongest guard we can afford in checked builds: replay every
+        // candidate through the scalar engine and demand bitwise equality.
+        #[cfg(debug_assertions)]
+        self.assert_matches_scalar_engine(group, candidates, cluster);
+    }
+
+    /// Debug-build cross-check: the lockstep results must be bitwise-equal
+    /// to per-candidate scalar engine runs (summary *and* per-comm spans).
+    #[cfg(debug_assertions)]
+    fn assert_matches_scalar_engine(
+        &self,
+        group: &OverlapGroup,
+        candidates: &[&[CommConfig]],
+        cluster: &ClusterSpec,
+    ) {
+        let mut env = super::SimEnv::deterministic(cluster.clone());
+        let mut scratch = super::SimScratch::new();
+        for (i, configs) in candidates.iter().enumerate() {
+            let s = super::simulate_group_summary(group, configs, &mut env, &mut scratch);
+            debug_assert_eq!(
+                s, self.summaries[i],
+                "SoA lockstep diverged from the scalar engine on candidate {i}"
+            );
+            debug_assert!(
+                scratch.comm_times().eq(self.comm_times(i)),
+                "SoA per-comm durations diverged on candidate {i}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::sim::{simulate_group_reference, simulate_group_summary, SimEnv, SimScratch};
+    use crate::util::units::{KIB, MIB};
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::cluster_b(1)
+    }
+
+    fn cfg(nc: u32, chunk: u64) -> CommConfig {
+        CommConfig { nc, nt: 128, chunk, ..CommConfig::default_ring() }
+    }
+
+    fn frontier(nc_list: &[u32]) -> Vec<Vec<CommConfig>> {
+        nc_list.iter().map(|&nc| vec![cfg(nc, 2 * MIB)]).collect()
+    }
+
+    /// Comp-bound, comm-bound, multi-comm and comm-free fixtures.
+    fn groups() -> Vec<OverlapGroup> {
+        let comp_bound = OverlapGroup::with(
+            "comp_bound",
+            vec![
+                CompOpDesc::ffn("ffn0", 2048, 2560, 10240, 2),
+                CompOpDesc::ffn("ffn1", 2048, 2560, 10240, 2),
+            ],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        let comm_bound = OverlapGroup::with(
+            "comm_bound",
+            vec![CompOpDesc::matmul("mm", 1024, 1024, 1024, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 256 * MIB, 8)],
+        );
+        let mut multi = comp_bound.clone();
+        multi.comms.push(CommOpDesc::new("ar2", CollectiveKind::AllReduce, MIB, 8));
+        let comm_free = OverlapGroup::with(
+            "comm_free",
+            vec![CompOpDesc::matmul("mm", 4096, 4096, 1024, 2)],
+            vec![],
+        );
+        vec![comp_bound, comm_bound, multi, comm_free]
+    }
+
+    #[test]
+    fn lockstep_matches_scalar_summary_bitwise() {
+        let cl = cluster();
+        for group in groups() {
+            let cands: Vec<Vec<CommConfig>> = [1u32, 2, 4, 8, 16, 32]
+                .iter()
+                .map(|&nc| {
+                    (0..group.comms.len())
+                        .map(|j| cfg(nc, (64 << j) * KIB))
+                        .collect()
+                })
+                .collect();
+            let views: Vec<&[CommConfig]> = cands.iter().map(|c| c.as_slice()).collect();
+            let mut batch = FrontierBatch::new();
+            batch.run(&group, &views, &cl);
+            assert_eq!(batch.len(), cands.len());
+            let mut env = SimEnv::deterministic(cl.clone());
+            let mut scratch = SimScratch::new();
+            for (i, cand) in cands.iter().enumerate() {
+                let s = simulate_group_summary(&group, cand, &mut env, &mut scratch);
+                assert_eq!(s, batch.summaries()[i], "{}: candidate {i}", group.name);
+                let times: Vec<f64> = scratch.comm_times().collect();
+                let batch_times: Vec<f64> = batch.comm_times(i).collect();
+                assert_eq!(times, batch_times, "{}: comm_times {i}", group.name);
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_matches_per_wave_reference_bitwise() {
+        let cl = cluster();
+        let group = groups().remove(0);
+        let cands = frontier(&[1, 2, 4, 8, 16, 32]);
+        let views: Vec<&[CommConfig]> = cands.iter().map(|c| c.as_slice()).collect();
+        let mut batch = FrontierBatch::new();
+        batch.run(&group, &views, &cl);
+        for (i, cand) in cands.iter().enumerate() {
+            let r = simulate_group_reference(&group, cand, &mut SimEnv::deterministic(cl.clone()));
+            let s = batch.summaries()[i];
+            assert_eq!(s.makespan, r.makespan, "candidate {i}");
+            assert_eq!(s.comp_total, r.comp_total(), "candidate {i}");
+            assert_eq!(s.comm_total, r.comm_total(), "candidate {i}");
+        }
+    }
+
+    #[test]
+    fn buffers_are_reusable_across_runs() {
+        let cl = cluster();
+        let gs = groups();
+        let mut batch = FrontierBatch::new();
+        // Run a wide frontier, then a narrow one on a different group:
+        // stale state from the first run must not leak into the second.
+        let wide = frontier(&[1, 2, 4, 8, 16, 32, 48, 64]);
+        let views: Vec<&[CommConfig]> = wide.iter().map(|c| c.as_slice()).collect();
+        batch.run(&gs[0], &views, &cl);
+        assert_eq!(batch.len(), 8);
+
+        let narrow = frontier(&[2, 8]);
+        let views: Vec<&[CommConfig]> = narrow.iter().map(|c| c.as_slice()).collect();
+        batch.run(&gs[1], &views, &cl);
+        assert_eq!(batch.len(), 2);
+        let mut env = SimEnv::deterministic(cl.clone());
+        let mut scratch = SimScratch::new();
+        for (i, cand) in narrow.iter().enumerate() {
+            let s = simulate_group_summary(&gs[1], cand, &mut env, &mut scratch);
+            assert_eq!(s, batch.summaries()[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one config per communication op")]
+    fn config_arity_mismatch_panics() {
+        let cl = cluster();
+        let group = groups().remove(0);
+        let bad: Vec<CommConfig> = vec![];
+        let mut batch = FrontierBatch::new();
+        batch.run(&group, &[bad.as_slice()], &cl);
+    }
+}

@@ -120,21 +120,25 @@ impl SimScratch {
 }
 
 /// Per-op comm-stream state (kept in one vector: one allocation, better
-/// locality on the wave loop's hot path).
+/// locality on the wave loop's hot path). `pub(super)` so the lockstep
+/// SoA batch ([`super::batch`]) lays the same state out in parallel
+/// arrays without duplicating the engine's semantics.
 #[derive(Debug, Clone, Copy)]
-struct CommOpState {
+pub(super) struct CommOpState {
     /// Uncontended work (seconds at rate 1) remaining.
-    remaining: f64,
-    res: CommResources,
-    span: (f64, f64),
+    pub(super) remaining: f64,
+    pub(super) res: CommResources,
+    pub(super) span: (f64, f64),
 }
 
 /// Serialized comm-stream state during a group simulation. Borrows the op
-/// buffer so the scoring path can reuse one allocation across calls.
-struct CommStream<'a> {
-    ops: &'a mut Vec<CommOpState>,
+/// buffer as a slice so both the scoring path (one group's ops in a
+/// reusable `Vec`) and the SoA batch (one candidate's stripe of a flat
+/// frontier array) drive the *same* stream logic.
+pub(super) struct CommStream<'a> {
+    pub(super) ops: &'a mut [CommOpState],
     /// Index of the op currently at the head of the stream.
-    head: usize,
+    pub(super) head: usize,
 }
 
 impl CommStream<'_> {
@@ -142,7 +146,7 @@ impl CommStream<'_> {
         self.ops.get(self.head).map(|o| &o.res)
     }
 
-    fn done(&self) -> bool {
+    pub(super) fn done(&self) -> bool {
         self.head >= self.ops.len()
     }
 
@@ -180,7 +184,7 @@ impl CommStream<'_> {
     /// `rate` (≤ 1 under compute pressure), starting at wall time `t0`.
     /// Multiple ops may complete inside the window; each completion is
     /// stamped at its own wall-clock instant.
-    fn advance(&mut self, t0: f64, dt: f64, rate: f64) {
+    pub(super) fn advance(&mut self, t0: f64, dt: f64, rate: f64) {
         let mut t = t0;
         let mut room = dt;
         while room > 1e-15 && !self.done() {
@@ -199,7 +203,7 @@ impl CommStream<'_> {
 
     /// Drain the rest of the stream uncontended starting at wall time `t`;
     /// returns the finish time.
-    fn drain(&mut self, mut t: f64) -> f64 {
+    pub(super) fn drain(&mut self, mut t: f64) -> f64 {
         while !self.done() {
             t += self.ops[self.head].remaining;
             self.complete_head(t);
@@ -212,7 +216,11 @@ impl CommStream<'_> {
 /// resources. Shared by the deterministic and noisy stepping loops so the
 /// contention model lives in exactly one place.
 #[inline]
-fn wave_capacity(ctx: &CompContext, gpu: &GpuSpec, active: Option<&CommResources>) -> u64 {
+pub(super) fn wave_capacity(
+    ctx: &CompContext,
+    gpu: &GpuSpec,
+    active: Option<&CommResources>,
+) -> u64 {
     sms_available(gpu, active.map(|r| r.sms).unwrap_or(0)) as u64 * ctx.tb_per_sm as u64
 }
 
@@ -274,8 +282,10 @@ fn waves_head_survives(r0: f64, consumed: f64, max_waves: u64, compressed: bool)
 
 /// Execute one comp op's waves deterministically (`sigma == 0`), jumping
 /// runs of identical full waves when `compressed`. Returns the wall time
-/// after the last wave.
-fn run_waves_det(
+/// after the last wave. `pub(super)`: the SoA batch drives the same loop
+/// per candidate stripe, which is what makes it bitwise-equal by
+/// construction.
+pub(super) fn run_waves_det(
     comm: &mut CommStream<'_>,
     ctx: &CompContext,
     mut tbs: u64,
@@ -364,7 +374,7 @@ fn sim_group_core(
             span: (0.0, 0.0),
         });
     }
-    let mut comm = CommStream { ops, head: 0 };
+    let mut comm = CommStream { ops: ops.as_mut_slice(), head: 0 };
 
     // Compute stream: execute ops wave-by-wave; the active comm at each
     // wave start decides that wave's contention (committed per wave, like

@@ -15,11 +15,16 @@
 //! waves into closed-form jumps (O(#comm-op transitions) per group), and
 //! the scoring entry points ([`simulate_group_summary`],
 //! [`simulate_group_cost`], [`simulate_schedule_cost`]) execute without
-//! allocating — see [`engine`] for the invariants.
+//! allocating — see [`engine`] for the invariants. Whole candidate
+//! frontiers of one group advance in lockstep through the
+//! structure-of-arrays path ([`batch::FrontierBatch`]), bitwise-identical
+//! to per-candidate runs.
 
+pub mod batch;
 pub mod engine;
 pub mod trace;
 
+pub use batch::FrontierBatch;
 pub use engine::{
     simulate_group, simulate_group_cost, simulate_group_reference, simulate_group_summary,
     simulate_schedule, simulate_schedule_cost, GroupResult, GroupSummary, IterResult, SimEnv,

@@ -65,6 +65,31 @@ where
         .collect()
 }
 
+/// Split the worklist `0..items` into at most `shards` contiguous,
+/// near-equal `(lo, hi)` ranges (the first `items % shards` ranges carry
+/// one extra item); never produces an empty range. This is how the SoA
+/// frontier batch composes with `--jobs`: each worker runs one contiguous
+/// candidate range through its own batch, and because every range is
+/// processed independently and results land in range order, the
+/// concatenated output is identical to a single serial pass.
+pub fn chunk_ranges(items: usize, shards: usize) -> Vec<(usize, usize)> {
+    if items == 0 {
+        return Vec::new();
+    }
+    let shards = shards.clamp(1, items);
+    let base = items / shards;
+    let extra = items % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut lo = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, items, "ranges tile the worklist exactly");
+    out
+}
+
 /// Stateless variant of [`run_indexed_with`].
 pub fn run_indexed<T, F>(jobs: usize, items: usize, work: F) -> Vec<T>
 where
@@ -86,6 +111,25 @@ mod tests {
         assert_eq!(effective_jobs(2, 100), 2);
         assert_eq!(effective_jobs(5, 0), 1);
         assert!(effective_jobs(0, 1000) >= 1, "auto resolves to >= 1");
+    }
+
+    #[test]
+    fn chunk_ranges_tile_exactly_and_balance() {
+        for (items, shards) in [(10usize, 3usize), (48, 4), (1, 8), (7, 7), (100, 1)] {
+            let r = chunk_ranges(items, shards);
+            assert!(r.len() <= shards && !r.is_empty());
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, items);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            let (min, max) = r
+                .iter()
+                .map(|(lo, hi)| hi - lo)
+                .fold((usize::MAX, 0), |(a, b), l| (a.min(l), b.max(l)));
+            assert!(min >= 1 && max - min <= 1, "near-equal: {r:?}");
+        }
+        assert!(chunk_ranges(0, 4).is_empty());
     }
 
     #[test]

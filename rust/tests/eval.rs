@@ -227,6 +227,61 @@ fn every_tuner_identical_at_jobs_1_vs_8() {
 }
 
 #[test]
+fn cache_accounting_invariant_under_parallel_batches() {
+    // Satellite acceptance: the sharded memo cache's relaxed counters must
+    // satisfy `hits + misses == lookups` exactly once the workers have
+    // joined — exercised through the real parallel evaluate_batch path at
+    // jobs=8, with revisits to generate both hits and misses.
+    let cluster = ClusterSpec::cluster_b(1);
+    let group = comp_bound_group();
+    let frontier: Vec<Vec<CommConfig>> = (0..24u32)
+        .map(|i| vec![CommConfig { nc: 1 + i % 8, chunk: (64 + 64 * (i as u64 / 8)) * 1024, ..CommConfig::default_ring() }])
+        .collect();
+    for soa in [true, false] {
+        // sigma == 0 so `soa = true` genuinely takes the SoA route.
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(8).with_soa(soa);
+        ev.evaluate_batch(&group, &frontier);
+        ev.evaluate_batch(&group, &frontier); // pure hits
+        let c = ev.cache();
+        assert_eq!(
+            c.hits() + c.misses(),
+            c.lookups(),
+            "soa={soa}: every lookup is either a hit or a miss"
+        );
+        assert_eq!(c.lookups(), 2 * frontier.len() as u64, "soa={soa}");
+        assert!(c.hits() >= frontier.len() as u64, "soa={soa}: second pass all hits");
+    }
+}
+
+#[test]
+fn mixed_group_frontiers_fall_back_with_identical_results() {
+    // Satellite acceptance: heterogeneous frontiers (different overlap
+    // groups per candidate) must route to the per-candidate PR 3 path —
+    // the SoA batch only ever sees homogeneous segments — and produce
+    // results and accounting identical to evaluating one by one.
+    let cluster = ClusterSpec::cluster_b(1);
+    let g1 = comp_bound_group();
+    let g2 = comm_bound_group();
+    let cfg = |nc: u32| vec![CommConfig { nc, ..CommConfig::default_ring() }];
+    // Strictly alternating: every segment is a singleton.
+    let items: Vec<(&OverlapGroup, Vec<CommConfig>)> = vec![
+        (&g1, cfg(1)),
+        (&g2, cfg(1)),
+        (&g1, cfg(2)),
+        (&g2, cfg(2)),
+        (&g1, cfg(4)),
+        (&g2, cfg(4)),
+    ];
+    let mut mixed = SimEvaluator::deterministic(cluster.clone()).with_jobs(8);
+    let got = mixed.evaluate_groups(&items);
+    let mut reference = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
+    let want: Vec<_> = items.iter().map(|(g, c)| reference.evaluate(g, c)).collect();
+    assert_eq!(got, want, "heterogeneous frontier == one-by-one evaluation");
+    assert_eq!(mixed.stats(), reference.stats(), "accounting identical too");
+    assert_eq!(mixed.stats().sim_calls, items.len() as u64, "no SoA batch formed");
+}
+
+#[test]
 fn eval_mode_factory_drives_all_three_tiers() {
     let cluster = ClusterSpec::cluster_b(1);
     let s = schedule_of(vec![comp_bound_group()]);

@@ -153,6 +153,45 @@ fn prop_wave_compression_is_exact() {
 }
 
 #[test]
+fn prop_soa_batch_matches_reference() {
+    // The lockstep SoA frontier must reproduce the **per-wave reference
+    // stepper** bitwise at sigma == 0, across random comp/comm mixes ×
+    // random candidate frontiers (comm-free groups included) — the PR 6
+    // tentpole acceptance, one level stronger than matching the compressed
+    // scalar engine.
+    use lagom::sim::FrontierBatch;
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| {
+        let comps = vec_of(arb_comp(), 1, 4).sample(rng);
+        let comms = vec_of(arb_comm(), 0, 3).sample(rng);
+        let n = 2 + rng.next_below(5) as usize;
+        let frontier: Vec<Vec<CommConfig>> = (0..n)
+            .map(|_| (0..comms.len()).map(|_| arb_config().sample(rng)).collect())
+            .collect();
+        (comps, comms, frontier)
+    });
+    for_all("soa = per-wave reference", &g, default_cases() / 4, |(comps, comms, frontier)| {
+        let group = OverlapGroup::with("p", comps.clone(), comms.clone());
+        let views: Vec<&[CommConfig]> = frontier.iter().map(|c| c.as_slice()).collect();
+        let mut batch = FrontierBatch::new();
+        batch.run(&group, &views, &cl);
+        for (i, cfgs) in frontier.iter().enumerate() {
+            let r =
+                simulate_group_reference(&group, cfgs, &mut SimEnv::deterministic(cl.clone()));
+            let s = batch.summaries()[i];
+            let same = s.makespan == r.makespan
+                && s.comp_total == r.comp_total()
+                && s.comm_total == r.comm_total()
+                && batch.comm_times(i).eq(r.comm_times.iter().copied());
+            if !same {
+                return Check::from_bool(false, &format!("candidate {i} diverged"));
+            }
+        }
+        Check::from_bool(true, "all candidates bitwise-equal")
+    });
+}
+
+#[test]
 fn prop_sim_deterministic_and_seeded() {
     let cl = ClusterSpec::cluster_b(1);
     let g = Gen::new(move |rng| {
