@@ -10,9 +10,9 @@
 //! (`--jobs 0`), and the tiered evaluator. Gate: parallel+compressed
 //! ≥ 5× the per-wave serial baseline.
 //!
-//! **Deep pipeline** (PR 6 SoA floor): hundreds of comp ops per group
-//! against a small collective that drains within the first few, so per
-//! candidate the compressed per-candidate path still pays
+//! **Deep pipeline** (PR 6 SoA floor + PR 7 plan floor): hundreds of comp
+//! ops per group against a small collective that drains within the first
+//! few, so per candidate the compressed per-candidate path still pays
 //! O(#comps) scalar engine dispatch (context + wave-capacity + closed-form
 //! jump per comp) plus a content-key hash, while the lockstep SoA frontier
 //! ([`lagom::sim::FrontierBatch`]) hoists all of that once per comp *per
@@ -21,14 +21,22 @@
 //! the same frontier, with bitwise-identical results and accounting
 //! (asserted here, not just in unit tests).
 //!
-//! Appends both tables to `target/bench_results.jsonl`.
+//! The compiled-plan route ([`lagom::sim::GroupPlan`]) hoists the comp
+//! constants one level further — once per `(group, cluster)` instead of
+//! once per frontier — and replaces the SoA batch's per-cell head checks
+//! with three branch-free shape-specialized add loops over packed lanes.
+//! Gate: plan (jobs=0) ≥ 3× the SoA sharded path on the same frontier,
+//! bitwise-identical again; plan *compile* cost is reported in its own
+//! amortization table, separate from steady-state candidates/sec.
+//!
+//! Appends every table to `target/bench_results.jsonl`.
 
 use lagom::bench::{save_table, Table};
 use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
 use lagom::eval::{AnalyticEvaluator, Evaluator, SimEvaluator, TieredEvaluator};
 use lagom::graph::{CompOpDesc, OverlapGroup};
 use lagom::hw::ClusterSpec;
-use lagom::sim::{simulate_group_reference, SimEnv};
+use lagom::sim::{simulate_group_reference, GroupPlan, SimEnv};
 use lagom::util::parallel::effective_jobs;
 use lagom::util::units::{KIB, MIB};
 use std::time::Instant;
@@ -129,18 +137,23 @@ fn main() {
         n
     });
 
-    // Compressed + allocation-free, serial per-candidate (SoA disabled so
-    // this row keeps measuring the PR 3 path). Fresh evaluator per round so
-    // the memo cache never answers (we are timing simulation, not lookup).
+    // Compressed + allocation-free, serial per-candidate (plan and SoA
+    // disabled so this row keeps measuring the PR 3 path). Fresh evaluator
+    // per round so the memo cache never answers (we are timing simulation,
+    // not lookup).
     let serial_fast = cps(min_secs, || {
-        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
+        let mut ev =
+            SimEvaluator::deterministic(cluster.clone()).with_plan(false).with_soa(false);
         ev.evaluate_batch(&group, &frontier).len()
     });
 
     // Compressed + parallel (one worker per core), still per-candidate.
     let jobs = effective_jobs(0, n);
     let parallel_fast = cps(min_secs, || {
-        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false).with_jobs(0);
+        let mut ev = SimEvaluator::deterministic(cluster.clone())
+            .with_plan(false)
+            .with_soa(false)
+            .with_jobs(0);
         ev.evaluate_batch(&group, &frontier).len()
     });
 
@@ -186,34 +199,63 @@ fn main() {
     let dfrontier = deep_frontier();
     let dn = dfrontier.len();
 
-    // Bitwise identity first: the SoA frontier and the per-candidate path
-    // must agree on every number and every counter before a throughput
+    // Bitwise identity first: the plan route, the SoA frontier and the
+    // per-candidate path must agree on every number — and, modulo the
+    // plan-route-only counters, on the accounting — before a throughput
     // claim means anything.
     {
-        let mut soa_ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(0);
+        let mut plan_ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(0);
+        let p = plan_ev.evaluate_batch(&deep, &dfrontier);
+        let mut soa_ev =
+            SimEvaluator::deterministic(cluster.clone()).with_plan(false).with_jobs(0);
         let a = soa_ev.evaluate_batch(&deep, &dfrontier);
-        let mut ref_ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
+        let mut ref_ev =
+            SimEvaluator::deterministic(cluster.clone()).with_plan(false).with_soa(false);
         let b = ref_ev.evaluate_batch(&deep, &dfrontier);
+        assert_eq!(p, a, "plan results must be bitwise-identical to the SoA path");
         assert_eq!(a, b, "SoA results must be bitwise-identical to the per-candidate path");
         assert_eq!(soa_ev.stats(), ref_ev.stats(), "and so must the accounting");
+        assert_eq!(
+            plan_ev.stats().route_invariant(),
+            soa_ev.stats().route_invariant(),
+            "plan accounting (minus its own counters) identical too"
+        );
+        assert_eq!(plan_ev.stats().plan_compiles, 1, "one group, one compile");
     }
 
     // PR 3 path, serial and parallel (per-candidate compressed engine).
     let pr3_serial = cps(min_secs, || {
-        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
+        let mut ev =
+            SimEvaluator::deterministic(cluster.clone()).with_plan(false).with_soa(false);
         ev.evaluate_batch(&deep, &dfrontier).len()
     });
     let pr3_parallel = cps(min_secs, || {
-        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_soa(false).with_jobs(0);
+        let mut ev = SimEvaluator::deterministic(cluster.clone())
+            .with_plan(false)
+            .with_soa(false)
+            .with_jobs(0);
         ev.evaluate_batch(&deep, &dfrontier).len()
     });
 
     // Lockstep SoA frontier, one shard and sharded across cores.
     let soa_serial = cps(min_secs, || {
-        let mut ev = SimEvaluator::deterministic(cluster.clone());
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_plan(false);
         ev.evaluate_batch(&deep, &dfrontier).len()
     });
     let soa_sharded = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone()).with_plan(false).with_jobs(0);
+        ev.evaluate_batch(&deep, &dfrontier).len()
+    });
+
+    // Compiled-plan route, serial and sharded. A fresh evaluator per round
+    // keeps the memo cache from answering (as above); the per-round plan
+    // compile is amortized over the whole frontier and additionally
+    // measured on its own below.
+    let plan_serial = cps(min_secs, || {
+        let mut ev = SimEvaluator::deterministic(cluster.clone());
+        ev.evaluate_batch(&deep, &dfrontier).len()
+    });
+    let plan_sharded = cps(min_secs, || {
         let mut ev = SimEvaluator::deterministic(cluster.clone()).with_jobs(0);
         ev.evaluate_batch(&deep, &dfrontier).len()
     });
@@ -230,10 +272,37 @@ fn main() {
     };
     row2("pr3 per-candidate serial (--no-soa, jobs=1)", pr3_serial, pr3_parallel);
     row2(&format!("pr3 per-candidate parallel (--no-soa, jobs={jobs})"), pr3_parallel, pr3_parallel);
-    row2("soa lockstep serial (jobs=1)", soa_serial, pr3_parallel);
-    row2(&format!("soa lockstep sharded (jobs={jobs})"), soa_sharded, pr3_parallel);
+    row2("soa lockstep serial (--no-plan, jobs=1)", soa_serial, pr3_parallel);
+    row2(&format!("soa lockstep sharded (--no-plan, jobs={jobs})"), soa_sharded, pr3_parallel);
+    row2("plan compiled serial (jobs=1)", plan_serial, pr3_parallel);
+    row2(&format!("plan compiled sharded (jobs={jobs})"), plan_sharded, pr3_parallel);
     t2.print();
     save_table(&t2);
+
+    // Plan compile amortization, reported apart from the steady-state
+    // candidates/sec rows: a compile is a one-time O(#comps) cost per
+    // (group, cluster), paid once per PlanCache lifetime.
+    let compile_reps = 50;
+    let t0 = Instant::now();
+    for _ in 0..compile_reps {
+        std::hint::black_box(GroupPlan::compile(&deep, &cluster));
+    }
+    let compile_us = t0.elapsed().as_secs_f64() / compile_reps as f64 * 1e6;
+    let mut t3 = Table::new(
+        format!("Plan compile amortization — deep pipeline ({} comps)", deep.comps.len()),
+        &["metric", "value"],
+    );
+    t3.row(vec!["compile time (us)".into(), format!("{compile_us:.1}")]);
+    t3.row(vec![
+        "steady-state candidates/sec (plan sharded)".into(),
+        format!("{plan_sharded:.0}"),
+    ]);
+    t3.row(vec![
+        "candidates to amortize one compile".into(),
+        format!("{:.2}", compile_us * 1e-6 * plan_sharded),
+    ]);
+    t3.print();
+    save_table(&t3);
 
     let soa_speedup = soa_sharded / pr3_parallel;
     println!(
@@ -245,5 +314,17 @@ fn main() {
         soa_speedup >= 5.0,
         "acceptance: lockstep SoA frontier must be >=5x the PR 3 \
          compressed-parallel path on the deep-pipeline fixture, got {soa_speedup:.2}x"
+    );
+
+    let plan_speedup = plan_sharded / soa_sharded;
+    println!(
+        "plan sharded vs SoA sharded: {plan_speedup:.1}x \
+         (plan serial vs SoA serial: {:.1}x, compile {compile_us:.1}us)",
+        plan_serial / soa_serial
+    );
+    assert!(
+        plan_speedup >= 3.0,
+        "acceptance: compiled-plan route must be >=3x the SoA sharded path \
+         on the deep-pipeline fixture, got {plan_speedup:.2}x"
     );
 }

@@ -17,6 +17,11 @@ pub struct Leaderboard {
     pub geomean_lagom_vs_autoccl: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Plan-cache telemetry from the measured scenarios (wall-time
+    /// accounting only — the plan route cannot change a ranked number).
+    pub plan_compiles: u64,
+    pub plan_hits: u64,
+    pub plan_evictions: u64,
     pub threads: usize,
     pub wall_secs: f64,
 }
@@ -38,6 +43,9 @@ impl Leaderboard {
             geomean_lagom_vs_autoccl: geomean(&vs_auto),
             cache_hits: result.cache_hits,
             cache_misses: result.cache_misses,
+            plan_compiles: result.plan_compiles,
+            plan_hits: result.plan_hits,
+            plan_evictions: result.plan_evictions,
             threads: result.threads,
             wall_secs: result.wall_secs,
         }
@@ -100,6 +108,14 @@ impl Leaderboard {
                 Json::obj(vec![
                     ("hits", Json::num(self.cache_hits as f64)),
                     ("misses", Json::num(self.cache_misses as f64)),
+                ]),
+            ),
+            (
+                "plan_cache",
+                Json::obj(vec![
+                    ("compiles", Json::num(self.plan_compiles as f64)),
+                    ("hits", Json::num(self.plan_hits as f64)),
+                    ("evictions", Json::num(self.plan_evictions as f64)),
                 ]),
             ),
             ("threads", Json::num(self.threads as f64)),
@@ -175,6 +191,9 @@ mod tests {
             outcomes,
             cache_hits: 1,
             cache_misses: 2,
+            plan_compiles: 6,
+            plan_hits: 3,
+            plan_evictions: 0,
             threads: 4,
             wall_secs: 0.5,
         }
@@ -208,6 +227,10 @@ mod tests {
         assert_eq!(sc.get("lagom").unwrap().as_u64(), Some(40));
         assert_eq!(sc.get("autoccl").unwrap().as_u64(), Some(90));
         assert_eq!(doc.get("cache").unwrap().get("hits").unwrap().as_u64(), Some(1));
+        let pc = doc.get("plan_cache").unwrap();
+        assert_eq!(pc.get("compiles").unwrap().as_u64(), Some(6));
+        assert_eq!(pc.get("hits").unwrap().as_u64(), Some(3));
+        assert_eq!(pc.get("evictions").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -25,6 +25,11 @@ pub struct CampaignConfig {
     /// evaluation results are key-derived, so this knob cannot change a
     /// single number.
     pub eval_jobs: usize,
+    /// Allow the evaluators' compiled-plan route (`--no-plan` clears it).
+    /// Like `eval_jobs`, NOT part of the cache key: the plan route is
+    /// bitwise-identical to the SoA and per-candidate paths, so this knob
+    /// cannot change a single number either.
+    pub eval_plan: bool,
     /// Allow the evaluators' lockstep SoA frontier path (`--no-soa`
     /// clears it). Like `eval_jobs`, NOT part of the cache key: the SoA
     /// path is bitwise-identical to the per-candidate path, so this knob
@@ -44,6 +49,7 @@ impl Default for CampaignConfig {
             seed: 42,
             jobs: 0,
             eval_jobs: 1,
+            eval_plan: true,
             eval_soa: true,
             space: ParamSpace::default(),
             fidelity: EvalMode::Simulated,
@@ -81,6 +87,14 @@ pub struct CampaignResult {
     pub outcomes: Vec<ScenarioOutcome>,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Plan-cache accounting summed over the scenarios *measured* in this
+    /// run (cached scenarios evaluated nothing and contribute zeros).
+    /// Wall-time telemetry only — deliberately absent from
+    /// [`CachedOutcome`] and the result-cache key, since the plan route
+    /// cannot change a number.
+    pub plan_compiles: u64,
+    pub plan_hits: u64,
+    pub plan_evictions: u64,
     pub threads: usize,
     pub wall_secs: f64,
 }
@@ -97,16 +111,19 @@ fn scenario_seed(base: u64, key: CacheKey) -> u64 {
 /// [`ParamSpace`] and evaluation fidelity plumbed into the searching
 /// tuners — both are part of the cache key, so both must be part of the
 /// measurement too. `opts` carries the wall-time-only execution knobs
-/// (`eval_jobs`, `eval_soa`), which are deliberately *not* in the key.
+/// (`eval_jobs`, `eval_plan`, `eval_soa`), which are deliberately *not*
+/// in the key. Returns the cacheable numbers plus the scenario's
+/// `(plan_compiles, plan_hits, plan_evictions)` telemetry — kept *out* of
+/// [`CachedOutcome`] so route knobs can never leak into cached results.
 fn measure(
     s: &Scenario,
     space: &ParamSpace,
     fidelity: EvalMode,
     seed: u64,
     opts: EvalOpts,
-) -> CachedOutcome {
+) -> (CachedOutcome, (u64, u64, u64)) {
     let c = compare_strategies_with_eval(&s.workload, &s.cluster, seed, space, fidelity, opts);
-    CachedOutcome {
+    let outcome = CachedOutcome {
         nccl_iter: c.row("NCCL").iter_time,
         autoccl_iter: c.row("AutoCCL").iter_time,
         lagom_iter: c.row("Lagom").iter_time,
@@ -115,7 +132,8 @@ fn measure(
         lagom_sim_calls: c.row("Lagom").sim_calls,
         autoccl_sim_calls: c.row("AutoCCL").sim_calls,
         seed,
-    }
+    };
+    (outcome, (c.plan_compiles, c.plan_hits, c.plan_evictions))
 }
 
 fn outcome_of(s: &Scenario, n: &CachedOutcome, cached: bool) -> ScenarioOutcome {
@@ -152,7 +170,7 @@ pub fn run_campaign(
     let misses0 = cache.misses();
     let threads = effective_jobs(config.jobs, scenarios.len());
 
-    let outcomes = run_indexed(threads, scenarios.len(), |i| {
+    let results = run_indexed(threads, scenarios.len(), |i| {
         let s = &scenarios[i];
         let key = CacheKey::of(
             &s.cluster,
@@ -161,27 +179,44 @@ pub fn run_campaign(
             config.seed,
             config.fidelity,
         );
-        let (numbers, cached) = match cache.lookup(&key) {
-            Some(n) => (n, true),
+        let (numbers, cached, plan) = match cache.lookup(&key) {
+            Some(n) => (n, true, (0, 0, 0)),
             None => {
-                let n = measure(
+                let (n, plan) = measure(
                     s,
                     &config.space,
                     config.fidelity,
                     scenario_seed(config.seed, key),
-                    EvalOpts { jobs: config.eval_jobs, soa: config.eval_soa, noise_sigma: None },
+                    EvalOpts {
+                        jobs: config.eval_jobs,
+                        plan: config.eval_plan,
+                        soa: config.eval_soa,
+                        noise_sigma: None,
+                    },
                 );
                 cache.insert(key, n.clone());
-                (n, false)
+                (n, false, plan)
             }
         };
-        outcome_of(s, &numbers, cached)
+        (outcome_of(s, &numbers, cached), plan)
     });
+
+    let (mut plan_compiles, mut plan_hits, mut plan_evictions) = (0u64, 0u64, 0u64);
+    let mut outcomes = Vec::with_capacity(results.len());
+    for (o, (pc, ph, pe)) in results {
+        outcomes.push(o);
+        plan_compiles += pc;
+        plan_hits += ph;
+        plan_evictions += pe;
+    }
 
     CampaignResult {
         outcomes,
         cache_hits: cache.hits() - hits0,
         cache_misses: cache.misses() - misses0,
+        plan_compiles,
+        plan_hits,
+        plan_evictions,
         threads,
         wall_secs: t0.elapsed().as_secs_f64(),
     }
@@ -287,6 +322,26 @@ mod tests {
             assert_eq!(a.lagom_iter, b.lagom_iter, "SoA changes wall time only");
             assert_eq!(a.lagom_sim_calls, b.lagom_sim_calls);
         }
+    }
+
+    #[test]
+    fn eval_plan_is_invisible_in_the_numbers() {
+        let grid: Vec<Scenario> = scenario_grid(Some(1)).into_iter().take(2).collect();
+        let on = run_campaign(&grid, &CampaignConfig::default(), &ResultCache::in_memory());
+        let off = run_campaign(
+            &grid,
+            &CampaignConfig { eval_plan: false, ..CampaignConfig::default() },
+            &ResultCache::in_memory(),
+        );
+        for (a, b) in on.outcomes.iter().zip(&off.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.lagom_iter, b.lagom_iter, "plan changes wall time only");
+            assert_eq!(a.autoccl_iter, b.autoccl_iter);
+            assert_eq!(a.lagom_sim_calls, b.lagom_sim_calls);
+        }
+        assert!(on.plan_compiles > 0, "plan route exercised when enabled");
+        assert_eq!(off.plan_compiles, 0, "no compiles with the route disabled");
+        assert_eq!((off.plan_hits, off.plan_evictions), (0, 0));
     }
 
     #[test]

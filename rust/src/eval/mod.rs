@@ -153,6 +153,13 @@ pub struct EvalStats {
     pub promoted: u64,
     /// Candidates answered from the cheap tier alone.
     pub pruned: u64,
+    /// Group plans compiled by the plan route ([`crate::sim::PlanCache`]
+    /// misses — every miss compiles exactly once).
+    pub plan_compiles: u64,
+    /// Plan-cache hits (frontiers served by an already-compiled plan).
+    pub plan_hits: u64,
+    /// Plans evicted from the plan cache (FIFO, capacity-bounded).
+    pub plan_evictions: u64,
 }
 
 impl EvalStats {
@@ -160,6 +167,15 @@ impl EvalStats {
     /// minimize.
     pub fn expensive_calls(&self) -> u64 {
         self.sim_calls + self.runtime_calls
+    }
+
+    /// Copy with the route-visible counters zeroed. The plan-cache
+    /// counters exist only on the plan route (the SoA and per-candidate
+    /// routes never touch a [`crate::sim::PlanCache`]), so cross-route
+    /// "identical accounting" assertions compare this projection; within
+    /// one route (`jobs = 1` vs `jobs = N`) full equality still holds.
+    pub fn route_invariant(&self) -> EvalStats {
+        EvalStats { plan_compiles: 0, plan_hits: 0, plan_evictions: 0, ..*self }
     }
 }
 
@@ -251,25 +267,28 @@ pub fn best_index_by<F: Fn(&Evaluation) -> f64>(evals: &[Evaluation], key: F) ->
 
 /// Execution knobs for [`make_evaluator_opts`] — everything about *how*
 /// evaluation runs (threads, batch route, noise level) as opposed to
-/// *what* is evaluated. `jobs` and `soa` are pure wall-time knobs; only
-/// `noise_sigma` changes returned numbers.
+/// *what* is evaluated. `jobs`, `plan` and `soa` are pure wall-time
+/// knobs; only `noise_sigma` changes returned numbers.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EvalOpts {
     /// Worker threads for the batch paths (`1` = serial, `0` = one per
     /// core).
     pub jobs: usize,
+    /// Allow the compiled-plan frontier path for deterministic batches
+    /// (`--no-plan` clears it). Results are identical either way.
+    pub plan: bool,
     /// Allow the lockstep SoA frontier path for deterministic batches
     /// (`--no-soa` clears it). Results are identical either way.
     pub soa: bool,
     /// Override the simulator's measurement-noise sigma (`None` keeps
     /// [`crate::sim::SimEnv::DEFAULT_NOISE_SIGMA`]). `Some(0.0)` makes
-    /// simulated evaluation deterministic — and thereby SoA-eligible.
+    /// simulated evaluation deterministic — and thereby plan/SoA-eligible.
     pub noise_sigma: Option<f64>,
 }
 
 impl Default for EvalOpts {
     fn default() -> EvalOpts {
-        EvalOpts { jobs: 1, soa: true, noise_sigma: None }
+        EvalOpts { jobs: 1, plan: true, soa: true, noise_sigma: None }
     }
 }
 
@@ -302,16 +321,20 @@ pub fn make_evaluator_opts(
     match mode {
         EvalMode::Analytic => Box::new(AnalyticEvaluator::new(cluster.clone())),
         EvalMode::Simulated => {
-            let mut ev =
-                SimEvaluator::new(cluster.clone(), seed).with_jobs(opts.jobs).with_soa(opts.soa);
+            let mut ev = SimEvaluator::new(cluster.clone(), seed)
+                .with_jobs(opts.jobs)
+                .with_plan(opts.plan)
+                .with_soa(opts.soa);
             if let Some(sigma) = opts.noise_sigma {
                 ev = ev.with_noise_sigma(sigma);
             }
             Box::new(ev)
         }
         EvalMode::Tiered => {
-            let mut ev =
-                TieredEvaluator::new(cluster.clone(), seed).with_jobs(opts.jobs).with_soa(opts.soa);
+            let mut ev = TieredEvaluator::new(cluster.clone(), seed)
+                .with_jobs(opts.jobs)
+                .with_plan(opts.plan)
+                .with_soa(opts.soa);
             if let Some(sigma) = opts.noise_sigma {
                 ev = ev.with_noise_sigma(sigma);
             }

@@ -1,16 +1,23 @@
 //! Simulated evaluation tier — the discrete-event engine with per-candidate
-//! memoization, allocation-free scoring, and two batch fast paths: the
-//! lockstep SoA frontier ([`crate::sim::FrontierBatch`], deterministic
-//! groups) and the per-candidate parallel fan-out (noisy groups, or
-//! `--no-soa`). Both are bitwise-identical to the serial path, results
-//! *and* accounting.
+//! memoization, allocation-free scoring, and three batch fast paths, tried
+//! in order: the compiled plan route ([`crate::sim::GroupPlan`], default
+//! for deterministic groups — compile once per `(group, cluster)`, walk
+//! regime tables per candidate), the lockstep SoA frontier
+//! ([`crate::sim::FrontierBatch`], `--no-plan`) and the per-candidate
+//! parallel fan-out (noisy groups, or `--no-soa`). All are
+//! bitwise-identical to the serial path, results *and* accounting (the
+//! plan-cache counters being the one route-visible exception — see
+//! [`EvalStats::route_invariant`]).
 
 use super::cache::{eval_key, eval_key_prefix, eval_key_suffix, group_key, ShardedEvalCache};
 use super::{EvalStats, Evaluation, Evaluator, Fidelity};
 use crate::comm::CommConfig;
 use crate::graph::OverlapGroup;
 use crate::hw::ClusterSpec;
-use crate::sim::{simulate_group_summary, FrontierBatch, SimEnv, SimScratch};
+use crate::sim::{
+    simulate_group_summary, FrontierBatch, GroupSummary, PlanCache, PlanScratch, SimEnv,
+    SimScratch,
+};
 use crate::util::parallel::{chunk_ranges, effective_jobs, run_indexed_with};
 use crate::util::prng::{splitmix64, Prng};
 
@@ -42,14 +49,23 @@ pub struct SimEvaluator {
     /// Worker threads `evaluate_batch` fans candidates across (`1` =
     /// serial, `0` = one per core). Results are identical at any value.
     pub jobs: usize,
+    /// Use the compiled plan route ([`crate::sim::GroupPlan`]) for
+    /// deterministic (`sigma == 0`) batches: the per-`(group, cluster)`
+    /// plan is compiled once, cached in [`PlanCache`] across frontiers and
+    /// `evaluate_groups` segments, and candidate scoring becomes a regime
+    /// table walk. On by default; `--no-plan` falls back to the SoA route
+    /// — results are identical either way.
+    pub plan: bool,
     /// Use the lockstep SoA frontier path ([`FrontierBatch`]) for
     /// deterministic (`sigma == 0`) batches. On by default; `--no-soa`
     /// falls back to the per-candidate path — results are identical
     /// either way (asserted in tests and `benches/eval_throughput.rs`).
     pub soa: bool,
     cache: ShardedEvalCache,
+    plan_cache: PlanCache,
     scratch: SimScratch,
     batch: FrontierBatch,
+    plan_scratch: PlanScratch,
     evaluations: u64,
     sim_calls: u64,
 }
@@ -65,10 +81,13 @@ impl SimEvaluator {
             base_seed: seed,
             reps: reps.max(1),
             jobs: 1,
+            plan: true,
             soa: true,
             cache: ShardedEvalCache::new(),
+            plan_cache: PlanCache::new(),
             scratch: SimScratch::new(),
             batch: FrontierBatch::new(),
+            plan_scratch: PlanScratch::new(),
             evaluations: 0,
             sim_calls: 0,
         }
@@ -81,10 +100,13 @@ impl SimEvaluator {
             base_seed: 0,
             reps: 1,
             jobs: 1,
+            plan: true,
             soa: true,
             cache: ShardedEvalCache::new(),
+            plan_cache: PlanCache::new(),
             scratch: SimScratch::new(),
             batch: FrontierBatch::new(),
+            plan_scratch: PlanScratch::new(),
             evaluations: 0,
             sim_calls: 0,
         }
@@ -99,6 +121,14 @@ impl SimEvaluator {
     /// Set the `evaluate_batch` worker count (builder style).
     pub fn with_jobs(mut self, jobs: usize) -> SimEvaluator {
         self.jobs = jobs;
+        self
+    }
+
+    /// Enable/disable the compiled plan route (builder style). Purely a
+    /// wall-time knob: results are identical, and the accounting differs
+    /// only in the plan-cache counters themselves.
+    pub fn with_plan(mut self, plan: bool) -> SimEvaluator {
+        self.plan = plan;
         self
     }
 
@@ -117,6 +147,11 @@ impl SimEvaluator {
         &self.cache
     }
 
+    /// The compiled-plan cache (observability: compile/hit/evict counters).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plan_cache
+    }
+
     fn key_of(&self, group: &OverlapGroup, configs: &[CommConfig]) -> u64 {
         eval_key(
             &self.env.cluster,
@@ -128,12 +163,76 @@ impl SimEvaluator {
         )
     }
 
+    /// Whether a batch over `n` candidates takes the compiled plan route:
+    /// only the deterministic engine is plannable (the noisy engine draws
+    /// per-wave noise, so no per-comp quantity is a constant), and a
+    /// single candidate cannot amortize a table. Takes priority over the
+    /// SoA route; `--no-plan` falls back to it.
+    fn plan_eligible(&self, n: usize) -> bool {
+        self.plan && self.env.noise_sigma == 0.0 && n >= 2
+    }
+
     /// Whether a batch over `n` candidates takes the lockstep SoA path:
     /// only the deterministic engine can run candidates in lockstep (the
     /// noisy engine draws per-candidate noise streams in wave order), and
     /// a single candidate has nothing to share.
     fn soa_eligible(&self, n: usize) -> bool {
         self.soa && self.env.noise_sigma == 0.0 && n >= 2
+    }
+
+    /// Run the distinct cache misses of a frontier through the compiled
+    /// plan for this `(group, cluster)` pair, compiling it on first sight
+    /// and serving it from the [`PlanCache`] on every later frontier —
+    /// including across `evaluate_groups` segments and tuner iterations.
+    /// The single `get_or_compile` per batch happens here, on the caller
+    /// thread, *before* any sharding: plan-cache counters are therefore
+    /// `jobs`-invariant by construction. Sharding mirrors [`Self::run_soa`]
+    /// — contiguous ranges, range-ordered results, private scratch per
+    /// worker — so the shard count cannot change a single number.
+    fn run_plan(
+        &mut self,
+        group: &OverlapGroup,
+        plan_key: u64,
+        candidates: &[Vec<CommConfig>],
+        miss: &[usize],
+    ) -> Vec<Evaluation> {
+        if miss.is_empty() {
+            // All-hit frontiers never touch the plan cache: revisiting a
+            // memoized frontier leaves the plan counters unchanged on
+            // every route, plan or not.
+            return Vec::new();
+        }
+        let plan = self.plan_cache.get_or_compile(plan_key, group, &self.env.cluster);
+        let views: Vec<&[CommConfig]> = miss.iter().map(|&i| candidates[i].as_slice()).collect();
+        let reps = self.reps;
+        let shards = effective_jobs(self.jobs, views.len() / SOA_MIN_SHARD);
+        if shards <= 1 {
+            let SimEvaluator { env, plan_scratch, .. } = self;
+            plan.run(group, &views, &env.cluster, plan_scratch);
+            return (0..views.len())
+                .map(|k| evaluation_from_plan(plan_scratch, k, reps))
+                .collect();
+        }
+        let ranges = chunk_ranges(views.len(), shards);
+        let env = &self.env;
+        let views = &views;
+        let ranges_ref = &ranges;
+        let plan_ref = &plan;
+        run_indexed_with(
+            shards,
+            ranges.len(),
+            PlanScratch::new,
+            |scratch, s| {
+                let (lo, hi) = ranges_ref[s];
+                plan_ref.run(group, &views[lo..hi], &env.cluster, scratch);
+                (0..hi - lo)
+                    .map(|k| evaluation_from_plan(scratch, k, reps))
+                    .collect::<Vec<Evaluation>>()
+            },
+        )
+        .into_iter()
+        .flatten()
+        .collect()
     }
 
     /// Run the distinct cache misses of a frontier through the lockstep
@@ -208,21 +307,25 @@ impl SimEvaluator {
     }
 }
 
-/// Assemble candidate `k` of a finished [`FrontierBatch`] run into an
-/// [`Evaluation`], replicating [`simulate_candidate`]'s accumulation
-/// arithmetic. At `sigma == 0` every repetition of the engine is
-/// identical (the noise closure never touches the PRNG), so one lockstep
+/// Assemble one deterministic-run outcome (summary + per-comm durations)
+/// into an [`Evaluation`], replicating [`simulate_candidate`]'s
+/// accumulation arithmetic. At `sigma == 0` every repetition of the
+/// engine is identical (the noise closure never touches the PRNG), so one
 /// pass stands in for all `reps`: accumulate the same summary `reps`
 /// times and divide — the *exact* float sequence the per-candidate loop
-/// performs, hence bitwise-equal output.
-fn evaluation_from_batch(batch: &FrontierBatch, k: usize, reps: u32) -> Evaluation {
-    let s = batch.summaries()[k];
-    let mut comm_times: Vec<f64> = batch.comm_times(k).map(|_| 0.0).collect();
+/// performs, hence bitwise-equal output. Shared by the SoA and plan
+/// routes so the reps arithmetic cannot drift between them.
+fn evaluation_from_summary<F, I>(s: GroupSummary, comm_times_of: F, reps: u32) -> Evaluation
+where
+    F: Fn() -> I,
+    I: Iterator<Item = f64>,
+{
+    let mut comm_times: Vec<f64> = comm_times_of().map(|_| 0.0).collect();
     let mut comp_total = 0.0;
     let mut comm_total = 0.0;
     let mut makespan = 0.0;
     for _ in 0..reps {
-        for (acc, t) in comm_times.iter_mut().zip(batch.comm_times(k)) {
+        for (acc, t) in comm_times.iter_mut().zip(comm_times_of()) {
             *acc += t;
         }
         comp_total += s.comp_total;
@@ -242,6 +345,16 @@ fn evaluation_from_batch(batch: &FrontierBatch, k: usize, reps: u32) -> Evaluati
         confidence: 0.9,
         cached: false,
     }
+}
+
+/// Candidate `k` of a finished [`FrontierBatch`] run.
+fn evaluation_from_batch(batch: &FrontierBatch, k: usize, reps: u32) -> Evaluation {
+    evaluation_from_summary(batch.summaries()[k], || batch.comm_times(k), reps)
+}
+
+/// Candidate `k` of a finished [`crate::sim::GroupPlan`] run.
+fn evaluation_from_plan(scratch: &PlanScratch, k: usize, reps: u32) -> Evaluation {
+    evaluation_from_summary(scratch.summaries()[k], || scratch.comm_times(k), reps)
 }
 
 /// Simulate one candidate with the key-derived noise stream: a pure
@@ -312,24 +425,23 @@ impl Evaluator for SimEvaluator {
         group: &OverlapGroup,
         candidates: &[Vec<CommConfig>],
     ) -> Vec<Evaluation> {
+        let plan = self.plan_eligible(candidates.len());
         let soa = self.soa_eligible(candidates.len());
-        if candidates.len() < 2 || (!soa && self.jobs == 1) {
+        if candidates.len() < 2 || (!plan && !soa && self.jobs == 1) {
             return candidates.iter().map(|c| self.evaluate(group, c)).collect();
         }
         self.evaluations += candidates.len() as u64;
         // All candidates share `(cluster, group)`, the expensive part of the
         // content key — hash it once and append only the per-candidate
         // suffix. `eval_key` delegates to the same split, so the values are
-        // identical by construction.
-        let keys: Vec<u64> = {
-            let prefix = eval_key_prefix(&self.env.cluster, group);
-            candidates
-                .iter()
-                .map(|c| {
-                    eval_key_suffix(&prefix, c, self.base_seed, self.reps, self.env.noise_sigma)
-                })
-                .collect()
-        };
+        // identical by construction. The frontier-constant prefix doubles
+        // as the plan-cache key: same content in, same plan out.
+        let prefix = eval_key_prefix(&self.env.cluster, group);
+        let plan_key = prefix.finish();
+        let keys: Vec<u64> = candidates
+            .iter()
+            .map(|c| eval_key_suffix(&prefix, c, self.base_seed, self.reps, self.env.noise_sigma))
+            .collect();
 
         // Resolve what the memo cache already has, keeping the hit/miss
         // accounting identical to the serial path: each candidate performs
@@ -358,11 +470,14 @@ impl Evaluator for SimEvaluator {
         }
         self.sim_calls += miss.len() as u64;
 
-        // Score the distinct misses: the lockstep SoA frontier when the
-        // engine is deterministic, else the per-candidate fan-out. Every
-        // result is a pure function of its key (SoA is bitwise-identical to
-        // the scalar engine), so the route cannot change anything.
-        let evals = if soa {
+        // Score the distinct misses: the compiled plan when the engine is
+        // deterministic, the lockstep SoA frontier under `--no-plan`, else
+        // the per-candidate fan-out. Every result is a pure function of
+        // its key (plan and SoA are bitwise-identical to the scalar
+        // engine), so the route cannot change anything.
+        let evals = if plan {
+            self.run_plan(group, plan_key, candidates, &miss)
+        } else if soa {
             self.run_soa(group, candidates, &miss)
         } else {
             let env = &self.env;
@@ -400,6 +515,9 @@ impl Evaluator for SimEvaluator {
             sim_calls: self.sim_calls,
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
+            plan_compiles: self.plan_cache.compiles(),
+            plan_hits: self.plan_cache.hits(),
+            plan_evictions: self.plan_cache.evictions(),
             ..EvalStats::default()
         }
     }
@@ -487,16 +605,20 @@ mod tests {
             .collect();
         frontier.push(frontier[3].clone()); // in-batch duplicate
 
-        // Deterministic engine: SoA on (default) vs off, serial vs threaded.
-        let mut soa = SimEvaluator::deterministic(ClusterSpec::cluster_b(1));
+        // Deterministic engine: SoA on vs off, serial vs threaded (plan
+        // route disabled throughout — it would otherwise take priority).
+        let mut soa = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_plan(false);
         let a = soa.evaluate_batch(&g, &frontier);
-        let mut scalar = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_soa(false);
+        let mut scalar = SimEvaluator::deterministic(ClusterSpec::cluster_b(1))
+            .with_plan(false)
+            .with_soa(false);
         let b = scalar.evaluate_batch(&g, &frontier);
         assert_eq!(a, b, "lockstep SoA bitwise-matches the per-candidate path");
         assert_eq!(soa.stats(), scalar.stats(), "and so does the accounting");
         assert!(a.last().unwrap().cached, "duplicate still served from memo");
 
-        let mut threaded = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_jobs(8);
+        let mut threaded =
+            SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_plan(false).with_jobs(8);
         let c = threaded.evaluate_batch(&g, &frontier);
         assert_eq!(a, c, "sharded SoA identical to serial SoA");
         assert_eq!(soa.stats(), threaded.stats());
@@ -505,6 +627,57 @@ mod tests {
         let d = soa.evaluate_batch(&g, &frontier);
         assert!(d.iter().all(|e| e.cached));
         assert_eq!(soa.stats().sim_calls, frontier.len() as u64 - 1);
+    }
+
+    #[test]
+    fn plan_route_bitwise_matches_soa_and_scalar_paths() {
+        let g = group();
+        let mut frontier: Vec<Vec<CommConfig>> = (0u32..6)
+            .map(|s| vec![CommConfig { nc: 1 << s, ..CommConfig::default_ring() }])
+            .collect();
+        frontier.push(frontier[1].clone()); // in-batch duplicate
+
+        let mut plan = SimEvaluator::deterministic(ClusterSpec::cluster_b(1));
+        let a = plan.evaluate_batch(&g, &frontier);
+        let mut soa = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_plan(false);
+        let b = soa.evaluate_batch(&g, &frontier);
+        let mut scalar = SimEvaluator::deterministic(ClusterSpec::cluster_b(1))
+            .with_plan(false)
+            .with_soa(false);
+        let c = scalar.evaluate_batch(&g, &frontier);
+        assert_eq!(a, b, "plan route bitwise-matches the SoA route");
+        assert_eq!(a, c, "plan route bitwise-matches the per-candidate path");
+        // Everything but the route-visible plan counters is identical.
+        assert_eq!(plan.stats().route_invariant(), soa.stats().route_invariant());
+        assert_eq!(plan.stats().route_invariant(), scalar.stats().route_invariant());
+        assert_eq!(soa.stats(), soa.stats().route_invariant(), "non-plan route never compiles");
+        assert_eq!(plan.stats().plan_compiles, 1, "one plan per (group, cluster)");
+
+        // Same frontier again: all memo hits, so the plan cache is not
+        // even consulted — counters unchanged.
+        let d = plan.evaluate_batch(&g, &frontier);
+        assert!(d.iter().all(|e| e.cached));
+        assert_eq!(plan.stats().plan_compiles, 1);
+        assert_eq!(plan.stats().plan_hits, 0);
+
+        // A fresh frontier of the same group reuses the compiled plan.
+        let fresh: Vec<Vec<CommConfig>> = [3u32, 5, 7]
+            .iter()
+            .map(|&nc| vec![CommConfig { nc, ..CommConfig::default_ring() }])
+            .collect();
+        plan.evaluate_batch(&g, &fresh);
+        assert_eq!(plan.stats().plan_compiles, 1);
+        assert_eq!(plan.stats().plan_hits, 1, "second live frontier hits the plan cache");
+
+        // Sharded plan route identical to serial plan route, full stats
+        // included: the one `get_or_compile` per batch happens before any
+        // sharding.
+        let mut threaded = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_jobs(8);
+        let e = threaded.evaluate_batch(&g, &frontier);
+        assert_eq!(a, e, "sharded plan route identical to serial");
+        threaded.evaluate_batch(&g, &frontier);
+        threaded.evaluate_batch(&g, &fresh);
+        assert_eq!(plan.stats(), threaded.stats(), "full stats jobs-invariant on one route");
     }
 
     #[test]
@@ -543,11 +716,17 @@ mod tests {
         ];
         let mut batched = SimEvaluator::deterministic(ClusterSpec::cluster_b(1));
         let got = batched.evaluate_groups(&items);
-        let mut serial = SimEvaluator::deterministic(ClusterSpec::cluster_b(1)).with_soa(false);
+        let mut serial = SimEvaluator::deterministic(ClusterSpec::cluster_b(1))
+            .with_plan(false)
+            .with_soa(false);
         let want: Vec<Evaluation> =
             items.iter().map(|(g, c)| serial.evaluate(g, c)).collect();
         assert_eq!(got, want, "mixed-group frontier identical to one-by-one");
-        assert_eq!(batched.stats(), serial.stats());
+        assert_eq!(batched.stats().route_invariant(), serial.stats().route_invariant());
+        // One plan per distinct group: the g1 and g2 multi-candidate
+        // segments each compile once; singleton segments take the scalar
+        // path and never consult the plan cache.
+        assert_eq!(batched.stats().plan_compiles, 2);
     }
 
     #[test]

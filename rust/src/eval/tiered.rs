@@ -84,6 +84,17 @@ impl TieredEvaluator {
         self
     }
 
+    /// Enable/disable the simulated tier's compiled plan route (builder
+    /// style). Survivor promotion goes through
+    /// `SimEvaluator::evaluate_batch`, so this is where the plan fast path
+    /// lands for tiered runs — and where its cache amortizes across tuner
+    /// iterations. Purely a wall-time knob: results are identical, only
+    /// the plan-cache counters differ.
+    pub fn with_plan(mut self, plan: bool) -> TieredEvaluator {
+        self.sim = self.sim.with_plan(plan);
+        self
+    }
+
     /// Enable/disable the simulated tier's lockstep SoA frontier path
     /// (builder style). Survivor promotion goes through
     /// `SimEvaluator::evaluate_batch`, so this is where the SoA fast path
@@ -269,6 +280,9 @@ impl Evaluator for TieredEvaluator {
             cache_misses: sim.cache_misses,
             promoted: self.promoted,
             pruned: self.pruned,
+            plan_compiles: sim.plan_compiles,
+            plan_hits: sim.plan_hits,
+            plan_evictions: sim.plan_evictions,
         }
     }
 }

@@ -30,7 +30,7 @@ use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
 use lagom::util::units::fmt_secs;
 
 fn main() {
-    let args = match Args::from_env(&["help", "verbose", "no-soa"]) {
+    let args = match Args::from_env(&["help", "verbose", "no-plan", "no-soa"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -92,7 +92,10 @@ COMMON OPTIONS:
   --sigma S                         simulator measurement-noise sigma
                                     (tune/compare; default 0.015). 0 makes
                                     evaluation deterministic, which enables
-                                    the lockstep SoA frontier fast path
+                                    the compiled-plan / SoA fast paths
+  --no-plan                         disable the compiled-plan route (falls
+                                    back to the lockstep SoA frontier;
+                                    results identical, only slower)
   --no-soa                          disable the SoA frontier path (falls
                                     back to per-candidate evaluation;
                                     results identical, only slower)
@@ -139,7 +142,8 @@ fn fidelity_of(args: &Args) -> Result<EvalMode, String> {
         .ok_or_else(|| format!("unknown fidelity {name} (expected analytic|sim|tiered)"))
 }
 
-/// Shared `--jobs` / `--no-soa` / `--sigma` execution knobs (tune/compare).
+/// Shared `--jobs` / `--no-plan` / `--no-soa` / `--sigma` execution knobs
+/// (tune/compare).
 fn eval_opts_of(args: &Args) -> Result<EvalOpts, String> {
     let jobs = args.get_u64("jobs", 1)? as usize;
     let noise_sigma = match args.get("sigma") {
@@ -148,7 +152,12 @@ fn eval_opts_of(args: &Args) -> Result<EvalOpts, String> {
         }
         None => None,
     };
-    Ok(EvalOpts { jobs, soa: !args.flag("no-soa"), noise_sigma })
+    Ok(EvalOpts {
+        jobs,
+        plan: !args.flag("no-plan"),
+        soa: !args.flag("no-soa"),
+        noise_sigma,
+    })
 }
 
 fn run_or_exit<T>(r: Result<T, String>) -> T {
@@ -225,6 +234,12 @@ fn cmd_tune(args: &Args) -> i32 {
          {} promoted / {} pruned",
         s.evaluations, s.analytic_calls, s.sim_calls, s.cache_hits, s.promoted, s.pruned
     );
+    if args.flag("verbose") {
+        println!(
+            "plan cache: {} compiled, {} hits, {} evicted",
+            s.plan_compiles, s.plan_hits, s.plan_evictions
+        );
+    }
     println!("iteration time: {}", fmt_secs(iter));
     // Distinct configs chosen:
     let mut seen: Vec<(&CommConfig, usize)> = Vec::new();
@@ -309,6 +324,7 @@ fn cmd_campaign(args: &Args) -> i32 {
         seed,
         jobs,
         eval_jobs,
+        eval_plan: !args.flag("no-plan"),
         eval_soa: !args.flag("no-soa"),
         fidelity,
         ..CampaignConfig::default()

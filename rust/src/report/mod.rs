@@ -33,6 +33,13 @@ pub struct Comparison {
     pub workload: String,
     pub cluster: String,
     pub rows: Vec<StrategyRow>,
+    /// Plan-cache accounting summed across the strategies' evaluators
+    /// (compiled-plan route observability — zero when the route is off or
+    /// ineligible). Pure wall-time telemetry: never part of a cache key,
+    /// never compared across routes.
+    pub plan_compiles: u64,
+    pub plan_hits: u64,
+    pub plan_evictions: u64,
 }
 
 impl Comparison {
@@ -118,10 +125,10 @@ pub fn compare_strategies_with_jobs(
 }
 
 /// [`compare_strategies_with_opts`] with the full execution-knob set
-/// ([`EvalOpts`]): worker count, SoA frontier path, noise override. `jobs`
-/// and `soa` change wall time only; `noise_sigma` changes what the tuners
-/// measure (and so *is* a legitimate part of any result-cache key, unlike
-/// the other two).
+/// ([`EvalOpts`]): worker count, plan/SoA frontier routes, noise override.
+/// `jobs`, `plan` and `soa` change wall time only; `noise_sigma` changes
+/// what the tuners measure (and so *is* a legitimate part of any
+/// result-cache key, unlike the others).
 pub fn compare_strategies_with_eval(
     w: &Workload,
     cluster: &ClusterSpec,
@@ -141,9 +148,14 @@ pub fn compare_strategies_with_eval(
         vec![Box::new(NcclTuner::new(cluster.clone())), Box::new(autoccl), Box::new(lagom)];
 
     let mut rows = Vec::new();
+    let (mut plan_compiles, mut plan_hits, mut plan_evictions) = (0u64, 0u64, 0u64);
     for t in tuners.iter_mut() {
         let mut ev = make_evaluator_opts(fidelity, cluster, seed ^ 0xfeed, opts);
         let r = t.tune_schedule(&schedule, ev.as_mut());
+        let stats = ev.stats();
+        plan_compiles += stats.plan_compiles;
+        plan_hits += stats.plan_hits;
+        plan_evictions += stats.plan_evictions;
         let iter_time = evaluate(&schedule, &r.configs, cluster, micro, seed ^ 0xbeef);
         rows.push(StrategyRow {
             strategy: t.name(),
@@ -162,6 +174,9 @@ pub fn compare_strategies_with_eval(
         workload: w.label(),
         cluster: cluster.name.clone(),
         rows,
+        plan_compiles,
+        plan_hits,
+        plan_evictions,
     }
 }
 
@@ -299,11 +314,12 @@ mod tests {
     #[test]
     fn soa_changes_wall_time_only() {
         // At sigma=0 the tuners' frontiers take the lockstep SoA path; the
-        // rows must be bitwise-identical to the per-candidate path.
+        // rows must be bitwise-identical to the per-candidate path (plan
+        // route off on both sides, so SoA itself is what's compared).
         let cl = ClusterSpec::cluster_a(1);
         let w = small_workload();
         let space = ParamSpace::default();
-        let det = EvalOpts { jobs: 2, soa: true, noise_sigma: Some(0.0) };
+        let det = EvalOpts { jobs: 2, plan: false, soa: true, noise_sigma: Some(0.0) };
         let scalar = EvalOpts { soa: false, ..det };
         for fidelity in [EvalMode::Simulated, EvalMode::Tiered] {
             let a = compare_strategies_with_eval(&w, &cl, 7, &space, fidelity, det);
@@ -313,6 +329,36 @@ mod tests {
                 assert_eq!(x.configs, y.configs, "{fidelity:?}/{}", x.strategy);
                 assert_eq!(x.sim_calls, y.sim_calls, "{fidelity:?}/{}", x.strategy);
             }
+        }
+    }
+
+    #[test]
+    fn plan_changes_wall_time_only() {
+        // At sigma=0 the tuners' frontiers take the compiled-plan route by
+        // default; every reported number must be bitwise-identical to the
+        // SoA route under --no-plan. Only the plan-cache telemetry itself
+        // may differ (and must be live on exactly the plan side).
+        let cl = ClusterSpec::cluster_a(1);
+        let w = small_workload();
+        let space = ParamSpace::default();
+        let planned = EvalOpts { jobs: 2, noise_sigma: Some(0.0), ..EvalOpts::default() };
+        let unplanned = EvalOpts { plan: false, ..planned };
+        for fidelity in [EvalMode::Simulated, EvalMode::Tiered] {
+            let a = compare_strategies_with_eval(&w, &cl, 7, &space, fidelity, planned);
+            let b = compare_strategies_with_eval(&w, &cl, 7, &space, fidelity, unplanned);
+            for (x, y) in a.rows.iter().zip(&b.rows) {
+                assert_eq!(x.iter_time, y.iter_time, "{fidelity:?}/{}", x.strategy);
+                assert_eq!(x.configs, y.configs, "{fidelity:?}/{}", x.strategy);
+                assert_eq!(x.sim_calls, y.sim_calls, "{fidelity:?}/{}", x.strategy);
+                assert_eq!(
+                    x.tuning_iterations, y.tuning_iterations,
+                    "{fidelity:?}/{}",
+                    x.strategy
+                );
+            }
+            assert!(a.plan_compiles > 0, "{fidelity:?}: plan route exercised");
+            assert_eq!(b.plan_compiles, 0, "{fidelity:?}: --no-plan never compiles");
+            assert_eq!((b.plan_hits, b.plan_evictions), (0, 0));
         }
     }
 

@@ -18,13 +18,18 @@
 //! allocating — see [`engine`] for the invariants. Whole candidate
 //! frontiers of one group advance in lockstep through the
 //! structure-of-arrays path ([`batch::FrontierBatch`]), bitwise-identical
-//! to per-candidate runs.
+//! to per-candidate runs. One level above that, the [`plan`] compiler
+//! builds a per-`(group, cluster)` [`plan::GroupPlan`] once and turns
+//! candidate scoring into a walk of precompiled regime tables — cached
+//! across frontiers, still bitwise-identical.
 
 pub mod batch;
 pub mod engine;
+pub mod plan;
 pub mod trace;
 
 pub use batch::FrontierBatch;
+pub use plan::{GroupPlan, PlanCache, PlanScratch};
 pub use engine::{
     simulate_group, simulate_group_cost, simulate_group_reference, simulate_group_summary,
     simulate_schedule, simulate_schedule_cost, GroupResult, GroupSummary, IterResult, SimEnv,

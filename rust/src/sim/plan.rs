@@ -1,0 +1,816 @@
+//! Compile-once-per-group candidate evaluation: regime-table plans.
+//!
+//! The lockstep SoA batch ([`super::batch::FrontierBatch`]) already hoists
+//! every comp-derived constant once *per frontier*. But a tuner evaluates
+//! the same overlap group frontier after frontier (AutoCCL ladder sweeps,
+//! the Lagom priority search, campaign re-runs), and the candidates of all
+//! those frontiers differ only in their [`CommConfig`]s — the comp ops,
+//! and therefore everything derived from them, never change. A
+//! [`GroupPlan`] moves the hoisting one level up: **compile once per
+//! `(group, cluster)`, run thousands of times**.
+//!
+//! What can be precomputed hinges on one observation: the comp-derived
+//! quantities ([`CompContext`], wave capacity, wave durations, the
+//! comm-free closed-form jump of [`run_waves_det`]) depend on the comm
+//! stream only through its discrete SM-resource regime
+//! ([`crate::comm::comm_resources`]). Of those regimes, exactly one is
+//! candidate-independent: the **drained** regime (`res = None`), which
+//! every candidate enters once its comm stream finishes and never leaves.
+//! The plan therefore stores the full drained-regime timeline skeleton —
+//! one [`DrainedStep`] per comp, deduplicated by comp class (a
+//! 384-layer pipeline of identical matmuls compiles one class, not 384) —
+//! and executes a candidate in two phases:
+//!
+//! * **Phase A (live stream, candidate-major):** while the candidate's
+//!   comm stream is live, comps run through the engine's own
+//!   [`run_waves_det`] loop, exactly as the SoA batch does. On the deep
+//!   frontiers the searches produce, this is a couple of comps per
+//!   candidate: the stream drains early and never comes back.
+//! * **Phase B (drained suffix, comp-major):** every remaining comp is a
+//!   table walk — `launch + jump + tail` per candidate, with the adds
+//!   executed by three shape-specialized, branch-free loops over packed
+//!   lane arrays. No per-cell head checks, no `Option` tests, no
+//!   re-derivation: just dense float adds the compiler can vectorize.
+//!
+//! The contract carried over from the wave-compression and SoA work:
+//! results are **bitwise-identical** to the per-wave reference and the
+//! scalar engine, because every candidate still executes the identical
+//! sequence of float operations — the plan only reorders work across
+//! independent candidates and reuses values computed from identical
+//! operands (IEEE 754 ops are deterministic functions of their inputs).
+//! Absent terms are *skipped*, never added as `0.0`. Property-tested in
+//! `rust/tests/proptests.rs` and re-checked against the scalar engine
+//! under `debug_assertions`.
+//!
+//! Plans are cached across frontiers in a fingerprint-keyed [`PlanCache`]
+//! inside [`crate::eval::SimEvaluator`]; like the SoA route and `--jobs`,
+//! the plan route is a pure wall-time knob — it can never change a
+//! number, only how fast the number arrives. Only the deterministic
+//! (`sigma == 0`) engine is plannable: the noisy engine draws per-wave
+//! noise, so no per-comp quantity is a constant.
+
+use super::engine::{run_waves_det, wave_capacity, CommOpState, CommStream, GroupSummary};
+use crate::comm::{comm_resources, comm_time, CommConfig};
+use crate::contention::model::{wave_time, CompContext};
+use crate::graph::OverlapGroup;
+use crate::hw::{ClusterSpec, GpuSpec};
+use crate::util::Fingerprint;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which of the drained-regime closed-form terms a comp carries. The
+/// engine's free path adds the full-wave jump only when `full > 0` and the
+/// partial-wave tail only when a partial wave exists — adding a `0.0` for
+/// an absent term would be a *different* float expression, so the shape is
+/// compiled in and the run loop is specialized per shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StepShape {
+    /// `full > 0` whole waves plus a partial wave (`rem > 0`).
+    JumpTail,
+    /// Whole waves only (`rem == 0`).
+    JumpOnly,
+    /// A single partial wave (`full == 0`).
+    TailOnly,
+}
+
+/// One comp's drained-regime effect: the exact float constants
+/// [`run_waves_det`] would produce with a drained comm stream.
+#[derive(Debug, Clone, Copy)]
+struct DrainedStep {
+    shape: StepShape,
+    /// `full as f64 * wave_time(ctx, capacity, gpu, None)` — the
+    /// closed-form jump over the run of full waves.
+    jump: f64,
+    /// `wave_time(ctx, rem_or_tbs, gpu, None)` — the final partial wave.
+    tail: f64,
+}
+
+impl DrainedStep {
+    /// Mirror of the free-lane constants in [`super::batch::FrontierBatch`]
+    /// (and of `run_waves_det` with `comm.done()`): same expressions, same
+    /// operand values, hence bitwise-equal results.
+    fn for_comp(ctx: &CompContext, tbs: u64, gpu: &GpuSpec) -> DrainedStep {
+        let capacity = wave_capacity(ctx, gpu, None);
+        let full = tbs / capacity;
+        let rem = tbs - full * capacity;
+        if full == 0 {
+            DrainedStep { shape: StepShape::TailOnly, jump: 0.0, tail: wave_time(ctx, tbs, gpu, None) }
+        } else if rem > 0 {
+            DrainedStep {
+                shape: StepShape::JumpTail,
+                jump: full as f64 * wave_time(ctx, capacity, gpu, None),
+                tail: wave_time(ctx, rem, gpu, None),
+            }
+        } else {
+            DrainedStep {
+                shape: StepShape::JumpOnly,
+                jump: full as f64 * wave_time(ctx, capacity, gpu, None),
+                tail: 0.0,
+            }
+        }
+    }
+}
+
+/// One comp op's precompiled per-candidate-independent state.
+#[derive(Debug, Clone, Copy)]
+struct PlanComp {
+    ctx: CompContext,
+    /// `comp.threadblocks.max(1)` — hoisted so the run loop never touches
+    /// the group's comp descriptors.
+    tbs: u64,
+}
+
+/// A compiled evaluation plan for one `(OverlapGroup, ClusterSpec)` pair:
+/// the per-comp engine contexts for the live-stream phase and the full
+/// drained-regime timeline skeleton for the table-walk phase. Build with
+/// [`GroupPlan::compile`], execute frontiers with [`GroupPlan::run`],
+/// share across frontiers/threads through a [`PlanCache`].
+#[derive(Debug)]
+pub struct GroupPlan {
+    /// `gpu.launch_overhead` (noise factor is 1 at `sigma == 0`, and
+    /// `x * 1.0 == x` bitwise).
+    launch: f64,
+    num_comms: usize,
+    comps: Vec<PlanComp>,
+    /// Index-aligned with `comps`: comp `c`'s drained-regime step.
+    drained: Vec<DrainedStep>,
+    /// Distinct comp classes the compile deduplicated the drained table
+    /// over (identically-shaped comps share one `wave_time` derivation).
+    num_classes: usize,
+}
+
+impl GroupPlan {
+    /// Compile the plan: per comp, the engine context plus the
+    /// drained-regime closed form, deduplicated by comp class — two comps
+    /// with identical cost-affecting fields (the repeated layers of a deep
+    /// pipeline) share one derivation. [`CompContext`] carries no
+    /// `PartialEq`, so classes are keyed by fingerprinting its fields.
+    pub fn compile(group: &OverlapGroup, cluster: &ClusterSpec) -> GroupPlan {
+        let gpu = cluster.gpu();
+        let mut classes: HashMap<u64, DrainedStep> = HashMap::new();
+        let mut comps = Vec::with_capacity(group.comps.len());
+        let mut drained = Vec::with_capacity(group.comps.len());
+        for comp in &group.comps {
+            let ctx = CompContext::new(comp, gpu);
+            let tbs = comp.threadblocks.max(1);
+            let mut fp = Fingerprint::new();
+            fp.push_u64(ctx.tb_per_sm as u64);
+            fp.push_f64(ctx.flops_per_tb);
+            fp.push_f64(ctx.bytes_per_tb);
+            fp.push_f64(ctx.flop_rate);
+            fp.push_f64(ctx.block_time);
+            fp.push_u64(tbs);
+            let step =
+                *classes.entry(fp.finish()).or_insert_with(|| DrainedStep::for_comp(&ctx, tbs, gpu));
+            comps.push(PlanComp { ctx, tbs });
+            drained.push(step);
+        }
+        GroupPlan {
+            launch: gpu.launch_overhead,
+            num_comms: group.comms.len(),
+            comps,
+            drained,
+            num_classes: classes.len(),
+        }
+    }
+
+    /// Comm ops per candidate this plan was compiled for.
+    pub fn num_comms(&self) -> usize {
+        self.num_comms
+    }
+
+    pub fn num_comps(&self) -> usize {
+        self.comps.len()
+    }
+
+    /// Distinct comp classes the drained table was deduplicated over.
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Run every candidate of `candidates` (one config slice per comm op
+    /// of `group`) through the plan. Results are bitwise-identical to
+    /// per-candidate [`super::simulate_group_summary`] runs at
+    /// `sigma == 0`, and land in `scratch` exactly like a
+    /// [`super::batch::FrontierBatch`] run.
+    pub fn run(
+        &self,
+        group: &OverlapGroup,
+        candidates: &[&[CommConfig]],
+        cluster: &ClusterSpec,
+        scratch: &mut PlanScratch,
+    ) {
+        let n = candidates.len();
+        let nc = self.num_comms;
+        assert_eq!(group.comms.len(), nc, "plan compiled for a different group");
+        let gpu = cluster.gpu();
+        let topo = &cluster.topology;
+        let ncomps = self.comps.len();
+        {
+            let PlanScratch {
+                num_comms,
+                ops,
+                head,
+                t,
+                comp_total,
+                drain_at,
+                order,
+                lane_idx,
+                lane_t,
+                lane_total,
+                summaries,
+            } = &mut *scratch;
+            *num_comms = nc;
+
+            // Comm-op setup: identical to the scalar engine at sigma == 0
+            // (`remaining` is the bare `comm_time`, since `w * 1.0 == w`).
+            ops.clear();
+            ops.reserve(n * nc);
+            for configs in candidates {
+                assert_eq!(configs.len(), nc, "one config per communication op required");
+                for (op, cfg) in group.comms.iter().zip(*configs) {
+                    let w = comm_time(op, cfg, topo, gpu);
+                    ops.push(CommOpState {
+                        remaining: w,
+                        res: comm_resources(op, cfg, topo, gpu, w),
+                        span: (0.0, 0.0),
+                    });
+                }
+            }
+            head.clear();
+            head.resize(n, 0);
+            t.clear();
+            t.resize(n, 0.0);
+            comp_total.clear();
+            comp_total.resize(n, 0.0);
+            drain_at.clear();
+            drain_at.resize(n, 0);
+
+            // Phase A: candidate-major walk while the comm stream is live.
+            // Each comp runs through the engine's own wave loop (which
+            // re-derives per-head-regime state exactly as the scalar path
+            // does); the phase ends at the first comp that *starts* with a
+            // drained stream — from there the drained table takes over.
+            for i in 0..n {
+                let mut comm = CommStream { ops: &mut ops[i * nc..(i + 1) * nc], head: 0 };
+                let mut ti = 0.0_f64;
+                let mut total = 0.0_f64;
+                let mut c = 0;
+                while c < ncomps && !comm.done() {
+                    let pc = &self.comps[c];
+                    let start = ti;
+                    comm.advance(start, self.launch, 1.0);
+                    ti = run_waves_det(&mut comm, &pc.ctx, pc.tbs, gpu, start + self.launch, true);
+                    total += ti - start;
+                    c += 1;
+                }
+                head[i] = comm.head;
+                t[i] = ti;
+                comp_total[i] = total;
+                drain_at[i] = c;
+            }
+
+            // Phase B: comp-major walk of the drained suffix. Candidates
+            // enter a packed lane when the comp index reaches their drain
+            // point (the stable sort keeps lanes in candidate order per
+            // drain point; candidates that never drain sort last and never
+            // enter). Each comp is then one branch-free pass over the
+            // lanes, specialized per step shape so absent terms are
+            // skipped, not added as 0.0 — the same adds, in the same
+            // order, as the engine's free path per candidate.
+            order.clear();
+            order.extend(0..n);
+            order.sort_by_key(|&i| drain_at[i]);
+            lane_idx.clear();
+            lane_t.clear();
+            lane_total.clear();
+            let mut cursor = 0;
+            for c in 0..ncomps {
+                while cursor < n && drain_at[order[cursor]] == c {
+                    let i = order[cursor];
+                    lane_idx.push(i);
+                    lane_t.push(t[i]);
+                    lane_total.push(comp_total[i]);
+                    cursor += 1;
+                }
+                if lane_idx.is_empty() {
+                    continue;
+                }
+                let step = self.drained[c];
+                let launch = self.launch;
+                match step.shape {
+                    StepShape::JumpTail => {
+                        let (jump, tail) = (step.jump, step.tail);
+                        for (x, total) in lane_t.iter_mut().zip(lane_total.iter_mut()) {
+                            let start = *x;
+                            let mut v = start + launch;
+                            v += jump;
+                            v += tail;
+                            *total += v - start;
+                            *x = v;
+                        }
+                    }
+                    StepShape::JumpOnly => {
+                        let jump = step.jump;
+                        for (x, total) in lane_t.iter_mut().zip(lane_total.iter_mut()) {
+                            let start = *x;
+                            let mut v = start + launch;
+                            v += jump;
+                            *total += v - start;
+                            *x = v;
+                        }
+                    }
+                    StepShape::TailOnly => {
+                        let tail = step.tail;
+                        for (x, total) in lane_t.iter_mut().zip(lane_total.iter_mut()) {
+                            let start = *x;
+                            let mut v = start + launch;
+                            v += tail;
+                            *total += v - start;
+                            *x = v;
+                        }
+                    }
+                }
+            }
+            for (k, &i) in lane_idx.iter().enumerate() {
+                t[i] = lane_t[k];
+                comp_total[i] = lane_total[k];
+            }
+
+            // Per-candidate finalization: drain the comm tail, stamp the
+            // summary — the same epilogue as the scalar engine, per stripe.
+            summaries.clear();
+            summaries.reserve(n);
+            for i in 0..n {
+                let mut comm =
+                    CommStream { ops: &mut ops[i * nc..(i + 1) * nc], head: head[i] };
+                let comm_end = comm.drain(t[i]);
+                head[i] = comm.head;
+                let makespan = t[i].max(comm_end);
+                let comm_total: f64 =
+                    ops[i * nc..(i + 1) * nc].iter().map(|o| o.span.1 - o.span.0).sum();
+                summaries.push(GroupSummary { makespan, comp_total: comp_total[i], comm_total });
+            }
+        }
+
+        // Checked builds replay every candidate through the scalar engine
+        // and demand bitwise equality — the plan-route half of the
+        // contract, mirroring the SoA batch's replay.
+        #[cfg(debug_assertions)]
+        self.assert_matches_scalar_engine(group, candidates, cluster, scratch);
+    }
+
+    /// Debug-build cross-check: plan results must be bitwise-equal to
+    /// per-candidate scalar engine runs (summary *and* per-comm spans).
+    #[cfg(debug_assertions)]
+    fn assert_matches_scalar_engine(
+        &self,
+        group: &OverlapGroup,
+        candidates: &[&[CommConfig]],
+        cluster: &ClusterSpec,
+        scratch: &PlanScratch,
+    ) {
+        let mut env = super::SimEnv::deterministic(cluster.clone());
+        let mut engine_scratch = super::SimScratch::new();
+        for (i, configs) in candidates.iter().enumerate() {
+            let s = super::simulate_group_summary(group, configs, &mut env, &mut engine_scratch);
+            debug_assert_eq!(
+                s,
+                scratch.summaries()[i],
+                "plan route diverged from the scalar engine on candidate {i}"
+            );
+            debug_assert!(
+                engine_scratch.comm_times().eq(scratch.comm_times(i)),
+                "plan per-comm durations diverged on candidate {i}"
+            );
+        }
+    }
+}
+
+/// Reusable per-worker state for [`GroupPlan::run`]: the per-candidate
+/// arrays of the SoA layout plus the Phase B lane buffers. Buffers persist
+/// across runs, so a tuner evaluating frontier after frontier allocates
+/// only on the first (or a larger) batch.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    /// Comm ops per candidate of the last run.
+    num_comms: usize,
+    /// Flat comm-op state, candidate-major (`ops[i * num_comms + j]`).
+    ops: Vec<CommOpState>,
+    head: Vec<usize>,
+    t: Vec<f64>,
+    comp_total: Vec<f64>,
+    /// First comp index each candidate starts with a drained comm stream
+    /// (`== num_comps` when the stream outlives the compute stream).
+    drain_at: Vec<usize>,
+    /// Candidate indices sorted by `drain_at` (Phase B admission order).
+    order: Vec<usize>,
+    /// Packed drained-lane candidate indices / clocks / comp totals.
+    lane_idx: Vec<usize>,
+    lane_t: Vec<f64>,
+    lane_total: Vec<f64>,
+    summaries: Vec<GroupSummary>,
+}
+
+impl PlanScratch {
+    pub fn new() -> PlanScratch {
+        PlanScratch::default()
+    }
+
+    /// Candidates of the last run.
+    pub fn len(&self) -> usize {
+        self.summaries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.summaries.is_empty()
+    }
+
+    /// Scalar outcomes of the last run, in candidate order.
+    pub fn summaries(&self) -> &[GroupSummary] {
+        &self.summaries
+    }
+
+    /// Per-comm wall durations of candidate `i` from the last run, in op
+    /// order (the plan analogue of [`super::SimScratch::comm_times`]).
+    pub fn comm_times(&self, i: usize) -> impl Iterator<Item = f64> + '_ {
+        let nc = self.num_comms;
+        self.ops[i * nc..(i + 1) * nc].iter().map(|o| o.span.1 - o.span.0)
+    }
+}
+
+#[derive(Debug, Default)]
+struct PlanMap {
+    map: HashMap<u64, Arc<GroupPlan>>,
+    /// Insertion order for FIFO eviction — deterministic at any thread
+    /// count, unlike recency-based policies whose order would depend on
+    /// which worker touched a plan last.
+    fifo: VecDeque<u64>,
+}
+
+/// Fingerprint-keyed cache of compiled [`GroupPlan`]s, shared across
+/// frontiers, tuner iterations and `evaluate_groups` segments. Keys are
+/// the frontier-constant `(cluster, group)` content fingerprint
+/// ([`crate::eval::cache::eval_key_prefix`]), computed by the caller —
+/// the cache itself is content-agnostic.
+///
+/// **Accounting audit** (mirroring [`crate::eval::ShardedEvalCache`]'s):
+/// `lookups`/`hits`/`compiles`/`evictions` are relaxed atomics — pure
+/// monotonic statistics; every `Arc<GroupPlan>` is published through the
+/// `Mutex`, never through a counter, and exact reads happen after worker
+/// joins (happens-before). A miss compiles *under the lock*, so two
+/// workers racing on one key can never compile twice — which is what
+/// keeps compile counts thread-count-invariant. At any quiescent point
+/// `hits() + misses() == lookups()`, with `misses() == compiles()` by
+/// construction.
+#[derive(Debug)]
+pub struct PlanCache {
+    plans: Mutex<PlanMap>,
+    capacity: usize,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    compiles: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    /// Default capacity: comfortably above the distinct groups of a full
+    /// campaign scenario, small enough that plans can never hold a
+    /// meaningful fraction of memory.
+    pub fn new() -> PlanCache {
+        Self::with_capacity(256)
+    }
+
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        PlanCache {
+            plans: Mutex::new(PlanMap::default()),
+            capacity: capacity.max(1),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            compiles: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Return the plan for `key`, compiling (and caching) it on a miss.
+    /// `&self`: safe from any worker thread, though the evaluator calls it
+    /// once per batch from the serial phase precisely so the counters stay
+    /// `jobs`-invariant.
+    pub fn get_or_compile(
+        &self,
+        key: u64,
+        group: &OverlapGroup,
+        cluster: &ClusterSpec,
+    ) -> Arc<GroupPlan> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.plans.lock().unwrap();
+        if let Some(plan) = inner.map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(plan);
+        }
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        while inner.map.len() >= self.capacity {
+            let old = inner.fifo.pop_front().expect("fifo tracks every entry");
+            inner.map.remove(&old);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        let plan = Arc::new(GroupPlan::compile(group, cluster));
+        inner.map.insert(key, Arc::clone(&plan));
+        inner.fifo.push_back(key);
+        plan
+    }
+
+    /// Compiled plans currently cached.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Plans compiled (== cache misses: every miss compiles exactly once).
+    pub fn compiles(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Alias of [`PlanCache::compiles`], so the
+    /// `hits + misses == lookups` invariant reads the same as on
+    /// [`crate::eval::ShardedEvalCache`].
+    pub fn misses(&self) -> u64 {
+        self.compiles()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::CompOpDesc;
+    use crate::sim::{simulate_group_reference, simulate_group_summary, SimEnv, SimScratch};
+    use crate::util::units::{KIB, MIB};
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::cluster_b(1)
+    }
+
+    fn cfg(nc: u32, chunk: u64) -> CommConfig {
+        CommConfig { nc, nt: 128, chunk, ..CommConfig::default_ring() }
+    }
+
+    fn frontier(nc_list: &[u32]) -> Vec<Vec<CommConfig>> {
+        nc_list.iter().map(|&nc| vec![cfg(nc, 2 * MIB)]).collect()
+    }
+
+    /// Comp-bound, comm-bound, multi-comm, comm-free and comp-free
+    /// fixtures — the same coverage as the SoA batch tests plus the
+    /// comp-free edge (everything happens in the epilogue drain).
+    fn groups() -> Vec<OverlapGroup> {
+        let comp_bound = OverlapGroup::with(
+            "comp_bound",
+            vec![
+                CompOpDesc::ffn("ffn0", 2048, 2560, 10240, 2),
+                CompOpDesc::ffn("ffn1", 2048, 2560, 10240, 2),
+            ],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        let comm_bound = OverlapGroup::with(
+            "comm_bound",
+            vec![CompOpDesc::matmul("mm", 1024, 1024, 1024, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 256 * MIB, 8)],
+        );
+        let mut multi = comp_bound.clone();
+        multi.comms.push(CommOpDesc::new("ar2", CollectiveKind::AllReduce, MIB, 8));
+        let comm_free = OverlapGroup::with(
+            "comm_free",
+            vec![CompOpDesc::matmul("mm", 4096, 4096, 1024, 2)],
+            vec![],
+        );
+        let comp_free = OverlapGroup::with(
+            "comp_free",
+            vec![],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 8 * MIB, 8)],
+        );
+        vec![comp_bound, comm_bound, multi, comm_free, comp_free]
+    }
+
+    /// A deep pipeline of identical layers — the class-dedup case.
+    fn deep_group(layers: usize) -> OverlapGroup {
+        OverlapGroup::with(
+            "deep",
+            (0..layers)
+                .map(|l| CompOpDesc::ffn(format!("ffn{l}"), 2048, 2560, 10240, 2))
+                .collect(),
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 8 * MIB, 8)],
+        )
+    }
+
+    #[test]
+    fn plan_matches_scalar_summary_bitwise() {
+        let cl = cluster();
+        for group in groups() {
+            let cands: Vec<Vec<CommConfig>> = [1u32, 2, 4, 8, 16, 32]
+                .iter()
+                .map(|&nc| {
+                    (0..group.comms.len())
+                        .map(|j| cfg(nc, (64 << j) * KIB))
+                        .collect()
+                })
+                .collect();
+            let views: Vec<&[CommConfig]> = cands.iter().map(|c| c.as_slice()).collect();
+            let plan = GroupPlan::compile(&group, &cl);
+            let mut scratch = PlanScratch::new();
+            plan.run(&group, &views, &cl, &mut scratch);
+            assert_eq!(scratch.len(), cands.len());
+            let mut env = SimEnv::deterministic(cl.clone());
+            let mut engine_scratch = SimScratch::new();
+            for (i, cand) in cands.iter().enumerate() {
+                let s = simulate_group_summary(&group, cand, &mut env, &mut engine_scratch);
+                assert_eq!(s, scratch.summaries()[i], "{}: candidate {i}", group.name);
+                let times: Vec<f64> = engine_scratch.comm_times().collect();
+                let plan_times: Vec<f64> = scratch.comm_times(i).collect();
+                assert_eq!(times, plan_times, "{}: comm_times {i}", group.name);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_matches_per_wave_reference_bitwise() {
+        let cl = cluster();
+        let group = groups().remove(0);
+        let cands = frontier(&[1, 2, 4, 8, 16, 32]);
+        let views: Vec<&[CommConfig]> = cands.iter().map(|c| c.as_slice()).collect();
+        let plan = GroupPlan::compile(&group, &cl);
+        let mut scratch = PlanScratch::new();
+        plan.run(&group, &views, &cl, &mut scratch);
+        for (i, cand) in cands.iter().enumerate() {
+            let r = simulate_group_reference(&group, cand, &mut SimEnv::deterministic(cl.clone()));
+            let s = scratch.summaries()[i];
+            assert_eq!(s.makespan, r.makespan, "candidate {i}");
+            assert_eq!(s.comp_total, r.comp_total(), "candidate {i}");
+            assert_eq!(s.comm_total, r.comm_total(), "candidate {i}");
+        }
+    }
+
+    #[test]
+    fn deep_pipeline_dedups_comp_classes_and_stays_exact() {
+        let cl = cluster();
+        let group = deep_group(48);
+        let plan = GroupPlan::compile(&group, &cl);
+        assert_eq!(plan.num_comps(), 48);
+        assert_eq!(plan.num_classes(), 1, "identical layers share one drained class");
+
+        let cands = frontier(&[1, 2, 4, 8, 16, 32, 48, 64]);
+        let views: Vec<&[CommConfig]> = cands.iter().map(|c| c.as_slice()).collect();
+        let mut scratch = PlanScratch::new();
+        plan.run(&group, &views, &cl, &mut scratch);
+        let mut env = SimEnv::deterministic(cl.clone());
+        let mut engine_scratch = SimScratch::new();
+        for (i, cand) in cands.iter().enumerate() {
+            let s = simulate_group_summary(&group, cand, &mut env, &mut engine_scratch);
+            assert_eq!(s, scratch.summaries()[i], "candidate {i}");
+        }
+    }
+
+    #[test]
+    fn buffers_are_reusable_across_runs() {
+        let cl = cluster();
+        let gs = groups();
+        let mut scratch = PlanScratch::new();
+        // Run a wide frontier, then a narrow one on a different group:
+        // stale state from the first run must not leak into the second.
+        let wide = frontier(&[1, 2, 4, 8, 16, 32, 48, 64]);
+        let views: Vec<&[CommConfig]> = wide.iter().map(|c| c.as_slice()).collect();
+        GroupPlan::compile(&gs[0], &cl).run(&gs[0], &views, &cl, &mut scratch);
+        assert_eq!(scratch.len(), 8);
+
+        let narrow = frontier(&[2, 8]);
+        let views: Vec<&[CommConfig]> = narrow.iter().map(|c| c.as_slice()).collect();
+        GroupPlan::compile(&gs[1], &cl).run(&gs[1], &views, &cl, &mut scratch);
+        assert_eq!(scratch.len(), 2);
+        let mut env = SimEnv::deterministic(cl.clone());
+        let mut engine_scratch = SimScratch::new();
+        for (i, cand) in narrow.iter().enumerate() {
+            let s = simulate_group_summary(&gs[1], cand, &mut env, &mut engine_scratch);
+            assert_eq!(s, scratch.summaries()[i]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one config per communication op")]
+    fn config_arity_mismatch_panics() {
+        let cl = cluster();
+        let group = groups().remove(0);
+        let bad: Vec<CommConfig> = vec![];
+        let plan = GroupPlan::compile(&group, &cl);
+        plan.run(&group, &[bad.as_slice()], &cl, &mut PlanScratch::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "plan compiled for a different group")]
+    fn group_mismatch_panics() {
+        let cl = cluster();
+        let gs = groups();
+        let plan = GroupPlan::compile(&gs[0], &cl); // 1 comm
+        let cands = frontier(&[2]);
+        let views: Vec<&[CommConfig]> = cands.iter().map(|c| c.as_slice()).collect();
+        plan.run(&gs[3], &views, &cl, &mut PlanScratch::new()); // comm-free
+    }
+
+    #[test]
+    fn cache_compiles_once_then_hits_and_evicts_fifo() {
+        let cl = cluster();
+        let gs = groups();
+        let cache = PlanCache::with_capacity(2);
+        let a = cache.get_or_compile(1, &gs[0], &cl);
+        let b = cache.get_or_compile(1, &gs[0], &cl);
+        assert!(Arc::ptr_eq(&a, &b), "hit returns the same compiled plan");
+        assert_eq!((cache.compiles(), cache.hits(), cache.lookups()), (1, 1, 2));
+        assert_eq!(cache.misses(), cache.compiles());
+
+        cache.get_or_compile(2, &gs[1], &cl);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 0);
+        // Third key evicts the oldest (key 1), FIFO.
+        cache.get_or_compile(3, &gs[2], &cl);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        // Key 1 is gone (recompiles), key 3 still present (hits).
+        cache.get_or_compile(3, &gs[2], &cl);
+        let before = cache.compiles();
+        cache.get_or_compile(1, &gs[0], &cl);
+        assert_eq!(cache.compiles(), before + 1, "evicted key recompiles");
+        assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+    }
+
+    #[test]
+    fn hit_miss_lookup_invariant_under_concurrent_workers() {
+        // The relaxed-atomics audit in the type docs: after the scope
+        // joins (happens-before for all worker fetch_adds), the counters
+        // must balance exactly — and because misses compile under the
+        // lock, racing workers on one key can never double-compile.
+        let cl = cluster();
+        let group = deep_group(4);
+        let cache = PlanCache::with_capacity(10_000);
+        std::thread::scope(|scope| {
+            for w in 0..8u64 {
+                let cache = &cache;
+                let cl = &cl;
+                let group = &group;
+                scope.spawn(move || {
+                    for i in 0..50u64 {
+                        let key = w * 10_000 + i;
+                        cache.get_or_compile(key, group, cl); // compile
+                        cache.get_or_compile(key, group, cl); // hit
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.lookups(), 8 * 50 * 2);
+        assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+        assert_eq!(cache.compiles(), 8 * 50);
+        assert_eq!(cache.evictions(), 0);
+        assert_eq!(cache.len(), 8 * 50);
+    }
+
+    #[test]
+    fn shared_key_across_workers_compiles_exactly_once() {
+        let cl = cluster();
+        let group = deep_group(4);
+        let cache = PlanCache::new();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let cache = &cache;
+                let cl = &cl;
+                let group = &group;
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        cache.get_or_compile(42, group, cl);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.compiles(), 1, "compile-under-lock: one compile per key");
+        assert_eq!(cache.hits(), 8 * 20 - 1);
+        assert_eq!(cache.hits() + cache.misses(), cache.lookups());
+    }
+}

@@ -274,11 +274,61 @@ fn mixed_group_frontiers_fall_back_with_identical_results() {
     ];
     let mut mixed = SimEvaluator::deterministic(cluster.clone()).with_jobs(8);
     let got = mixed.evaluate_groups(&items);
-    let mut reference = SimEvaluator::deterministic(cluster.clone()).with_soa(false);
+    let mut reference =
+        SimEvaluator::deterministic(cluster.clone()).with_plan(false).with_soa(false);
     let want: Vec<_> = items.iter().map(|(g, c)| reference.evaluate(g, c)).collect();
     assert_eq!(got, want, "heterogeneous frontier == one-by-one evaluation");
+    // Singleton segments never engage the plan or SoA routes, so even the
+    // full stats (plan counters included: all zero) must coincide.
     assert_eq!(mixed.stats(), reference.stats(), "accounting identical too");
     assert_eq!(mixed.stats().sim_calls, items.len() as u64, "no SoA batch formed");
+    assert_eq!(mixed.stats().plan_compiles, 0, "singletons never compile a plan");
+}
+
+#[test]
+fn mixed_group_plan_route_is_jobs_invariant_with_one_cache() {
+    // PR 7 satellite: `evaluate_groups` splits a mixed-group frontier into
+    // homogeneous segments, and the segments share the evaluator's single
+    // PlanCache — each distinct group compiles once, a revisited group
+    // hits, sim calls are counted exactly once per candidate, and none of
+    // it depends on the worker count (results AND full stats identical at
+    // jobs=1 vs jobs=8 through the plan route).
+    let cluster = ClusterSpec::cluster_b(1);
+    let g1 = comp_bound_group();
+    let g2 = comm_bound_group();
+    let cfg = |nc: u32| vec![CommConfig { nc, ..CommConfig::default_ring() }];
+    // Multi-candidate segments: g1 ×3, g2 ×2, then g1 ×2 again — the
+    // second g1 segment must *hit* the plan compiled for the first.
+    let items: Vec<(&OverlapGroup, Vec<CommConfig>)> = vec![
+        (&g1, cfg(1)),
+        (&g1, cfg(2)),
+        (&g1, cfg(4)),
+        (&g2, cfg(1)),
+        (&g2, cfg(2)),
+        (&g1, cfg(8)),
+        (&g1, cfg(16)),
+    ];
+    let mut serial = SimEvaluator::deterministic(cluster.clone());
+    let a = serial.evaluate_groups(&items);
+    let mut threaded = SimEvaluator::deterministic(cluster.clone()).with_jobs(8);
+    let b = threaded.evaluate_groups(&items);
+    assert_eq!(a, b, "plan route: jobs changes wall time only");
+    assert_eq!(serial.stats(), threaded.stats(), "full stats, plan counters included");
+    let s = serial.stats();
+    assert_eq!(s.plan_compiles, 2, "each distinct group compiles exactly once");
+    assert_eq!(s.plan_hits, 1, "the second g1 segment reuses the compiled plan");
+    assert_eq!(s.sim_calls, items.len() as u64, "one sim call per candidate, no doubles");
+
+    // And the numbers are the per-candidate scalar reference's, bitwise.
+    let mut reference =
+        SimEvaluator::deterministic(cluster).with_plan(false).with_soa(false);
+    let want: Vec<_> = items.iter().map(|(g, c)| reference.evaluate(g, c)).collect();
+    assert_eq!(a, want, "plan route == one-by-one evaluation");
+    assert_eq!(
+        serial.stats().route_invariant(),
+        reference.stats().route_invariant(),
+        "route-invariant accounting matches the scalar path"
+    );
 }
 
 #[test]

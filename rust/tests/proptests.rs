@@ -192,6 +192,53 @@ fn prop_soa_batch_matches_reference() {
 }
 
 #[test]
+fn prop_plan_matches_reference() {
+    // The compiled-plan route must reproduce the **per-wave reference
+    // stepper** bitwise at sigma == 0 — and agree with the SoA frontier —
+    // across random comp/comm mixes × random candidate frontiers (the
+    // PR 7 tentpole acceptance: compile once, table-walk many, change
+    // nothing).
+    use lagom::sim::{FrontierBatch, GroupPlan, PlanScratch};
+    let cl = ClusterSpec::cluster_b(1);
+    let g = Gen::new(move |rng| {
+        let comps = vec_of(arb_comp(), 1, 4).sample(rng);
+        let comms = vec_of(arb_comm(), 0, 3).sample(rng);
+        let n = 2 + rng.next_below(5) as usize;
+        let frontier: Vec<Vec<CommConfig>> = (0..n)
+            .map(|_| (0..comms.len()).map(|_| arb_config().sample(rng)).collect())
+            .collect();
+        (comps, comms, frontier)
+    });
+    for_all("plan = per-wave reference", &g, default_cases() / 4, |(comps, comms, frontier)| {
+        let group = OverlapGroup::with("p", comps.clone(), comms.clone());
+        let views: Vec<&[CommConfig]> = frontier.iter().map(|c| c.as_slice()).collect();
+        let plan = GroupPlan::compile(&group, &cl);
+        let mut scratch = PlanScratch::new();
+        plan.run(&group, &views, &cl, &mut scratch);
+        let mut batch = FrontierBatch::new();
+        batch.run(&group, &views, &cl);
+        for (i, cfgs) in frontier.iter().enumerate() {
+            let r =
+                simulate_group_reference(&group, cfgs, &mut SimEnv::deterministic(cl.clone()));
+            let s = scratch.summaries()[i];
+            let vs_ref = s.makespan == r.makespan
+                && s.comp_total == r.comp_total()
+                && s.comm_total == r.comm_total()
+                && scratch.comm_times(i).eq(r.comm_times.iter().copied());
+            let vs_soa = s == batch.summaries()[i]
+                && scratch.comm_times(i).eq(batch.comm_times(i));
+            if !(vs_ref && vs_soa) {
+                return Check::from_bool(
+                    false,
+                    &format!("candidate {i} diverged (ref={vs_ref}, soa={vs_soa})"),
+                );
+            }
+        }
+        Check::from_bool(true, "all candidates bitwise-equal")
+    });
+}
+
+#[test]
 fn prop_sim_deterministic_and_seeded() {
     let cl = ClusterSpec::cluster_b(1);
     let g = Gen::new(move |rng| {
