@@ -1,0 +1,77 @@
+//! Fault-tolerance bench — degraded-mode tuning quality: how much tuned
+//! iteration time degrades when 0/1/2 ranks die mid-tuning, plus what the
+//! casualties cost in lifecycle work (retries, deaths, fallbacks).
+//!
+//! The tuner runs over the coordinator (one thread per rank) with the
+//! first N ranks scheduled to die a few profile jobs in; the tuned configs
+//! are then scored by the deterministic evaluator, so the "quality" column
+//! is independent of the coordinator's timing.
+
+use lagom::bench::{save_table, Table};
+use lagom::coordinator::{Coordinator, DistributedProfiler, FaultPlan};
+use lagom::hw::ClusterSpec;
+use lagom::models::ModelSpec;
+use lagom::parallel::{build_schedule, Parallelism, Workload};
+use lagom::report::evaluate;
+use lagom::tuner::{LagomTuner, Tuner};
+use std::time::Duration;
+
+fn main() {
+    let cluster = ClusterSpec::cluster_b(1);
+    let world = cluster.world_size();
+    let mut model = ModelSpec::phi2();
+    model.layers = 2;
+    let w = Workload { model, par: Parallelism::Fsdp { world }, mbs: 2, gbs: 2 * world };
+    let schedule = build_schedule(&w, &cluster);
+
+    let mut t = Table::new(
+        "Fault tolerance — tuned quality vs casualties (cluster B, 8 ranks)",
+        &["casualties", "iter time (s)", "vs healthy", "deaths", "retries", "fallbacks"],
+    );
+    let mut healthy_iter = 0.0f64;
+    let mut ratios = Vec::new();
+    for casualties in [0usize, 1, 2] {
+        let mut faults = vec![FaultPlan::healthy(); world as usize];
+        for (r, f) in faults.iter_mut().take(casualties).enumerate() {
+            *f = FaultPlan::dies_after(5 + r as u64);
+        }
+        let mut coord = Coordinator::spawn(&cluster, 42, &faults);
+        coord.timeout = Duration::from_millis(100);
+        let mut backend = DistributedProfiler::new(coord);
+        backend.reps = 1;
+
+        let mut tuner = LagomTuner::new(cluster.clone());
+        let r = tuner.tune_schedule(&schedule, &mut backend);
+        let iter = evaluate(&schedule, &r.configs, &cluster, 1, 99);
+        assert!(iter.is_finite() && iter > 0.0, "degraded tuning must stay sane: {iter}");
+
+        let hr = backend.health_report();
+        assert_eq!(hr.dead, casualties, "exactly the injected ranks die");
+        backend.coord.shutdown();
+
+        if casualties == 0 {
+            healthy_iter = iter;
+        }
+        let ratio = iter / healthy_iter;
+        ratios.push(ratio);
+        t.row(vec![
+            casualties.to_string(),
+            format!("{iter:.6}"),
+            format!("{ratio:.3}x"),
+            hr.stats.deaths.to_string(),
+            hr.stats.retries.to_string(),
+            hr.fallbacks.to_string(),
+        ]);
+    }
+    t.print();
+    save_table(&t);
+
+    // Soft quality floor: losing a quarter of the world may cost tuning
+    // fidelity, but never half again the healthy iteration time.
+    for (c, ratio) in ratios.iter().enumerate() {
+        assert!(
+            ratio.is_finite() && *ratio < 1.5,
+            "{c} casualties degraded tuning beyond the floor: {ratio:.3}x"
+        );
+    }
+}

@@ -184,6 +184,10 @@ pub struct ResultCache {
     entries: Mutex<BTreeMap<String, CachedOutcome>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Per-save sequence number: gives every temp file written by
+    /// [`ResultCache::save`] a unique name, so concurrent checkpoint
+    /// saves never interleave partial writes into the same temp file.
+    save_seq: AtomicU64,
 }
 
 impl ResultCache {
@@ -194,6 +198,7 @@ impl ResultCache {
             entries: Mutex::new(BTreeMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            save_seq: AtomicU64::new(0),
         }
     }
 
@@ -224,6 +229,7 @@ impl ResultCache {
             entries: Mutex::new(entries),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            save_seq: AtomicU64::new(0),
         }
     }
 
@@ -269,6 +275,12 @@ impl ResultCache {
     }
 
     /// Persist to the backing file (no-op for in-memory caches).
+    ///
+    /// The write is atomic: the document goes to a uniquely named temp
+    /// sibling first and is `rename`d over the target. A save that dies
+    /// mid-write (process kill, full disk) leaves at worst a stray temp
+    /// file — never a truncated cache that would wipe every previously
+    /// persisted entry on the next load.
     pub fn save(&self) -> std::io::Result<()> {
         let Some(path) = &self.path else {
             return Ok(());
@@ -278,7 +290,16 @@ impl ResultCache {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        std::fs::write(path, self.to_json().to_pretty())
+        let seq = self.save_seq.fetch_add(1, Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp.{}.{}", std::process::id(), seq));
+        std::fs::write(&tmp, self.to_json().to_pretty())?;
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
     }
 }
 
@@ -375,6 +396,36 @@ mod tests {
         assert_eq!(reopened.len(), 1);
         assert_eq!(reopened.lookup(&key), Some(outcome()));
         assert_eq!(reopened.hits(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn crashed_save_never_wipes_previous_entries() {
+        let path = std::env::temp_dir()
+            .join(format!("lagom_cache_torn_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let (cluster, w) = workload();
+        let space = ParamSpace::default();
+        let key = CacheKey::of(&cluster, &w, &space, 9, EvalMode::Simulated);
+        {
+            let cache = ResultCache::open(&path);
+            cache.insert(key, outcome());
+            cache.save().unwrap();
+        }
+        // Simulate a save that crashed mid-write: saves go to a temp
+        // sibling first, so the crash leaves truncated JSON *there* and
+        // the real file untouched — reloading must still see everything.
+        let tmp = path.with_extension("tmp.99999.0");
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&tmp, &full[..full.len() / 2]).unwrap();
+        let reopened = ResultCache::open(&path);
+        assert_eq!(reopened.len(), 1, "persisted entries survive a crashed save");
+        assert_eq!(reopened.lookup(&key), Some(outcome()));
+        // And a subsequent save still lands atomically.
+        reopened.insert(CacheKey::of(&cluster, &w, &space, 10, EvalMode::Simulated), outcome());
+        reopened.save().unwrap();
+        assert_eq!(ResultCache::open(&path).len(), 2);
+        let _ = std::fs::remove_file(&tmp);
         let _ = std::fs::remove_file(&path);
     }
 

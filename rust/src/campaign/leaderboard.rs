@@ -13,6 +13,8 @@ pub struct Leaderboard {
     /// Outcomes sorted by `lagom_vs_nccl` descending; ties broken by
     /// scenario id, so the ordering is fully deterministic.
     pub rows: Vec<ScenarioOutcome>,
+    /// Scenarios that failed every measurement attempt (id, panic).
+    pub failed: Vec<(String, String)>,
     pub geomean_lagom_vs_nccl: f64,
     pub geomean_lagom_vs_autoccl: f64,
     pub cache_hits: u64,
@@ -39,6 +41,7 @@ impl Leaderboard {
         let vs_auto: Vec<f64> = rows.iter().map(|r| r.lagom_vs_autoccl).collect();
         Leaderboard {
             rows,
+            failed: result.failed.clone(),
             geomean_lagom_vs_nccl: geomean(&vs_nccl),
             geomean_lagom_vs_autoccl: geomean(&vs_auto),
             cache_hits: result.cache_hits,
@@ -51,54 +54,73 @@ impl Leaderboard {
         }
     }
 
+    fn row_json(rank: usize, r: &ScenarioOutcome, include_cached: bool) -> Json {
+        let mut fields = vec![
+            ("rank", Json::num((rank + 1) as f64)),
+            ("id", Json::str(r.id.clone())),
+            ("bw_class", Json::str(r.bw_class.clone())),
+            ("cluster", Json::str(r.cluster.clone())),
+            ("workload", Json::str(r.workload.clone())),
+            (
+                "iter_time_s",
+                Json::obj(vec![
+                    ("nccl", Json::num(r.nccl_iter)),
+                    ("autoccl", Json::num(r.autoccl_iter)),
+                    ("lagom", Json::num(r.lagom_iter)),
+                ]),
+            ),
+            (
+                "speedup",
+                Json::obj(vec![
+                    ("lagom_vs_nccl", Json::num(r.lagom_vs_nccl)),
+                    ("lagom_vs_autoccl", Json::num(r.lagom_vs_autoccl)),
+                    ("autoccl_vs_nccl", Json::num(r.autoccl_vs_nccl)),
+                ]),
+            ),
+            (
+                "tuning_iterations",
+                Json::obj(vec![
+                    ("lagom", Json::num(r.lagom_tuning_iterations as f64)),
+                    ("autoccl", Json::num(r.autoccl_tuning_iterations as f64)),
+                ]),
+            ),
+            (
+                // Simulator executions tuning consumed: the
+                // tuning-cost axis of BENCH_* trajectories.
+                "sim_calls",
+                Json::obj(vec![
+                    ("lagom", Json::num(r.lagom_sim_calls as f64)),
+                    ("autoccl", Json::num(r.autoccl_sim_calls as f64)),
+                ]),
+            ),
+        ];
+        if include_cached {
+            fields.push(("cached", Json::Bool(r.cached)));
+        }
+        Json::obj(fields)
+    }
+
+    fn failed_json(&self) -> Json {
+        Json::Arr(
+            self.failed
+                .iter()
+                .map(|(id, msg)| {
+                    Json::obj(vec![
+                        ("id", Json::str(id.clone())),
+                        ("panic", Json::str(msg.clone())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     /// JSON document written by `lagom campaign --out`.
     pub fn to_json(&self) -> Json {
         let rows = self
             .rows
             .iter()
             .enumerate()
-            .map(|(rank, r)| {
-                Json::obj(vec![
-                    ("rank", Json::num((rank + 1) as f64)),
-                    ("id", Json::str(r.id.clone())),
-                    ("bw_class", Json::str(r.bw_class.clone())),
-                    ("cluster", Json::str(r.cluster.clone())),
-                    ("workload", Json::str(r.workload.clone())),
-                    (
-                        "iter_time_s",
-                        Json::obj(vec![
-                            ("nccl", Json::num(r.nccl_iter)),
-                            ("autoccl", Json::num(r.autoccl_iter)),
-                            ("lagom", Json::num(r.lagom_iter)),
-                        ]),
-                    ),
-                    (
-                        "speedup",
-                        Json::obj(vec![
-                            ("lagom_vs_nccl", Json::num(r.lagom_vs_nccl)),
-                            ("lagom_vs_autoccl", Json::num(r.lagom_vs_autoccl)),
-                            ("autoccl_vs_nccl", Json::num(r.autoccl_vs_nccl)),
-                        ]),
-                    ),
-                    (
-                        "tuning_iterations",
-                        Json::obj(vec![
-                            ("lagom", Json::num(r.lagom_tuning_iterations as f64)),
-                            ("autoccl", Json::num(r.autoccl_tuning_iterations as f64)),
-                        ]),
-                    ),
-                    (
-                        // Simulator executions tuning consumed: the
-                        // tuning-cost axis of BENCH_* trajectories.
-                        "sim_calls",
-                        Json::obj(vec![
-                            ("lagom", Json::num(r.lagom_sim_calls as f64)),
-                            ("autoccl", Json::num(r.autoccl_sim_calls as f64)),
-                        ]),
-                    ),
-                    ("cached", Json::Bool(r.cached)),
-                ])
-            })
+            .map(|(rank, r)| Leaderboard::row_json(rank, r, true))
             .collect();
         Json::obj(vec![
             ("schema", Json::str("lagom.campaign.leaderboard/v1")),
@@ -127,6 +149,36 @@ impl Leaderboard {
                     ("lagom_vs_autoccl", Json::num(self.geomean_lagom_vs_autoccl)),
                 ]),
             ),
+            ("failed", self.failed_json()),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Result-content-only JSON: every ranked number, no execution
+    /// telemetry (cache hit counts, per-row `cached` provenance, thread
+    /// count, wall time). This is the crash-safe-resume contract — a
+    /// campaign killed between scenarios and resumed from its checkpoint
+    /// produces a canonical document **bitwise identical** to an
+    /// uninterrupted run, because per-scenario seeds derive from content,
+    /// never from which run measured them.
+    pub fn to_json_canonical(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .enumerate()
+            .map(|(rank, r)| Leaderboard::row_json(rank, r, false))
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("lagom.campaign.leaderboard/v1")),
+            ("scenarios", Json::num(self.rows.len() as f64)),
+            (
+                "geomean",
+                Json::obj(vec![
+                    ("lagom_vs_nccl", Json::num(self.geomean_lagom_vs_nccl)),
+                    ("lagom_vs_autoccl", Json::num(self.geomean_lagom_vs_autoccl)),
+                ]),
+            ),
+            ("failed", self.failed_json()),
             ("rows", Json::Arr(rows)),
         ])
     }
@@ -189,6 +241,7 @@ mod tests {
     fn result(outcomes: Vec<ScenarioOutcome>) -> CampaignResult {
         CampaignResult {
             outcomes,
+            failed: vec![],
             cache_hits: 1,
             cache_misses: 2,
             plan_compiles: 6,
@@ -231,6 +284,47 @@ mod tests {
         assert_eq!(pc.get("compiles").unwrap().as_u64(), Some(6));
         assert_eq!(pc.get("hits").unwrap().as_u64(), Some(3));
         assert_eq!(pc.get("evictions").unwrap().as_u64(), Some(0));
+        assert_eq!(doc.get("failed").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn failed_scenarios_are_reported_in_json() {
+        let mut r = result(vec![outcome("x", 1.0, 0.8)]);
+        r.failed.push(("bad/scenario".into(), "boom".into()));
+        let lb = Leaderboard::from_result(&r);
+        let doc = Json::parse(&lb.to_json().to_pretty()).unwrap();
+        let failed = doc.get("failed").unwrap().as_arr().unwrap();
+        assert_eq!(failed.len(), 1);
+        assert_eq!(failed[0].get("id").unwrap().as_str(), Some("bad/scenario"));
+        assert_eq!(failed[0].get("panic").unwrap().as_str(), Some("boom"));
+        // Failures are part of the result content, so canonical too.
+        let canon = lb.to_json_canonical();
+        assert_eq!(canon.get("failed").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn canonical_json_ignores_execution_telemetry() {
+        let base = result(vec![outcome("x", 1.0, 0.8), outcome("y", 1.0, 0.9)]);
+        // Same measured numbers, completely different execution: served
+        // from cache, other thread count, other wall time.
+        let mut resumed = result(vec![outcome("x", 1.0, 0.8), outcome("y", 1.0, 0.9)]);
+        for o in &mut resumed.outcomes {
+            o.cached = true;
+        }
+        resumed.cache_hits = 2;
+        resumed.cache_misses = 0;
+        resumed.threads = 1;
+        resumed.wall_secs = 123.0;
+        resumed.plan_compiles = 0;
+        resumed.plan_hits = 0;
+        let a = Leaderboard::from_result(&base);
+        let b = Leaderboard::from_result(&resumed);
+        assert_ne!(a.to_json().to_pretty(), b.to_json().to_pretty(), "full doc sees telemetry");
+        assert_eq!(
+            a.to_json_canonical().to_pretty(),
+            b.to_json_canonical().to_pretty(),
+            "canonical doc is bitwise identical across execution histories"
+        );
     }
 
     #[test]

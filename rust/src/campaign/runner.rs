@@ -8,6 +8,8 @@ use crate::eval::{EvalMode, EvalOpts};
 use crate::report::compare_strategies_with_eval;
 use crate::util::parallel::{effective_jobs, run_indexed};
 use crate::util::prng::splitmix64;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Campaign-wide knobs.
@@ -41,6 +43,21 @@ pub struct CampaignConfig {
     /// Evaluation fidelity the tuners cost candidates at (`--fidelity`);
     /// part of the cache key.
     pub fidelity: EvalMode,
+    /// Extra attempts for a scenario whose measurement panics — each
+    /// worker wraps the measurement in `catch_unwind`, so one poisoned
+    /// scenario never sinks the whole campaign. A scenario that panics on
+    /// every attempt ends up in [`CampaignResult::failed`]
+    /// (`--retry-scenarios`).
+    pub scenario_retries: u32,
+    /// Checkpoint the result cache to its backing file after every N
+    /// freshly measured scenarios (`0` = off; the CLI always saves once
+    /// at the end regardless). Saves are atomic, so a campaign killed
+    /// mid-run resumes from its last checkpoint (`--checkpoint-every`).
+    pub checkpoint_every: u64,
+    /// Test hook: inject a panic for `(scenario, attempt)` pairs where
+    /// this returns true. A plain `fn` pointer keeps the config
+    /// `Clone + Debug`.
+    pub chaos_panic: Option<fn(&Scenario, u32) -> bool>,
 }
 
 impl Default for CampaignConfig {
@@ -53,6 +70,9 @@ impl Default for CampaignConfig {
             eval_soa: true,
             space: ParamSpace::default(),
             fidelity: EvalMode::Simulated,
+            scenario_retries: 1,
+            checkpoint_every: 0,
+            chaos_panic: None,
         }
     }
 }
@@ -85,6 +105,10 @@ pub struct ScenarioOutcome {
 #[derive(Debug)]
 pub struct CampaignResult {
     pub outcomes: Vec<ScenarioOutcome>,
+    /// Scenarios whose measurement panicked on every attempt:
+    /// `(scenario id, panic message)`, in grid order. They contribute no
+    /// outcome but do not sink the rest of the campaign.
+    pub failed: Vec<(String, String)>,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// Plan-cache accounting summed over the scenarios *measured* in this
@@ -136,6 +160,17 @@ fn measure(
     (outcome, (c.plan_compiles, c.plan_hits, c.plan_evictions))
 }
 
+/// Render a panic payload for [`CampaignResult::failed`].
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 fn outcome_of(s: &Scenario, n: &CachedOutcome, cached: bool) -> ScenarioOutcome {
     ScenarioOutcome {
         id: s.id.clone(),
@@ -169,6 +204,9 @@ pub fn run_campaign(
     let hits0 = cache.hits();
     let misses0 = cache.misses();
     let threads = effective_jobs(config.jobs, scenarios.len());
+    // Freshly measured scenarios, across all workers — drives the
+    // periodic checkpoint cadence.
+    let measured = AtomicU64::new(0);
 
     let results = run_indexed(threads, scenarios.len(), |i| {
         let s = &scenarios[i];
@@ -179,32 +217,57 @@ pub fn run_campaign(
             config.seed,
             config.fidelity,
         );
-        let (numbers, cached, plan) = match cache.lookup(&key) {
-            Some(n) => (n, true, (0, 0, 0)),
-            None => {
-                let (n, plan) = measure(
-                    s,
-                    &config.space,
-                    config.fidelity,
-                    scenario_seed(config.seed, key),
-                    EvalOpts {
-                        jobs: config.eval_jobs,
-                        plan: config.eval_plan,
-                        soa: config.eval_soa,
-                        noise_sigma: None,
-                    },
-                );
-                cache.insert(key, n.clone());
-                (n, false, plan)
-            }
+        if let Some(n) = cache.lookup(&key) {
+            return (Some(outcome_of(s, &n, true)), (0, 0, 0), None);
+        }
+        let seed = scenario_seed(config.seed, key);
+        let opts = EvalOpts {
+            jobs: config.eval_jobs,
+            plan: config.eval_plan,
+            soa: config.eval_soa,
+            noise_sigma: None,
         };
-        (outcome_of(s, &numbers, cached), plan)
+        // Panic isolation with bounded retry: a scenario that panics is
+        // retried up to `scenario_retries` times; one that fails every
+        // attempt is reported, not fatal.
+        let attempts = config.scenario_retries.saturating_add(1);
+        let mut last_panic = String::new();
+        for attempt in 0..attempts {
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(hook) = config.chaos_panic {
+                    if hook(s, attempt) {
+                        panic!("injected campaign chaos: scenario {} attempt {attempt}", s.id);
+                    }
+                }
+                measure(s, &config.space, config.fidelity, seed, opts)
+            }));
+            match run {
+                Ok((n, plan)) => {
+                    cache.insert(key, n.clone());
+                    let done = measured.fetch_add(1, Ordering::Relaxed) + 1;
+                    if config.checkpoint_every > 0 && done % config.checkpoint_every == 0 {
+                        // Best-effort: a failed checkpoint costs resume
+                        // coverage, never the campaign.
+                        let _ = cache.save();
+                    }
+                    return (Some(outcome_of(s, &n, false)), plan, None);
+                }
+                Err(p) => last_panic = panic_msg(p),
+            }
+        }
+        (None, (0, 0, 0), Some((s.id.clone(), last_panic)))
     });
 
     let (mut plan_compiles, mut plan_hits, mut plan_evictions) = (0u64, 0u64, 0u64);
     let mut outcomes = Vec::with_capacity(results.len());
-    for (o, (pc, ph, pe)) in results {
-        outcomes.push(o);
+    let mut failed = Vec::new();
+    for (o, (pc, ph, pe), f) in results {
+        if let Some(o) = o {
+            outcomes.push(o);
+        }
+        if let Some(f) = f {
+            failed.push(f);
+        }
         plan_compiles += pc;
         plan_hits += ph;
         plan_evictions += pe;
@@ -212,6 +275,7 @@ pub fn run_campaign(
 
     CampaignResult {
         outcomes,
+        failed,
         cache_hits: cache.hits() - hits0,
         cache_misses: cache.misses() - misses0,
         plan_compiles,
@@ -360,6 +424,43 @@ mod tests {
             r2.outcomes[0].lagom_sim_calls,
             r1.outcomes[0].lagom_sim_calls
         );
+    }
+
+    #[test]
+    fn first_attempt_panics_are_retried_to_success() {
+        fn boom(_: &Scenario, attempt: u32) -> bool {
+            attempt == 0
+        }
+        let grid = tiny_grid();
+        let clean = run_campaign(&grid, &CampaignConfig::default(), &ResultCache::in_memory());
+        let cfg = CampaignConfig { chaos_panic: Some(boom), ..CampaignConfig::default() };
+        let retried = run_campaign(&grid, &cfg, &ResultCache::in_memory());
+        assert!(retried.failed.is_empty(), "one retry absorbs a single panic");
+        assert_eq!(retried.outcomes.len(), grid.len());
+        for (a, b) in clean.outcomes.iter().zip(&retried.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.lagom_iter, b.lagom_iter, "the retry reruns the same seeded measurement");
+        }
+    }
+
+    #[test]
+    fn persistently_panicking_scenario_is_reported_not_fatal() {
+        fn boom(_: &Scenario, _: u32) -> bool {
+            true
+        }
+        let grid: Vec<Scenario> = scenario_grid(Some(1)).into_iter().take(2).collect();
+        let cfg = CampaignConfig {
+            chaos_panic: Some(boom),
+            scenario_retries: 2,
+            ..CampaignConfig::default()
+        };
+        let r = run_campaign(&grid, &cfg, &ResultCache::in_memory());
+        assert!(r.outcomes.is_empty(), "every measurement panicked");
+        assert_eq!(r.failed.len(), 2, "each scenario reported once");
+        for (id, msg) in &r.failed {
+            assert!(!id.is_empty());
+            assert!(msg.contains("injected campaign chaos"), "panic message surfaced: {msg}");
+        }
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Rank lifecycle, commit quorum policy, and health accounting for the
+//! fault-tolerant coordinator.
+//!
+//! The paper's Fig 6 loop assumes fail-stop ranks; real clusters (and the
+//! low-bandwidth/geo-distributed class Streaming DiLoCo opens) see
+//! transient unresponsiveness, message loss and flapping far more often
+//! than clean crashes. The leader therefore tracks an explicit per-rank
+//! state machine instead of a single `alive` bit:
+//!
+//! ```text
+//!            missed deadline            K consecutive misses
+//!   Alive ───────────────────▶ Suspect ─────────────────────▶ Dead
+//!     ▲                          │  │                           │
+//!     │ reported (epoch current) │  │ reported (epoch stale),   │ late sign
+//!     └──────────────────────────┘  │ or stale-job report       │ of life
+//!     ▲                             ▼                           ▼
+//!     │   Sync acked (epoch now current)
+//!     └───────────────────────── Rejoining ◀────────────────────┘
+//! ```
+//!
+//! A `Suspect` rank still receives jobs and is waited on with an
+//! exponentially growing (bounded) per-rank deadline; only `K` consecutive
+//! missed deadlines declare it `Dead`. Any late report rehabilitates a
+//! suspect: directly back to `Alive` if its committed-config epoch is
+//! current, or through `Rejoining` — the leader replays the committed
+//! config set and epoch via a `Sync` message, and the rank counts toward
+//! quorum again only after acknowledging it.
+
+use super::msg::JobId;
+
+/// Lifecycle state of one worker rank, as seen by the leader.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankState {
+    /// Responsive and on the committed config epoch.
+    Alive,
+    /// Missed at least one deadline; still polled, with backoff.
+    Suspect,
+    /// Missed `K` consecutive deadlines (or its channel closed).
+    Dead,
+    /// Showed signs of life after falling behind; a `Sync` replay of the
+    /// committed epoch is in flight, and the rank is excluded from
+    /// broadcasts and quorums until it acknowledges.
+    Rejoining,
+}
+
+/// Quorum rule for [`super::Coordinator::try_commit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommitPolicy {
+    /// One acknowledgement commits (the pre-lifecycle behavior).
+    Any,
+    /// Strictly more than half of the ranks the commit was sent to.
+    Majority,
+    /// Every rank the commit was sent to.
+    All,
+}
+
+impl CommitPolicy {
+    pub fn parse(s: &str) -> Option<CommitPolicy> {
+        match s {
+            "any" => Some(CommitPolicy::Any),
+            "majority" => Some(CommitPolicy::Majority),
+            "all" => Some(CommitPolicy::All),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CommitPolicy::Any => "any",
+            CommitPolicy::Majority => "majority",
+            CommitPolicy::All => "all",
+        }
+    }
+
+    /// Minimum acknowledgements required out of `sent` recipients.
+    pub fn quorum(&self, sent: usize) -> usize {
+        match self {
+            CommitPolicy::Any => 1,
+            CommitPolicy::Majority => sent / 2 + 1,
+            CommitPolicy::All => sent,
+        }
+    }
+}
+
+/// Outcome of one quorum commit attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommitOutcome {
+    /// Acknowledgements echoing the *target* epoch.
+    pub acks: usize,
+    /// Ranks the commit was broadcast to.
+    pub sent: usize,
+    /// Whether the quorum was met and the leader state advanced. On
+    /// `false` the commit rolled back: `commit_epoch` did not bump, and
+    /// ranks that already adopted the aborted epoch are re-synced.
+    pub committed: bool,
+    /// The leader's commit epoch *after* the attempt.
+    pub epoch: u64,
+}
+
+/// Per-rank deadline multiplier: a rank with `misses` consecutive missed
+/// deadlines is waited on for `timeout * backoff_multiplier(misses, cap)`
+/// — bounded exponential backoff (1x, 2x, 4x, …, capped at `cap`).
+pub fn backoff_multiplier(misses: u32, cap: u32) -> u32 {
+    let cap = cap.max(1);
+    if misses >= 31 {
+        return cap;
+    }
+    (1u32 << misses).min(cap)
+}
+
+/// Leader-side bookkeeping for one rank.
+#[derive(Debug, Clone)]
+pub(super) struct RankHealth {
+    pub state: RankState,
+    /// Consecutive missed deadlines (reset by any report).
+    pub misses: u32,
+    /// Last config epoch this rank acknowledged.
+    pub epoch: u64,
+    /// Outstanding `Sync` job, if the rank is `Rejoining`.
+    pub pending_sync: Option<JobId>,
+}
+
+impl RankHealth {
+    pub fn new() -> RankHealth {
+        RankHealth { state: RankState::Alive, misses: 0, epoch: 0, pending_sync: None }
+    }
+}
+
+/// Monotone fault counters accumulated over a coordinator's lifetime.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Collect rounds that waited past the base deadline for a suspect.
+    pub retries: u64,
+    /// `Alive → Suspect` transitions.
+    pub suspects: u64,
+    /// `→ Dead` transitions.
+    pub deaths: u64,
+    /// `Rejoining → Alive` completions (epoch replayed and acknowledged).
+    pub rejoins: u64,
+    /// Measurements rejected for NaN/negative content.
+    pub corrupt_rejected: u64,
+    /// Commits that failed quorum and rolled back.
+    pub commit_rollbacks: u64,
+}
+
+/// Snapshot of coordinator health: per-rank states, lifetime fault
+/// counters, and epoch divergence. [`super::DistributedProfiler`] adds the
+/// count of measurements served from its local degraded-mode fallback.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthReport {
+    pub states: Vec<RankState>,
+    pub alive: usize,
+    pub suspect: usize,
+    pub dead: usize,
+    pub rejoining: usize,
+    /// Non-dead ranks whose acknowledged epoch trails `commit_epoch`.
+    pub divergent: Vec<u32>,
+    pub commit_epoch: u64,
+    pub stats: HealthStats,
+    /// Profile calls answered by the leader's local simulator because the
+    /// distributed path was unavailable (degraded mode).
+    pub fallbacks: u64,
+}
+
+impl HealthReport {
+    /// One-line operator summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} alive / {} suspect / {} rejoining / {} dead; \
+             {} retries, {} suspected, {} died, {} rejoined, \
+             {} corrupt rejected, {} commit rollbacks, {} local fallbacks",
+            self.alive,
+            self.suspect,
+            self.rejoining,
+            self.dead,
+            self.stats.retries,
+            self.stats.suspects,
+            self.stats.deaths,
+            self.stats.rejoins,
+            self.stats.corrupt_rejected,
+            self.stats.commit_rollbacks,
+            self.fallbacks,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quorum_thresholds() {
+        assert_eq!(CommitPolicy::Any.quorum(8), 1);
+        assert_eq!(CommitPolicy::Majority.quorum(8), 5);
+        assert_eq!(CommitPolicy::Majority.quorum(7), 4);
+        assert_eq!(CommitPolicy::Majority.quorum(1), 1);
+        assert_eq!(CommitPolicy::All.quorum(8), 8);
+    }
+
+    #[test]
+    fn policy_parse_round_trip() {
+        for p in [CommitPolicy::Any, CommitPolicy::Majority, CommitPolicy::All] {
+            assert_eq!(CommitPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(CommitPolicy::parse("most"), None);
+    }
+
+    #[test]
+    fn backoff_grows_then_caps() {
+        assert_eq!(backoff_multiplier(0, 4), 1);
+        assert_eq!(backoff_multiplier(1, 4), 2);
+        assert_eq!(backoff_multiplier(2, 4), 4);
+        assert_eq!(backoff_multiplier(3, 4), 4, "bounded at the cap");
+        assert_eq!(backoff_multiplier(40, 4), 4, "no shift overflow");
+        assert_eq!(backoff_multiplier(0, 0), 1, "cap floor is 1");
+    }
+
+    #[test]
+    fn report_summary_mentions_all_counters() {
+        let hr = HealthReport {
+            states: vec![RankState::Alive, RankState::Dead],
+            alive: 1,
+            suspect: 0,
+            dead: 1,
+            rejoining: 0,
+            divergent: vec![],
+            commit_epoch: 2,
+            stats: HealthStats { deaths: 1, ..HealthStats::default() },
+            fallbacks: 3,
+        };
+        let s = hr.summary();
+        assert!(s.contains("1 alive") && s.contains("1 dead") && s.contains("3 local"));
+    }
+}

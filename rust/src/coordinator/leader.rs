@@ -1,32 +1,68 @@
 //! Leader: spawns worker ranks, broadcasts jobs, aggregates reports, and
 //! exposes the distributed measurement path as a [`ProfileBackend`].
+//!
+//! Fault handling is built around the per-rank lifecycle in
+//! [`super::health`]: `collect` waits on each rank with its own deadline
+//! (base timeout × bounded exponential backoff in the rank's consecutive
+//! miss count) instead of one global `recv_timeout`; a rank is declared
+//! dead only after `suspect_threshold` consecutive missed deadlines; any
+//! late report rehabilitates a suspect, re-syncing it through a replay of
+//! the committed config epoch when it fell behind. Commits are quorum
+//! checked under a configurable [`CommitPolicy`], counting only acks that
+//! echo the target epoch, and roll back (epoch not bumped, adopters
+//! re-synced) when the quorum fails.
 
+use super::health::{
+    backoff_multiplier, CommitOutcome, CommitPolicy, HealthReport, HealthStats, RankHealth,
+    RankState,
+};
 use super::msg::{FaultPlan, JobId, LeaderMsg, ReportPayload, WorkerReport};
 use super::worker::worker_main;
 use crate::comm::CommConfig;
 use crate::graph::OverlapGroup;
 use crate::hw::ClusterSpec;
 use crate::profiler::{GroupMeasurement, ProfileBackend};
-use crate::sim::SimEnv;
+use crate::sim::{simulate_group_summary, SimEnv, SimScratch};
 use crate::util::prng::Prng;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// A measurement is usable only if every field is finite and non-negative;
+/// chaos-corrupted reports (NaN makespan, negative totals) must never
+/// reach an aggregate.
+fn measurement_is_sane(m: &GroupMeasurement) -> bool {
+    let ok = |x: f64| x.is_finite() && x >= 0.0;
+    ok(m.comp_total)
+        && ok(m.comm_total)
+        && ok(m.makespan)
+        && m.comm_times.iter().all(|t| ok(*t))
+}
 
 /// Leader-side coordination state.
 pub struct Coordinator {
     txs: Vec<Sender<LeaderMsg>>,
     rx: Receiver<WorkerReport>,
     handles: Vec<JoinHandle<()>>,
-    /// Ranks considered alive (a timed-out rank is marked dead and skipped).
-    alive: Vec<bool>,
+    /// Per-rank lifecycle, miss counts, and acknowledged epochs.
+    ranks: Vec<RankHealth>,
     next_job: JobId,
     /// Committed active config set (Fig 6 step d).
     committed: Vec<CommConfig>,
     commit_epoch: u64,
-    /// Per-job reply timeout.
+    stats: HealthStats,
+    cluster: ClusterSpec,
+    seed: u64,
+    /// Base per-job reply deadline (scaled per rank by backoff).
     pub timeout: Duration,
+    /// Consecutive missed deadlines before a rank is declared dead
+    /// (`K`). `1` reproduces the old fail-stop behavior.
+    pub suspect_threshold: u32,
+    /// Cap on the per-rank deadline multiplier (1x, 2x, 4x, … up to this).
+    pub backoff_cap: u32,
+    /// Quorum rule for [`Coordinator::try_commit`].
+    pub commit_policy: CommitPolicy,
 }
 
 impl Coordinator {
@@ -57,11 +93,17 @@ impl Coordinator {
             txs,
             rx: report_rx,
             handles,
-            alive: vec![true; world],
+            ranks: (0..world).map(|_| RankHealth::new()).collect(),
             next_job: 1,
             committed: Vec::new(),
             commit_epoch: 0,
+            stats: HealthStats::default(),
+            cluster: cluster.clone(),
+            seed,
             timeout: Duration::from_secs(5),
+            suspect_threshold: 3,
+            backoff_cap: 4,
+            commit_policy: CommitPolicy::Majority,
         }
     }
 
@@ -69,8 +111,25 @@ impl Coordinator {
         self.txs.len()
     }
 
+    /// Ranks currently `Alive` (on the committed epoch and responsive).
     pub fn alive_ranks(&self) -> usize {
-        self.alive.iter().filter(|a| **a).count()
+        self.ranks.iter().filter(|h| h.state == RankState::Alive).count()
+    }
+
+    /// Ranks still receiving jobs: `Alive` or `Suspect`.
+    pub fn responsive_ranks(&self) -> usize {
+        self.ranks
+            .iter()
+            .filter(|h| matches!(h.state, RankState::Alive | RankState::Suspect))
+            .count()
+    }
+
+    pub fn rank_state(&self, rank: usize) -> RankState {
+        self.ranks[rank].state
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
     }
 
     pub fn committed_configs(&self) -> &[CommConfig] {
@@ -81,40 +140,239 @@ impl Coordinator {
         self.commit_epoch
     }
 
-    fn broadcast(&mut self, make: impl Fn(JobId) -> LeaderMsg) -> JobId {
+    /// Non-dead ranks whose last acknowledged epoch differs from the
+    /// leader's `commit_epoch` — e.g. a suspect that missed a commit.
+    pub fn epoch_divergence(&self) -> Vec<u32> {
+        self.ranks
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.state != RankState::Dead && h.epoch != self.commit_epoch)
+            .map(|(r, _)| r as u32)
+            .collect()
+    }
+
+    /// Worst-case wall time one `collect` can wait on a single job:
+    /// the base timeout at the maximum backoff multiplier.
+    pub fn deadline_budget(&self) -> Duration {
+        self.timeout * self.backoff_cap.max(1)
+    }
+
+    /// Snapshot of per-rank states, epoch divergence, and fault counters.
+    pub fn health_report(&self) -> HealthReport {
+        let states: Vec<RankState> = self.ranks.iter().map(|h| h.state).collect();
+        let count = |s: RankState| states.iter().filter(|x| **x == s).count();
+        HealthReport {
+            alive: count(RankState::Alive),
+            suspect: count(RankState::Suspect),
+            dead: count(RankState::Dead),
+            rejoining: count(RankState::Rejoining),
+            divergent: self.epoch_divergence(),
+            commit_epoch: self.commit_epoch,
+            stats: self.stats.clone(),
+            fallbacks: 0,
+            states,
+        }
+    }
+
+    /// Send `make(job)` to every responsive (`Alive` | `Suspect`) rank.
+    /// Returns the job id and how many ranks it reached, or `None` when
+    /// no rank could be reached — callers short-circuit instead of
+    /// waiting out a deadline on an empty world, and the job id is not
+    /// consumed.
+    fn broadcast(&mut self, make: impl Fn(JobId) -> LeaderMsg) -> Option<(JobId, usize)> {
+        let job = self.next_job;
+        let mut sent = 0usize;
+        for r in 0..self.txs.len() {
+            if !matches!(self.ranks[r].state, RankState::Alive | RankState::Suspect) {
+                continue;
+            }
+            // A send failure means the thread is gone: mark dead.
+            if self.txs[r].send(make(job)).is_ok() {
+                sent += 1;
+            } else {
+                self.kill(r);
+            }
+        }
+        if sent == 0 {
+            return None;
+        }
+        self.next_job += 1;
+        Some((job, sent))
+    }
+
+    fn kill(&mut self, r: usize) {
+        if self.ranks[r].state != RankState::Dead {
+            self.ranks[r].state = RankState::Dead;
+            self.ranks[r].pending_sync = None;
+            self.stats.deaths += 1;
+        }
+    }
+
+    /// One missed deadline: `Alive → Suspect`, and `Suspect → Dead` after
+    /// `suspect_threshold` consecutive misses.
+    fn tick_miss(&mut self, r: usize) {
+        self.ranks[r].misses += 1;
+        if self.ranks[r].state == RankState::Alive {
+            self.ranks[r].state = RankState::Suspect;
+            self.stats.suspects += 1;
+        }
+        if self.ranks[r].misses >= self.suspect_threshold.max(1) {
+            self.kill(r);
+        }
+    }
+
+    /// Start re-syncing a rank that fell behind: replay the committed
+    /// config set and epoch. The rank counts toward quorum again only
+    /// after acknowledging (`finish_resync`).
+    fn begin_resync(&mut self, r: usize) {
+        if self.ranks[r].state == RankState::Rejoining && self.ranks[r].pending_sync.is_some() {
+            return; // a replay is already in flight
+        }
         let job = self.next_job;
         self.next_job += 1;
-        for (r, tx) in self.txs.iter().enumerate() {
-            if self.alive[r] {
-                // A send failure means the thread is gone: mark dead.
-                if tx.send(make(job)).is_err() {
-                    self.alive[r] = false;
+        let msg = LeaderMsg::Sync {
+            job,
+            configs: Arc::new(self.committed.clone()),
+            epoch: self.commit_epoch,
+        };
+        if self.txs[r].send(msg).is_ok() {
+            self.ranks[r].state = RankState::Rejoining;
+            self.ranks[r].misses = 0;
+            self.ranks[r].pending_sync = Some(job);
+        } else {
+            self.kill(r);
+        }
+    }
+
+    /// A rejoining rank acknowledged its `Sync`. Returns whether it is
+    /// fully rejoined (a commit may have raced the replay, in which case
+    /// the current epoch is replayed again).
+    fn finish_resync(&mut self, r: usize, epoch: u64) -> bool {
+        self.ranks[r].pending_sync = None;
+        self.ranks[r].epoch = epoch;
+        self.ranks[r].misses = 0;
+        if epoch == self.commit_epoch {
+            self.ranks[r].state = RankState::Alive;
+            self.stats.rejoins += 1;
+            true
+        } else {
+            self.begin_resync(r);
+            false
+        }
+    }
+
+    /// Route one incoming report during `collect`: current-job reports
+    /// mark the rank seen (rehabilitating suspects), `Sync` acks complete
+    /// rejoins, and any sign of life from a stale or dead rank starts a
+    /// re-sync instead of being dropped on the floor.
+    fn route_report(
+        &mut self,
+        rep: WorkerReport,
+        job: JobId,
+        seen: &mut [bool],
+        got: &mut Vec<WorkerReport>,
+    ) {
+        let r = rep.rank as usize;
+        if r >= self.ranks.len() {
+            return;
+        }
+        match self.ranks[r].state {
+            RankState::Dead => {
+                // Late sign of life from a declared-dead rank: bring it
+                // back through a full epoch replay.
+                self.begin_resync(r);
+            }
+            RankState::Rejoining => {
+                if self.ranks[r].pending_sync == Some(rep.job) {
+                    if let ReportPayload::Ack { epoch } = rep.payload {
+                        self.finish_resync(r, epoch);
+                    }
+                }
+                // Anything else from a rejoining rank is stale output
+                // from before it fell behind; it does not count.
+            }
+            RankState::Alive | RankState::Suspect => {
+                if rep.job == job {
+                    if seen[r] {
+                        return;
+                    }
+                    seen[r] = true;
+                    let was_suspect = self.ranks[r].state == RankState::Suspect;
+                    self.ranks[r].misses = 0;
+                    if let ReportPayload::Ack { epoch } = rep.payload {
+                        self.ranks[r].epoch = epoch;
+                    }
+                    if was_suspect {
+                        // Rehabilitate: straight back to Alive when its
+                        // epoch is current (>= covers an in-flight commit
+                        // it just acked), else through a re-sync.
+                        if self.ranks[r].epoch >= self.commit_epoch {
+                            self.ranks[r].state = RankState::Alive;
+                        } else {
+                            self.begin_resync(r);
+                        }
+                    }
+                    got.push(rep);
+                } else if self.ranks[r].state == RankState::Suspect {
+                    // A stale-job report is still a sign of life from a
+                    // suspect — rehabilitate it through a re-sync so the
+                    // next job reaches it in a known-good state.
+                    self.begin_resync(r);
                 }
             }
         }
-        job
     }
 
-    /// Collect one report per alive rank for `job`; ranks that miss the
-    /// timeout are marked dead (the paper's setting assumes fail-stop).
+    /// Collect reports for `job` from every rank it was sent to, each
+    /// with its own backoff-scaled deadline. A rank past its deadline is
+    /// miss-ticked once per collect; collection ends when every expected
+    /// rank has reported or missed.
     fn collect(&mut self, job: JobId) -> Vec<WorkerReport> {
-        let expect = self.alive_ranks();
-        let mut got: Vec<WorkerReport> = Vec::with_capacity(expect);
-        let mut seen = vec![false; self.txs.len()];
-        while got.len() < expect {
-            match self.rx.recv_timeout(self.timeout) {
-                Ok(rep) if rep.job == job => {
-                    if !seen[rep.rank as usize] {
-                        seen[rep.rank as usize] = true;
-                        got.push(rep);
-                    }
+        let world = self.txs.len();
+        // Expected = responsive at broadcast time (states cannot change
+        // between broadcast and here: nothing is received in between).
+        let expected: Vec<bool> = self
+            .ranks
+            .iter()
+            .map(|h| matches!(h.state, RankState::Alive | RankState::Suspect))
+            .collect();
+        let mut seen = vec![false; world];
+        let mut missed = vec![false; world];
+        let mut retried = vec![false; world];
+        let mut got: Vec<WorkerReport> = Vec::new();
+        let start = Instant::now();
+        loop {
+            let now = start.elapsed();
+            let mut next_deadline: Option<Duration> = None;
+            for r in 0..world {
+                if !expected[r] || seen[r] || missed[r] {
+                    continue;
                 }
-                Ok(_) => continue, // stale report from a previous job
-                Err(_) => {
-                    // Timeout: every alive rank that hasn't reported is dead.
-                    for (r, alive) in self.alive.iter_mut().enumerate() {
-                        if *alive && !seen[r] {
-                            *alive = false;
+                if !matches!(self.ranks[r].state, RankState::Alive | RankState::Suspect) {
+                    continue; // state moved on (e.g. re-syncing)
+                }
+                let misses = self.ranks[r].misses;
+                if misses > 0 && !retried[r] {
+                    retried[r] = true;
+                    self.stats.retries += 1;
+                }
+                let deadline = self.timeout * backoff_multiplier(misses, self.backoff_cap);
+                if now >= deadline {
+                    missed[r] = true;
+                    self.tick_miss(r);
+                } else {
+                    next_deadline = Some(next_deadline.map_or(deadline, |d| d.min(deadline)));
+                }
+            }
+            let Some(deadline) = next_deadline else { break };
+            let wait = deadline.saturating_sub(start.elapsed()).max(Duration::from_millis(1));
+            match self.rx.recv_timeout(wait) {
+                Ok(rep) => self.route_report(rep, job, &mut seen, &mut got),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    for r in 0..world {
+                        if expected[r] && !seen[r] && !missed[r] {
+                            self.kill(r);
                         }
                     }
                     break;
@@ -126,7 +384,10 @@ impl Coordinator {
 
     /// Broadcast a profile job and aggregate the rank measurements.
     /// Collectives complete when their slowest rank does, so per-op comm
-    /// times and totals aggregate with `max` across ranks.
+    /// times and totals aggregate with `max` across ranks. Corrupt
+    /// (NaN/negative) measurements are rejected before aggregation.
+    /// Returns `None` when no rank is reachable or no sane measurement
+    /// arrived.
     pub fn profile(
         &mut self,
         group: &Arc<OverlapGroup>,
@@ -135,16 +396,20 @@ impl Coordinator {
     ) -> Option<GroupMeasurement> {
         let g = Arc::clone(group);
         let c = Arc::clone(configs);
-        let job = self.broadcast(move |job| LeaderMsg::Profile {
+        let (job, _sent) = self.broadcast(move |job| LeaderMsg::Profile {
             job,
             group: Arc::clone(&g),
             configs: Arc::clone(&c),
             reps,
-        });
+        })?;
         let reports = self.collect(job);
         let mut agg: Option<GroupMeasurement> = None;
         for rep in reports {
             if let ReportPayload::Measurement(m) = rep.payload {
+                if !measurement_is_sane(&m) {
+                    self.stats.corrupt_rejected += 1;
+                    continue;
+                }
                 agg = Some(match agg {
                     None => m,
                     Some(mut a) => {
@@ -162,35 +427,104 @@ impl Coordinator {
         agg
     }
 
-    /// Commit a config set to all ranks and wait for acknowledgements;
-    /// returns the number of ranks that acked.
-    pub fn commit(&mut self, configs: Vec<CommConfig>) -> usize {
+    /// Quorum commit: broadcast the config set with the target epoch and
+    /// count acks that echo it. On quorum the leader state advances; on
+    /// failure the commit **rolls back** — `commit_epoch` is not bumped,
+    /// and every non-dead rank whose epoch diverged (including ones that
+    /// adopted the aborted epoch) is re-synced to the committed state.
+    pub fn try_commit(&mut self, configs: Vec<CommConfig>) -> CommitOutcome {
+        let target = self.commit_epoch + 1;
         let arc = Arc::new(configs.clone());
-        let job = self.broadcast(move |job| LeaderMsg::Commit { job, configs: Arc::clone(&arc) });
+        let Some((job, sent)) = self.broadcast(move |job| LeaderMsg::Commit {
+            job,
+            configs: Arc::clone(&arc),
+            epoch: target,
+        }) else {
+            return CommitOutcome { acks: 0, sent: 0, committed: false, epoch: self.commit_epoch };
+        };
         let acks = self
             .collect(job)
             .into_iter()
-            .filter(|r| matches!(r.payload, ReportPayload::Ack { .. }))
+            .filter(|r| matches!(r.payload, ReportPayload::Ack { epoch } if epoch == target))
             .count();
-        if acks > 0 {
+        let committed = acks >= self.commit_policy.quorum(sent);
+        if committed {
             self.committed = configs;
-            self.commit_epoch += 1;
+            self.commit_epoch = target;
+        } else {
+            self.stats.commit_rollbacks += 1;
+            for r in 0..self.ranks.len() {
+                if self.ranks[r].state != RankState::Dead
+                    && self.ranks[r].epoch != self.commit_epoch
+                {
+                    self.begin_resync(r);
+                }
+            }
         }
-        acks
+        CommitOutcome { acks, sent, committed, epoch: self.commit_epoch }
     }
 
-    /// Ping all ranks; returns how many replied.
+    /// Commit under the configured policy; returns the number of ranks
+    /// that acked the target epoch (the pre-quorum signature, kept for
+    /// callers that only need the count).
+    pub fn commit(&mut self, configs: Vec<CommConfig>) -> usize {
+        self.try_commit(configs).acks
+    }
+
+    /// Ping all responsive ranks; returns how many replied. Short-circuits
+    /// to 0 on an empty world.
     pub fn ping(&mut self) -> usize {
-        let job = self.broadcast(|job| LeaderMsg::Ping { job });
+        let Some((job, _sent)) = self.broadcast(|job| LeaderMsg::Ping { job }) else {
+            return 0;
+        };
         self.collect(job).len()
     }
 
-    /// Orderly shutdown; joins worker threads.
-    pub fn shutdown(mut self) {
-        for (r, tx) in self.txs.iter().enumerate() {
-            if self.alive[r] {
-                let _ = tx.send(LeaderMsg::Shutdown);
+    /// Wait for in-flight `Sync` replays to be acknowledged (up to
+    /// `wait`); returns how many ranks completed their rejoin.
+    pub fn drain_rejoins(&mut self, wait: Duration) -> usize {
+        let deadline = Instant::now() + wait;
+        let mut completed = 0usize;
+        while self.ranks.iter().any(|h| h.pending_sync.is_some()) {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
             }
+            match self.rx.recv_timeout((deadline - now).min(self.timeout)) {
+                Ok(rep) => {
+                    let r = rep.rank as usize;
+                    if r < self.ranks.len() && self.ranks[r].pending_sync == Some(rep.job) {
+                        if let ReportPayload::Ack { epoch } = rep.payload {
+                            if self.finish_resync(r, epoch) {
+                                completed += 1;
+                            }
+                        }
+                    }
+                    // Stale reports from old jobs are discarded here.
+                }
+                Err(_) => break,
+            }
+        }
+        completed
+    }
+
+    /// Re-sync every divergent rank and wait for the replays to complete;
+    /// returns how many ranks rejoined.
+    pub fn resync_divergent(&mut self, wait: Duration) -> usize {
+        for r in 0..self.ranks.len() {
+            if self.ranks[r].state != RankState::Dead && self.ranks[r].epoch != self.commit_epoch {
+                self.begin_resync(r);
+            }
+        }
+        self.drain_rejoins(wait)
+    }
+
+    /// Orderly shutdown; joins worker threads. Shutdown is sent to every
+    /// rank regardless of state — a muted or rejoining worker thread must
+    /// still exit.
+    pub fn shutdown(mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(LeaderMsg::Shutdown);
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -199,27 +533,94 @@ impl Coordinator {
 }
 
 /// [`ProfileBackend`] over the coordinator: tuners run unchanged on the
-/// distributed measurement path.
+/// distributed measurement path. When the quorum collapses (fewer than
+/// `min_alive` responsive ranks, or a profile round yields no sane
+/// measurement) it degrades gracefully: the measurement is served by the
+/// leader's local simulator and tagged as a fallback in the
+/// [`HealthReport`] instead of panicking.
 pub struct DistributedProfiler {
     pub coord: Coordinator,
     pub reps: u32,
+    /// Responsive-rank floor below which profiling skips the distributed
+    /// path entirely.
+    pub min_alive: usize,
     calls: u64,
+    fallbacks: u64,
+    fallback_env: SimEnv,
+    scratch: SimScratch,
 }
 
 impl DistributedProfiler {
     pub fn new(coord: Coordinator) -> Self {
-        DistributedProfiler { coord, reps: 3, calls: 0 }
+        // The fallback simulator is the leader's own rank-local view:
+        // same cluster, a seed decorrelated from every worker's stream.
+        let fallback_env =
+            SimEnv::new(coord.cluster.clone(), coord.seed ^ 0xFA11_BACC_0FF1_CE00);
+        DistributedProfiler {
+            coord,
+            reps: 3,
+            min_alive: 1,
+            calls: 0,
+            fallbacks: 0,
+            fallback_env,
+            scratch: SimScratch::new(),
+        }
+    }
+
+    /// Measurements served by the local simulator instead of the ranks.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks
+    }
+
+    /// Coordinator health, with this profiler's fallback count attached.
+    pub fn health_report(&self) -> HealthReport {
+        let mut hr = self.coord.health_report();
+        hr.fallbacks = self.fallbacks;
+        hr
+    }
+
+    /// Degraded-mode measurement on the leader's local simulator (same
+    /// averaging loop as the distributed workers run).
+    fn profile_local(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> GroupMeasurement {
+        let reps = self.reps.max(1);
+        let mut comm_times = vec![0.0; group.comms.len()];
+        let mut comp_total = 0.0;
+        let mut comm_total = 0.0;
+        let mut makespan = 0.0;
+        for _ in 0..reps {
+            let r = simulate_group_summary(group, configs, &mut self.fallback_env, &mut self.scratch);
+            for (acc, t) in comm_times.iter_mut().zip(self.scratch.comm_times()) {
+                *acc += t;
+            }
+            comp_total += r.comp_total;
+            comm_total += r.comm_total;
+            makespan += r.makespan;
+        }
+        let n = reps as f64;
+        for t in &mut comm_times {
+            *t /= n;
+        }
+        GroupMeasurement {
+            comm_times,
+            comp_total: comp_total / n,
+            comm_total: comm_total / n,
+            makespan: makespan / n,
+        }
     }
 }
 
 impl ProfileBackend for DistributedProfiler {
     fn profile_group(&mut self, group: &OverlapGroup, configs: &[CommConfig]) -> GroupMeasurement {
         self.calls += 1;
-        let g = Arc::new(group.clone());
-        let c = Arc::new(configs.to_vec());
-        self.coord
-            .profile(&g, &c, self.reps)
-            .expect("all ranks failed during profiling")
+        if self.coord.responsive_ranks() >= self.min_alive.max(1) {
+            let g = Arc::new(group.clone());
+            let c = Arc::new(configs.to_vec());
+            if let Some(m) = self.coord.profile(&g, &c, self.reps) {
+                return m;
+            }
+        }
+        self.fallbacks += 1;
+        self.profile_local(group, configs)
     }
 
     fn calls(&self) -> u64 {
@@ -285,28 +686,131 @@ mod tests {
         assert_eq!(acks, 8);
         assert_eq!(coord.commit_epoch(), 1);
         assert_eq!(coord.committed_configs().len(), 1);
+        assert!(coord.epoch_divergence().is_empty());
         coord.shutdown();
     }
 
     #[test]
-    fn dead_worker_detected_and_excluded() {
+    fn mute_worker_walks_the_lifecycle_before_exclusion() {
         let cl = ClusterSpec::cluster_b(1);
         let mut faults = vec![FaultPlan::healthy(); 8];
-        faults[5] = FaultPlan::dies_after(1);
+        // Permanently mute after its first job: the thread stays alive and
+        // keeps consuming, so death can only come from missed deadlines.
+        faults[5] = FaultPlan::transient(1, u64::MAX);
         let mut coord = Coordinator::spawn(&cl, 2, &faults);
-        coord.timeout = Duration::from_millis(300);
+        coord.timeout = Duration::from_millis(100);
+        coord.backoff_cap = 2;
         let g = Arc::new(group());
         let c = Arc::new(vec![CommConfig::default_ring()]);
         // Job 1 succeeds on all ranks.
         assert!(coord.profile(&g, &c, 1).is_some());
         assert_eq!(coord.alive_ranks(), 8);
-        // Job 2: rank 5 is dead → timeout marks it, 7 remain.
+        // Job 2: rank 5 goes mute; one missed deadline only suspects it.
         assert!(coord.profile(&g, &c, 1).is_some());
+        assert_eq!(coord.rank_state(5), RankState::Suspect);
         assert_eq!(coord.alive_ranks(), 7);
-        // Job 3 proceeds without waiting on the dead rank.
+        assert_eq!(coord.responsive_ranks(), 8, "suspects still receive jobs");
+        // Misses 2 and 3 (suspect_threshold) declare it dead.
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert_eq!(coord.rank_state(5), RankState::Suspect);
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert_eq!(coord.rank_state(5), RankState::Dead);
+        assert_eq!(coord.responsive_ranks(), 7);
+        // Subsequent jobs no longer wait on the dead rank.
         let t0 = std::time::Instant::now();
         assert!(coord.profile(&g, &c, 1).is_some());
-        assert!(t0.elapsed() < Duration::from_millis(250), "no timeout on healthy path");
+        assert!(t0.elapsed() < Duration::from_millis(90), "no deadline on healthy path");
+        let hr = coord.health_report();
+        assert_eq!(hr.stats.deaths, 1);
+        assert!(hr.stats.suspects >= 1);
+        assert!(hr.stats.retries >= 1, "the suspect was retried with backoff");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn crashed_worker_send_failure_marks_dead() {
+        let cl = ClusterSpec::cluster_b(1);
+        let mut faults = vec![FaultPlan::healthy(); 8];
+        faults[5] = FaultPlan::dies_after(1);
+        let mut coord = Coordinator::spawn(&cl, 2, &faults);
+        coord.timeout = Duration::from_millis(150);
+        let g = Arc::new(group());
+        let c = Arc::new(vec![CommConfig::default_ring()]);
+        // Job 1 succeeds; job 2 is consumed by the dying thread (suspect).
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert_eq!(coord.rank_state(5), RankState::Suspect);
+        // Job 3: the thread is gone, so the send fails — immediately dead,
+        // without burning the remaining suspect deadlines.
+        let t0 = std::time::Instant::now();
+        assert!(coord.profile(&g, &c, 1).is_some());
+        assert_eq!(coord.rank_state(5), RankState::Dead);
+        assert!(t0.elapsed() < Duration::from_millis(120), "no deadline spent on a closed channel");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn missed_commit_reports_divergence_until_resync() {
+        let cl = ClusterSpec::cluster_b(1);
+        let mut faults = vec![FaultPlan::healthy(); 8];
+        // Mute exactly the first work message: the commit is consumed but
+        // neither adopted nor acked.
+        faults[6] = FaultPlan::transient(0, 1);
+        let mut coord = Coordinator::spawn(&cl, 5, &faults);
+        coord.timeout = Duration::from_millis(150);
+        let out = coord.try_commit(vec![CommConfig::default_ring()]);
+        assert!(out.committed, "7/8 acks satisfy the majority quorum");
+        assert_eq!(out.acks, 7);
+        assert_eq!(out.sent, 8);
+        assert_eq!(coord.commit_epoch(), 1);
+        assert_eq!(coord.epoch_divergence(), vec![6]);
+        assert_eq!(coord.rank_state(6), RankState::Suspect);
+        // Re-sync replays the committed epoch; divergence clears.
+        assert_eq!(coord.resync_divergent(Duration::from_secs(5)), 1);
+        assert!(coord.epoch_divergence().is_empty());
+        assert_eq!(coord.rank_state(6), RankState::Alive);
+        assert_eq!(coord.health_report().stats.rejoins, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn corrupt_measurements_are_rejected_from_aggregates() {
+        let cl = ClusterSpec::cluster_b(1);
+        let mut faults = vec![FaultPlan::healthy(); 8];
+        faults[1] = FaultPlan { corrupt_prob: 1.0, chaos_seed: 7, ..FaultPlan::healthy() };
+        let mut coord = Coordinator::spawn(&cl, 4, &faults);
+        let g = Arc::new(group());
+        let c = Arc::new(vec![CommConfig::default_ring()]);
+        for _ in 0..4 {
+            let m = coord.profile(&g, &c, 1).expect("healthy majority still measures");
+            assert!(m.makespan.is_finite() && m.makespan > 0.0);
+            assert!(m.comm_total.is_finite() && m.comm_total >= 0.0);
+            assert!(m.comm_times.iter().all(|t| t.is_finite() && *t >= 0.0));
+        }
+        assert_eq!(coord.health_report().stats.corrupt_rejected, 4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_quorum_rolls_back_the_epoch() {
+        let cl = ClusterSpec::cluster_b(1);
+        // 5 of 8 ranks mute the first work message: 3 acks < majority(8).
+        let mut faults = vec![FaultPlan::healthy(); 8];
+        for f in faults.iter_mut().take(5) {
+            *f = FaultPlan::transient(0, 1);
+        }
+        let mut coord = Coordinator::spawn(&cl, 6, &faults);
+        coord.timeout = Duration::from_millis(150);
+        let out = coord.try_commit(vec![CommConfig::default_ring()]);
+        assert!(!out.committed);
+        assert_eq!(out.acks, 3);
+        assert_eq!(coord.commit_epoch(), 0, "failed quorum must not bump the epoch");
+        assert!(coord.committed_configs().is_empty());
+        assert_eq!(coord.health_report().stats.commit_rollbacks, 1);
+        // The 3 ranks that adopted the aborted epoch were re-synced back
+        // to epoch 0; after the replays settle nothing diverges.
+        coord.drain_rejoins(Duration::from_secs(5));
+        assert!(coord.epoch_divergence().is_empty());
         coord.shutdown();
     }
 
@@ -321,6 +825,7 @@ mod tests {
         let r = LagomTuner::new(cl).tune_schedule(&s, &mut backend);
         assert_eq!(r.configs.len(), 1);
         assert!(backend.calls() > 0);
+        assert_eq!(backend.fallbacks(), 0, "healthy world never falls back");
         backend.coord.shutdown();
     }
 }

@@ -8,14 +8,22 @@
 //!
 //! Here every rank is an OS thread owning its own simulator instance with
 //! rank-specific noise; the message protocol, config state machine,
-//! aggregation and failure handling are the real thing. The leader exposes
-//! [`DistributedProfiler`], a [`ProfileBackend`] — so any tuner can run
-//! either locally or over the coordinator unchanged.
+//! aggregation and failure handling are the real thing. Fault tolerance is
+//! first-class: a per-rank lifecycle (`Alive → Suspect → Dead`, with
+//! `Rejoining` re-sync — see [`health`]), quorum commits with rollback,
+//! deterministic chaos injection via [`FaultPlan`], and graceful
+//! degradation to a local measurement when the quorum collapses. The
+//! leader exposes [`DistributedProfiler`], a [`ProfileBackend`] — so any
+//! tuner can run either locally or over the coordinator unchanged.
+//!
+//! [`ProfileBackend`]: crate::profiler::ProfileBackend
 
+pub mod health;
 pub mod leader;
 pub mod msg;
 pub mod worker;
 
+pub use health::{CommitOutcome, CommitPolicy, HealthReport, HealthStats, RankState};
 pub use leader::{Coordinator, DistributedProfiler};
-pub use msg::{FaultPlan, JobId, LeaderMsg, WorkerReport};
+pub use msg::{FaultPlan, JobId, LeaderMsg, ReportPayload, WorkerReport};
 pub use worker::worker_main;

@@ -21,7 +21,13 @@ pub enum LeaderMsg {
     },
     /// Commit a tuned config set as the active state (Fig 6 step d: the
     /// accepted config is appended to the communication's config list).
-    Commit { job: JobId, configs: Arc<Vec<CommConfig>> },
+    /// `epoch` is the leader's *target* epoch; the worker adopts it and
+    /// echoes it in the Ack, which is what the quorum counts.
+    Commit { job: JobId, configs: Arc<Vec<CommConfig>>, epoch: u64 },
+    /// Re-sync a rejoining rank: replay the committed config set and
+    /// epoch. Control-plane only — it does not count as a chaos "job" and
+    /// its Ack is never dropped, so a rank can always finish rejoining.
+    Sync { job: JobId, configs: Arc<Vec<CommConfig>>, epoch: u64 },
     /// Liveness probe.
     Ping { job: JobId },
     /// Orderly shutdown.
@@ -39,29 +45,133 @@ pub struct WorkerReport {
 #[derive(Debug, Clone)]
 pub enum ReportPayload {
     Measurement(GroupMeasurement),
-    /// Acknowledgement of Commit/Ping, echoing the worker's config epoch.
+    /// Acknowledgement of Commit/Sync/Ping, echoing the worker's config
+    /// epoch.
     Ack { epoch: u64 },
 }
 
-/// Failure-injection plan for a worker (tests + robustness benches).
-#[derive(Debug, Clone, Copy, Default)]
+/// Failure-injection plan for a worker (tests, chaos property tests,
+/// robustness benches). All chaos is deterministic: probabilistic effects
+/// draw from a worker-local PRNG seeded from `chaos_seed` and the rank,
+/// and window/flap effects key off the worker's own job ordinal — so the
+/// same plan vector and seeds replay the same fault schedule exactly.
+#[derive(Debug, Clone, Copy)]
 pub struct FaultPlan {
     /// Worker stops responding after this many jobs (None = healthy).
     pub die_after_jobs: Option<u64>,
     /// Multiplies this rank's measured times (straggler).
     pub straggle_factor: f64,
+    /// Half-open `[from, to)` window of worker-local job ordinals during
+    /// which the worker consumes messages but never replies (transient
+    /// unresponsiveness — the rank is healthy before and after).
+    pub unresponsive_window: Option<(u64, u64)>,
+    /// Flapping: mute for every other run of `period` jobs (ordinals
+    /// where `(ordinal / period) % 2 == 1`).
+    pub flap_period: Option<u64>,
+    /// Probability a reply (measurement or Commit/Ping ack) is dropped.
+    pub drop_prob: f64,
+    /// Probability a measurement is corrupted (NaN or negative fields)
+    /// before being reported; the leader must reject these.
+    pub corrupt_prob: f64,
+    /// Seed for the worker-local chaos PRNG (mixed with the rank).
+    pub chaos_seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::healthy()
+    }
 }
 
 impl FaultPlan {
     pub fn healthy() -> FaultPlan {
-        FaultPlan { die_after_jobs: None, straggle_factor: 1.0 }
+        FaultPlan {
+            die_after_jobs: None,
+            straggle_factor: 1.0,
+            unresponsive_window: None,
+            flap_period: None,
+            drop_prob: 0.0,
+            corrupt_prob: 0.0,
+            chaos_seed: 0,
+        }
     }
 
     pub fn straggler(factor: f64) -> FaultPlan {
-        FaultPlan { die_after_jobs: None, straggle_factor: factor }
+        FaultPlan { straggle_factor: factor, ..FaultPlan::healthy() }
     }
 
     pub fn dies_after(jobs: u64) -> FaultPlan {
-        FaultPlan { die_after_jobs: Some(jobs), straggle_factor: 1.0 }
+        FaultPlan { die_after_jobs: Some(jobs), ..FaultPlan::healthy() }
+    }
+
+    /// Transiently unresponsive for job ordinals in `[from, to)`.
+    pub fn transient(from: u64, to: u64) -> FaultPlan {
+        FaultPlan { unresponsive_window: Some((from, to)), ..FaultPlan::healthy() }
+    }
+
+    /// Mute every other run of `period` jobs.
+    pub fn flapping(period: u64) -> FaultPlan {
+        FaultPlan { flap_period: Some(period.max(1)), ..FaultPlan::healthy() }
+    }
+
+    /// Whether the worker is permanently dead at job ordinal `ord`.
+    pub fn killed(&self, ord: u64) -> bool {
+        self.die_after_jobs.map_or(false, |limit| ord >= limit)
+    }
+
+    /// Whether the worker is (transiently) mute at job ordinal `ord`.
+    pub fn unresponsive(&self, ord: u64) -> bool {
+        if let Some((from, to)) = self.unresponsive_window {
+            if ord >= from && ord < to {
+                return true;
+            }
+        }
+        if let Some(period) = self.flap_period {
+            let period = period.max(1);
+            if (ord / period) % 2 == 1 {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn killed_is_permanent_from_the_limit() {
+        let f = FaultPlan::dies_after(3);
+        assert!(!f.killed(2));
+        assert!(f.killed(3));
+        assert!(f.killed(100));
+        assert!(!FaultPlan::healthy().killed(u64::MAX));
+    }
+
+    #[test]
+    fn transient_window_is_half_open() {
+        let f = FaultPlan::transient(1, 3);
+        assert!(!f.unresponsive(0));
+        assert!(f.unresponsive(1));
+        assert!(f.unresponsive(2));
+        assert!(!f.unresponsive(3));
+    }
+
+    #[test]
+    fn flapping_alternates_runs_of_period() {
+        let f = FaultPlan::flapping(2);
+        let mute: Vec<bool> = (0..8).map(|o| f.unresponsive(o)).collect();
+        assert_eq!(mute, vec![false, false, true, true, false, false, true, true]);
+    }
+
+    #[test]
+    fn default_is_healthy() {
+        let f = FaultPlan::default();
+        assert!(f.die_after_jobs.is_none());
+        assert_eq!(f.straggle_factor, 1.0);
+        assert!(!f.unresponsive(0));
+        assert_eq!(f.drop_prob, 0.0);
+        assert_eq!(f.corrupt_prob, 0.0);
     }
 }

@@ -1,13 +1,26 @@
 //! Worker rank: owns a simulator instance, executes profile jobs, tracks
-//! the committed config epoch.
+//! the committed config epoch, and replays its deterministic chaos plan
+//! (transient mute windows, flapping, reply drops, measurement corruption).
 
 use super::msg::{FaultPlan, LeaderMsg, ReportPayload, WorkerReport};
 use crate::profiler::GroupMeasurement;
 use crate::sim::{simulate_group_summary, SimEnv, SimScratch};
+use crate::util::prng::Prng;
 use std::sync::mpsc::{Receiver, Sender};
 
 /// Worker thread main loop. Returns when `Shutdown` arrives, the channel
 /// closes, or the fault plan kills it.
+///
+/// Chaos semantics, in the order they apply to a message:
+/// 1. `fault.killed(ordinal)` — permanent crash: stop consuming, return.
+/// 2. `fault.unresponsive(ordinal)` — transient mute: the message is
+///    consumed (and Profile/Commit still advance the ordinal, so windows
+///    make progress) but nothing is replied and no epoch is adopted.
+/// 3. `corrupt_prob` — a computed measurement is poisoned (NaN makespan
+///    or negative comm total) before sending; the leader must reject it.
+/// 4. `drop_prob` — the reply is computed but never sent (lost on the
+///    wire). `Sync` acks are exempt: re-sync is control-plane replay, and
+///    dropping its ack could pin a rank in `Rejoining` forever.
 pub fn worker_main(
     rank: u32,
     mut env: SimEnv,
@@ -15,20 +28,26 @@ pub fn worker_main(
     rx: Receiver<LeaderMsg>,
     tx: Sender<WorkerReport>,
 ) {
-    let mut jobs_done = 0u64;
+    // Work-message ordinal: Profile and Commit advance it (they are the
+    // "jobs" fault windows are defined over); Ping and Sync do not.
+    let mut jobs_seen = 0u64;
     let mut epoch = 0u64;
+    // Deterministic per-rank chaos stream: same plan + rank => same faults.
+    let mut chaos = Prng::new(fault.chaos_seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
     // Engine scratch reused across every profile job this rank executes.
     let mut scratch = SimScratch::new();
     while let Ok(msg) = rx.recv() {
-        if let Some(limit) = fault.die_after_jobs {
-            if jobs_done >= limit {
-                // Simulated crash: stop replying (leader times out on us).
-                return;
-            }
+        if fault.killed(jobs_seen) {
+            // Simulated crash: stop replying (leader times out on us).
+            return;
         }
         match msg {
             LeaderMsg::Profile { job, group, configs, reps } => {
-                jobs_done += 1;
+                let ordinal = jobs_seen;
+                jobs_seen += 1;
+                if fault.unresponsive(ordinal) {
+                    continue;
+                }
                 let reps = reps.max(1);
                 let mut comm_times = vec![0.0; group.comms.len()];
                 let mut comp_total = 0.0;
@@ -47,12 +66,22 @@ pub fn worker_main(
                 for t in &mut comm_times {
                     *t /= n;
                 }
-                let m = GroupMeasurement {
+                let mut m = GroupMeasurement {
                     comm_times,
                     comp_total: comp_total / n,
                     comm_total: comm_total / n,
                     makespan: makespan / n,
                 };
+                if fault.corrupt_prob > 0.0 && chaos.next_f64() < fault.corrupt_prob {
+                    if chaos.next_u64() & 1 == 0 {
+                        m.makespan = f64::NAN;
+                    } else {
+                        m.comm_total = -1.0;
+                    }
+                }
+                if fault.drop_prob > 0.0 && chaos.next_f64() < fault.drop_prob {
+                    continue; // reply lost on the wire
+                }
                 if tx
                     .send(WorkerReport { job, rank, payload: ReportPayload::Measurement(m) })
                     .is_err()
@@ -60,9 +89,27 @@ pub fn worker_main(
                     return; // leader gone
                 }
             }
-            LeaderMsg::Commit { job, configs: _ } => {
-                jobs_done += 1;
-                epoch += 1;
+            LeaderMsg::Commit { job, configs: _, epoch: e } => {
+                let ordinal = jobs_seen;
+                jobs_seen += 1;
+                if fault.unresponsive(ordinal) {
+                    continue; // commit lost: this rank's epoch now diverges
+                }
+                epoch = e;
+                if fault.drop_prob > 0.0 && chaos.next_f64() < fault.drop_prob {
+                    continue; // epoch adopted, but the ack is lost
+                }
+                if tx
+                    .send(WorkerReport { job, rank, payload: ReportPayload::Ack { epoch } })
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            LeaderMsg::Sync { job, configs: _, epoch: e } => {
+                // Control-plane replay of the committed state: always
+                // adopt and always ack (see the drop exemption above).
+                epoch = e;
                 if tx
                     .send(WorkerReport { job, rank, payload: ReportPayload::Ack { epoch } })
                     .is_err()
@@ -71,6 +118,12 @@ pub fn worker_main(
                 }
             }
             LeaderMsg::Ping { job } => {
+                if fault.unresponsive(jobs_seen) {
+                    continue;
+                }
+                if fault.drop_prob > 0.0 && chaos.next_f64() < fault.drop_prob {
+                    continue;
+                }
                 if tx
                     .send(WorkerReport { job, rank, payload: ReportPayload::Ack { epoch } })
                     .is_err()

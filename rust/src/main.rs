@@ -17,6 +17,7 @@ use lagom::bench::Table;
 use lagom::campaign::{run_campaign, scenario_grid, CampaignConfig, Leaderboard, ResultCache};
 use lagom::cli::Args;
 use lagom::comm::{CommConfig, ParamSpace};
+use lagom::coordinator::{CommitPolicy, Coordinator, DistributedProfiler, FaultPlan};
 use lagom::eval::{make_evaluator_opts, EvalMode, EvalOpts};
 use lagom::hw::ClusterSpec;
 use lagom::models::ModelSpec;
@@ -30,7 +31,7 @@ use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
 use lagom::util::units::fmt_secs;
 
 fn main() {
-    let args = match Args::from_env(&["help", "verbose", "no-plan", "no-soa"]) {
+    let args = match Args::from_env(&["help", "verbose", "no-plan", "no-soa", "distributed"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -101,6 +102,19 @@ COMMON OPTIONS:
                                     results identical, only slower)
   --mbs N  --seed N  --out PATH  --layers N (truncate model for speed)
 
+DISTRIBUTED TUNING (tune --distributed):
+  --distributed                     tune over the fault-tolerant leader/worker
+                                    coordinator (one thread per rank) instead
+                                    of a process-local profiler, then
+                                    quorum-commit the tuned configs
+  --commit-policy any|majority|all  acks required before a config commit
+                                    takes effect (default majority; a failed
+                                    quorum rolls the epoch back)
+  --suspect-threshold N             consecutive missed deadlines before a
+                                    Suspect rank is declared Dead (default 3)
+  --casualties N                    inject N ranks that die mid-tuning, to
+                                    exercise degraded-mode behaviour
+
 CAMPAIGN OPTIONS:
   --out PATH      leaderboard JSON (default target/leaderboard.json)
   --cache PATH    result cache file (default target/campaign_cache.json)
@@ -108,6 +122,12 @@ CAMPAIGN OPTIONS:
   --eval-jobs N   candidate-evaluation threads per scenario (default 1;
                   composes: scenarios x in-scenario candidates)
   --layers N      per-model depth cap (default 4; 0 = full depth)
+  --checkpoint-every N  persist the result cache after every N freshly
+                  measured scenarios (default 0 = only at the end); saves
+                  are atomic, so a killed campaign resumes from its last
+                  checkpoint with identical results
+  --retry-scenarios N   extra attempts for a scenario whose measurement
+                  panics before it is reported as failed (default 1)
 "
     );
 }
@@ -191,7 +211,82 @@ fn cmd_workloads(_args: &Args) -> i32 {
     0
 }
 
+/// `tune --distributed`: run the tuner over the fault-tolerant coordinator
+/// (one worker thread per rank) instead of a process-local profiler, then
+/// quorum-commit the tuned configs and print the world's health.
+fn cmd_tune_distributed(args: &Args) -> i32 {
+    let cluster = run_or_exit(cluster_of(args));
+    let w = run_or_exit(parse_workload(args, &cluster));
+    let seed = run_or_exit(args.get_u64("seed", 42));
+    let policy_name = args.get_or("commit-policy", "majority");
+    let policy = run_or_exit(CommitPolicy::parse(policy_name).ok_or_else(|| {
+        format!("unknown commit policy {policy_name} (expected any|majority|all)")
+    }));
+    let suspect_threshold = run_or_exit(args.get_u64("suspect-threshold", 3)) as u32;
+    let casualties = run_or_exit(args.get_u64("casualties", 0)) as usize;
+    let world = cluster.world_size() as usize;
+    if casualties > world {
+        eprintln!("error: --casualties {casualties} exceeds world size {world}");
+        return 2;
+    }
+
+    let schedule = build_schedule(&w, &cluster);
+    println!(
+        "workload {} on {} ({} ranks, {} policy): {} groups, {} comms",
+        w.label(),
+        cluster.name,
+        world,
+        policy.as_str(),
+        schedule.groups.len(),
+        schedule.num_comms()
+    );
+    // Injected casualties die a few jobs in, staggered so the lifecycle
+    // (Suspect -> Dead) is visible in the health summary.
+    let mut faults = vec![FaultPlan::healthy(); world];
+    for (r, f) in faults.iter_mut().take(casualties).enumerate() {
+        *f = FaultPlan::dies_after(5 + r as u64);
+    }
+    let mut coord = Coordinator::spawn(&cluster, seed, &faults);
+    coord.commit_policy = policy;
+    coord.suspect_threshold = suspect_threshold.max(1);
+    let mut backend = DistributedProfiler::new(coord);
+
+    let mut tuner = LagomTuner::new(cluster.clone());
+    let t0 = std::time::Instant::now();
+    let r = tuner.tune_schedule(&schedule, &mut backend);
+    let iter = evaluate(&schedule, &r.configs, &cluster, w.micro_steps(), seed ^ 1);
+    println!(
+        "{}: tuned in {} over the coordinator ({} tuning iterations, {} profile jobs)",
+        tuner.name(),
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        r.iterations,
+        r.profile_calls
+    );
+    println!("iteration time: {}", fmt_secs(iter));
+
+    let out = backend.coord.try_commit(r.configs.clone());
+    println!(
+        "commit: {}/{} acks (epoch {}, {} policy) -> {}",
+        out.acks,
+        out.sent,
+        out.epoch,
+        policy.as_str(),
+        if out.committed { "committed" } else { "rolled back" }
+    );
+    backend.coord.drain_rejoins(std::time::Duration::from_secs(2));
+    println!("health: {}", backend.health_report().summary());
+    backend.coord.shutdown();
+    if out.committed {
+        0
+    } else {
+        1
+    }
+}
+
 fn cmd_tune(args: &Args) -> i32 {
+    if args.flag("distributed") {
+        return cmd_tune_distributed(args);
+    }
     let cluster = run_or_exit(cluster_of(args));
     let w = run_or_exit(parse_workload(args, &cluster));
     let seed = run_or_exit(args.get_u64("seed", 42));
@@ -313,6 +408,8 @@ fn cmd_campaign(args: &Args) -> i32 {
     let eval_jobs = run_or_exit(args.get_u64("eval-jobs", 1)) as usize;
     let layers = run_or_exit(args.get_u64("layers", 4)) as u32;
     let fidelity = run_or_exit(fidelity_of(args));
+    let checkpoint_every = run_or_exit(args.get_u64("checkpoint-every", 0));
+    let scenario_retries = run_or_exit(args.get_u64("retry-scenarios", 1)) as u32;
     let max_layers = if layers == 0 { None } else { Some(layers) };
     let out = args.get_or("out", "target/leaderboard.json").to_string();
     let cache_path = args.get_or("cache", "target/campaign_cache.json").to_string();
@@ -327,6 +424,8 @@ fn cmd_campaign(args: &Args) -> i32 {
         eval_plan: !args.flag("no-plan"),
         eval_soa: !args.flag("no-soa"),
         fidelity,
+        scenario_retries,
+        checkpoint_every,
         ..CampaignConfig::default()
     };
     println!(
@@ -351,6 +450,9 @@ fn cmd_campaign(args: &Args) -> i32 {
         "geomean speedup — Lagom vs NCCL: {:.3}x, Lagom vs AutoCCL: {:.3}x",
         lb.geomean_lagom_vs_nccl, lb.geomean_lagom_vs_autoccl
     );
+    for (id, msg) in &result.failed {
+        eprintln!("warning: scenario {id} failed every attempt: {msg}");
+    }
     if let Err(e) = cache.save() {
         eprintln!("warning: could not persist cache {cache_path}: {e}");
     }

@@ -1,8 +1,10 @@
-//! Failure injection on the coordinator: dead workers, stragglers, and
-//! tuning under degraded membership.
+//! Failure injection on the coordinator: dead workers, stragglers,
+//! transient unresponsiveness, rank rehabilitation, degraded-mode
+//! fallback, tuning under degraded membership, and crash-safe campaign
+//! resume.
 
 use lagom::comm::{CollectiveKind, CommConfig, CommOpDesc};
-use lagom::coordinator::{Coordinator, DistributedProfiler, FaultPlan};
+use lagom::coordinator::{Coordinator, DistributedProfiler, FaultPlan, RankState};
 use lagom::graph::{CompOpDesc, IterationSchedule, OverlapGroup};
 use lagom::hw::ClusterSpec;
 use lagom::profiler::ProfileBackend;
@@ -103,4 +105,146 @@ fn shutdown_is_idempotent_under_faults() {
     coord.timeout = Duration::from_millis(100);
     let _ = coord.ping();
     coord.shutdown(); // must not hang on dead workers
+}
+
+#[test]
+fn transient_unresponsive_rank_is_suspected_rehabilitated_and_resynced() {
+    // A rank that goes silent for two jobs must walk Alive -> Suspect and
+    // back to Alive via re-sync — never through Dead.
+    let cl = ClusterSpec::cluster_b(1);
+    let mut faults = vec![FaultPlan::healthy(); 8];
+    faults[2] = FaultPlan::transient(1, 3); // mute for job ordinals 1 and 2
+    let mut coord = Coordinator::spawn(&cl, 19, &faults);
+    coord.timeout = Duration::from_millis(150);
+    let g = Arc::new(group());
+    let c = Arc::new(vec![CommConfig::default_ring()]);
+
+    // Ordinal 0: everyone healthy.
+    assert!(coord.profile(&g, &c, 1).is_some());
+    assert_eq!(coord.alive_ranks(), 8);
+
+    // Ordinal 1: rank 2 swallows the commit. Quorum still holds, so the
+    // epoch advances without it and the rank shows up as divergent.
+    let out = coord.try_commit(vec![CommConfig::default_ring()]);
+    assert!(out.committed);
+    assert_eq!((out.acks, out.sent, out.epoch), (7, 8, 1));
+    assert_eq!(coord.epoch_divergence(), vec![2]);
+    assert_eq!(coord.rank_state(2), RankState::Suspect);
+
+    // Ordinal 2: still muted — a second miss, but below the death threshold.
+    assert!(coord.profile(&g, &c, 1).is_some());
+    assert_eq!(coord.rank_state(2), RankState::Suspect);
+
+    // Ordinal 3: the rank answers again. Its epoch is stale, so the leader
+    // replays the committed state before counting it alive.
+    assert!(coord.profile(&g, &c, 1).is_some());
+    coord.drain_rejoins(Duration::from_secs(5));
+    assert_eq!(coord.rank_state(2), RankState::Alive);
+    assert!(coord.epoch_divergence().is_empty(), "re-sync reconciled the epoch");
+
+    let hr = coord.health_report();
+    assert_eq!(hr.alive, 8);
+    assert_eq!(hr.stats.deaths, 0, "transient fault must never kill the rank");
+    assert_eq!(hr.stats.rejoins, 1);
+    assert!(hr.stats.suspects >= 1);
+    coord.shutdown();
+}
+
+#[test]
+fn all_ranks_dead_falls_back_to_local_measurement() {
+    // When the whole world dies mid-tuning, the profiler must degrade to a
+    // tagged local measurement instead of panicking.
+    let cl = ClusterSpec::cluster_b(1);
+    let faults = vec![FaultPlan::dies_after(2); 8];
+    let coord = Coordinator::spawn(&cl, 21, &faults);
+    let mut backend = DistributedProfiler::new(coord);
+    backend.coord.timeout = Duration::from_millis(100);
+    backend.reps = 1;
+
+    let mut s = IterationSchedule::new("doomed");
+    s.push(group());
+    let mut tuner = LagomTuner::new(cl.clone());
+    let r = tuner.tune_schedule(&s, &mut backend);
+    assert_eq!(r.configs.len(), 1);
+    let space = lagom::comm::ParamSpace::default();
+    assert!(r.configs[0].nc >= space.nc_min && r.configs[0].nc <= space.nc_max);
+
+    let hr = backend.health_report();
+    assert_eq!(hr.dead, 8, "every rank died");
+    assert_eq!(hr.alive, 0);
+    assert!(hr.fallbacks > 0, "local fallback served the remaining jobs");
+    backend.coord.shutdown();
+}
+
+#[test]
+fn broadcast_on_empty_world_short_circuits() {
+    let cl = ClusterSpec::cluster_b(1);
+    let faults = vec![FaultPlan::dies_after(0); 8];
+    let mut coord = Coordinator::spawn(&cl, 23, &faults);
+    coord.timeout = Duration::from_millis(200);
+    // Round 1: every worker consumes its first message and exits -> all miss.
+    assert_eq!(coord.ping(), 0);
+    // Round 2: the channels are closed, sends fail, every rank is Dead.
+    let _ = coord.ping();
+    assert_eq!(coord.health_report().dead, 8);
+
+    // With nobody left, nothing may burn a timeout or a job id.
+    let g = Arc::new(group());
+    let c = Arc::new(vec![CommConfig::default_ring()]);
+    let t0 = std::time::Instant::now();
+    assert!(coord.profile(&g, &c, 1).is_none());
+    assert_eq!(coord.ping(), 0);
+    let out = coord.try_commit(vec![CommConfig::default_ring()]);
+    assert_eq!((out.acks, out.sent), (0, 0));
+    assert!(!out.committed);
+    assert_eq!(coord.commit_epoch(), 0);
+    assert!(
+        t0.elapsed() < Duration::from_millis(50),
+        "empty world must short-circuit, not wait out deadlines"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn campaign_resumes_from_checkpoint_bitwise_identical() {
+    // Kill a campaign between scenarios (simulated by simply stopping after
+    // a prefix, never calling the final save) and resume it from the
+    // periodic checkpoint: the leaderboard must come out bitwise identical
+    // to an uninterrupted run.
+    use lagom::campaign::{
+        run_campaign, scenario_grid, CampaignConfig, Leaderboard, ResultCache, Scenario,
+    };
+
+    let grid: Vec<Scenario> = scenario_grid(Some(1)).into_iter().take(3).collect();
+    // jobs: 1 keeps checkpoint saves sequential, so the last one on disk
+    // deterministically holds every scenario measured so far.
+    let cfg =
+        CampaignConfig { seed: 4242, jobs: 1, checkpoint_every: 1, ..CampaignConfig::default() };
+
+    // Reference: uninterrupted, purely in-memory.
+    let reference = run_campaign(&grid, &cfg, &ResultCache::in_memory());
+    let reference_json = Leaderboard::from_result(&reference).to_json_canonical().to_pretty();
+
+    let path = std::env::temp_dir().join(format!("lagom_ckpt_resume_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    // "Crashed" run: measure only the first two scenarios. The periodic
+    // checkpoint (every scenario) persists them; we never call save().
+    {
+        let cache = ResultCache::open(&path);
+        let partial = run_campaign(&grid[..2], &cfg, &cache);
+        assert_eq!(partial.outcomes.len(), 2);
+        // cache dropped here without an explicit save — the crash.
+    }
+
+    // Resume: the checkpoint file has both finished scenarios.
+    let cache = ResultCache::open(&path);
+    assert_eq!(cache.len(), 2, "periodic checkpoint survived the crash");
+    let resumed = run_campaign(&grid, &cfg, &cache);
+    assert_eq!(resumed.cache_hits, 2);
+    assert_eq!(resumed.cache_misses, 1);
+    let resumed_json = Leaderboard::from_result(&resumed).to_json_canonical().to_pretty();
+
+    assert_eq!(reference_json, resumed_json, "resume must be bitwise identical");
+    let _ = std::fs::remove_file(&path);
 }

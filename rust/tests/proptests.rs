@@ -339,3 +339,78 @@ fn prop_schedule_comm_arity_always_matches() {
         Check::from_bool(ok, &format!("{} groups", s.groups.len()))
     });
 }
+
+fn arb_fault<'a>() -> Gen<'a, lagom::coordinator::FaultPlan> {
+    use lagom::coordinator::FaultPlan;
+    Gen::new(|rng| match rng.next_below(7) {
+        0 => FaultPlan::healthy(),
+        1 => FaultPlan::straggler(1.0 + rng.next_below(3) as f64),
+        2 => FaultPlan::dies_after(1 + rng.next_below(6)),
+        3 => FaultPlan::transient(rng.next_below(3), 3 + rng.next_below(4)),
+        4 => FaultPlan::flapping(1 + rng.next_below(3)),
+        5 => FaultPlan { drop_prob: 0.3, chaos_seed: rng.next_u64(), ..FaultPlan::healthy() },
+        _ => FaultPlan { corrupt_prob: 0.4, chaos_seed: rng.next_u64(), ..FaultPlan::healthy() },
+    })
+}
+
+#[test]
+fn prop_chaos_coordinator_never_hangs() {
+    // Under any mix of deaths, mutes, flaps, drops and corruption: every
+    // profile returns within the deadline budget, no NaN ever reaches an
+    // aggregate, and identical seeds replay to identical outcomes and
+    // health reports.
+    use lagom::coordinator::Coordinator;
+    use lagom::util::units::MIB;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let cl = ClusterSpec::cluster_b(1);
+    let group = OverlapGroup::with(
+        "chaos",
+        vec![CompOpDesc::matmul("mm", 512, 1024, 1024, 2)],
+        vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 4 * MIB, 8)],
+    );
+    let g = vec_of(arb_fault(), 8, 8);
+    for_all("chaos never hangs", &g, 4, |faults| {
+        let run = |seed: u64| -> Result<_, String> {
+            let mut coord = Coordinator::spawn(&cl, seed, faults);
+            coord.timeout = Duration::from_millis(80);
+            coord.backoff_cap = 2;
+            let garc = Arc::new(group.clone());
+            let cfgs = Arc::new(vec![CommConfig::default_ring()]);
+            let budget = coord.deadline_budget() + Duration::from_secs(2);
+            let mut outs: Vec<Option<(f64, f64)>> = Vec::new();
+            let mut commits = Vec::new();
+            for round in 0..4 {
+                let t0 = Instant::now();
+                let m = coord.profile(&garc, &cfgs, 1);
+                if t0.elapsed() > budget {
+                    return Err(format!("round {round} took {:?} > {budget:?}", t0.elapsed()));
+                }
+                if let Some(m) = &m {
+                    let sane = m.makespan.is_finite()
+                        && m.makespan >= 0.0
+                        && m.comm_total.is_finite()
+                        && m.comm_total >= 0.0
+                        && m.comm_times.iter().all(|t| t.is_finite() && *t >= 0.0);
+                    if !sane {
+                        return Err(format!("round {round} aggregated insane numbers: {m:?}"));
+                    }
+                }
+                outs.push(m.map(|m| (m.makespan, m.comm_total)));
+                let c = coord.try_commit(vec![CommConfig::default_ring()]);
+                commits.push((c.acks, c.sent, c.committed, c.epoch));
+            }
+            coord.drain_rejoins(Duration::from_millis(500));
+            let hr = coord.health_report();
+            coord.shutdown();
+            Ok((outs, commits, hr))
+        };
+        match (run(777), run(777)) {
+            (Ok(a), Ok(b)) => {
+                Check::from_bool(a == b, "identical seeds must replay identically")
+            }
+            (Err(e), _) | (_, Err(e)) => Check::Fail(e),
+        }
+    });
+}
