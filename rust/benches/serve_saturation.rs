@@ -1,0 +1,116 @@
+//! Serve-saturation bench: closed-loop load against the tuning service at
+//! 1×, 2× and 4× its drain capacity (slots + waiting room), reporting
+//! throughput, latency percentiles, and the shed rate at each level.
+//!
+//! Every worker is a closed loop: submit, wait for the terminal response,
+//! submit again — so offered load is controlled by the worker count, and
+//! the daemon's accountability invariant (one terminal response per
+//! submission, sheds included) is asserted at every level.
+
+use lagom::bench::{save_table, Table};
+use lagom::campaign::ResultCache;
+use lagom::eval::EvalMode;
+use lagom::serve::{ServiceConfig, Status, TuneRequest, TuningService};
+use lagom::util::stats::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn req(seed: u64) -> TuneRequest {
+    TuneRequest {
+        cluster: "b8".to_string(),
+        model: "phi2".to_string(),
+        par: "fsdp".to_string(),
+        mbs: 2,
+        layers: 1,
+        seed,
+        fidelity: EvalMode::Analytic,
+        deadline_ms: 0,
+    }
+}
+
+fn main() {
+    let slots = 2usize;
+    let queue = 2usize;
+    let capacity = slots + queue;
+    let per_worker = 6u64;
+
+    let mut t = Table::new(
+        format!("serve saturation — closed loop vs capacity {capacity} ({slots} slots + {queue} queue)"),
+        &["load", "workers", "reqs", "answered", "shed", "req/s", "p50 ms", "p99 ms"],
+    );
+    let mut floor_rps = f64::INFINITY;
+    for mult in [1usize, 2, 4] {
+        let workers = capacity * mult;
+        let svc = Arc::new(TuningService::new(
+            ServiceConfig { slots, queue, ..ServiceConfig::default() },
+            // Fresh unbounded cache per level: every request is unique
+            // content, so the bench measures evaluation, not cache luck.
+            ResultCache::in_memory(),
+            None,
+        ));
+        let next_seed = Arc::new(AtomicU64::new(mult as u64 * 1_000_000));
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let svc = Arc::clone(&svc);
+            let next_seed = Arc::clone(&next_seed);
+            handles.push(std::thread::spawn(move || {
+                let mut lat_ms = Vec::new();
+                let mut shed = 0u64;
+                for _ in 0..per_worker {
+                    let seed = next_seed.fetch_add(1, Ordering::Relaxed);
+                    let s0 = Instant::now();
+                    let resp = svc.handle(&req(seed));
+                    lat_ms.push(s0.elapsed().as_secs_f64() * 1e3);
+                    match resp.status {
+                        Status::Shed => {
+                            assert!(resp.retry_after_ms.unwrap_or(0) >= 1);
+                            shed += 1;
+                        }
+                        Status::Served | Status::Degraded => {
+                            assert!(resp.outcome.is_some());
+                        }
+                        Status::Error => panic!("unexpected error: {:?}", resp.error),
+                    }
+                }
+                (lat_ms, shed)
+            }));
+        }
+        let mut lat_ms = Vec::new();
+        let mut shed = 0u64;
+        for h in handles {
+            let (l, s) = h.join().unwrap();
+            lat_ms.extend(l);
+            shed += s;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let reqs = workers as u64 * per_worker;
+        assert_eq!(lat_ms.len() as u64, reqs, "one terminal response per submission");
+        assert_eq!(svc.admitted_count() + svc.shed_count(), reqs, "accountability holds");
+        let answered = reqs - shed;
+        assert!(answered > 0, "load level {mult}x starved completely");
+        let s = Summary::of(&lat_ms);
+        let rps = reqs as f64 / wall.max(1e-9);
+        floor_rps = floor_rps.min(rps);
+        t.row(vec![
+            format!("{mult}x"),
+            workers.to_string(),
+            reqs.to_string(),
+            answered.to_string(),
+            shed.to_string(),
+            format!("{rps:.1}"),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+        ]);
+    }
+    t.print();
+    save_table(&t);
+
+    // Modest machine-independent floor: the admission path must not
+    // collapse under saturation (shed responses are cheap by design).
+    assert!(
+        floor_rps > 1.0,
+        "saturated service fell below 1 req/s: {floor_rps:.2}"
+    );
+}

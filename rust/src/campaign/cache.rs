@@ -31,6 +31,11 @@ pub use crate::util::fingerprint::Fingerprint;
 /// hit == recompute" must stay exactly true).
 const SCHEMA: &str = "lagom.campaign.cache/v3";
 
+/// Schema tag for spill-shard files. Spilled entries carry the same
+/// payload as the main file; the distinct tag just keeps a shard from
+/// being mistaken for a primary cache (and vice versa).
+const SPILL_SCHEMA: &str = "lagom.campaign.cache.spill/v1";
+
 /// Content hash identifying one scenario's tuning problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CacheKey(u64);
@@ -177,16 +182,53 @@ impl CachedOutcome {
     }
 }
 
+/// One resident entry plus its recency stamp (monotone tick, not wall
+/// time, so eviction order is deterministic and tie-free).
+#[derive(Debug, Clone)]
+struct Slot {
+    outcome: CachedOutcome,
+    last_use: u64,
+}
+
+/// Resident entries + recency clock + the set of keys known to live in
+/// spill shards (so a miss only pays shard-file IO when it can pay off).
+#[derive(Debug, Default)]
+struct Store {
+    map: BTreeMap<String, Slot>,
+    tick: u64,
+    spilled: std::collections::BTreeSet<String>,
+}
+
+/// Where evicted entries go instead of being dropped.
+#[derive(Debug, Clone)]
+struct SpillConfig {
+    dir: PathBuf,
+    shards: usize,
+}
+
 /// Thread-safe scenario-result cache, optionally persisted to a JSON file
 /// so a second campaign invocation is free.
+///
+/// By default the cache grows without bound (the historical behaviour —
+/// fine for one campaign grid, wrong for a long-running daemon).
+/// [`ResultCache::with_capacity`] bounds resident entries with
+/// deterministic LRU eviction, and [`ResultCache::with_spill`] redirects
+/// evictions into per-shard files on disk, from which later lookups fault
+/// entries back in instead of re-measuring.
 pub struct ResultCache {
     path: Option<PathBuf>,
-    entries: Mutex<BTreeMap<String, CachedOutcome>>,
+    store: Mutex<Store>,
+    /// Resident-entry cap; `0` = unbounded.
+    cap: usize,
+    spill: Option<SpillConfig>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    spill_hits: AtomicU64,
     /// Per-save sequence number: gives every temp file written by
-    /// [`ResultCache::save`] a unique name, so concurrent checkpoint
-    /// saves never interleave partial writes into the same temp file.
+    /// [`ResultCache::save`] (and the spill-shard writer) a unique name,
+    /// so concurrent checkpoint saves never interleave partial writes
+    /// into the same temp file.
     save_seq: AtomicU64,
 }
 
@@ -195,9 +237,13 @@ impl ResultCache {
     pub fn in_memory() -> ResultCache {
         ResultCache {
             path: None,
-            entries: Mutex::new(BTreeMap::new()),
+            store: Mutex::new(Store::default()),
+            cap: 0,
+            spill: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            spill_hits: AtomicU64::new(0),
             save_seq: AtomicU64::new(0),
         }
     }
@@ -208,7 +254,7 @@ impl ResultCache {
     /// empty — the cache is an accelerator, never a failure.
     pub fn open(path: impl Into<PathBuf>) -> ResultCache {
         let path = path.into();
-        let mut entries = BTreeMap::new();
+        let mut store = Store::default();
         if let Ok(text) = std::fs::read_to_string(&path) {
             if let Ok(doc) = Json::parse(&text) {
                 let schema_ok =
@@ -217,7 +263,9 @@ impl ResultCache {
                     if let Some(Json::Obj(map)) = doc.get("entries").cloned() {
                         for (k, v) in map {
                             if let Some(o) = CachedOutcome::from_json(&v) {
-                                entries.insert(k, o);
+                                store.tick += 1;
+                                let last_use = store.tick;
+                                store.map.insert(k, Slot { outcome: o, last_use });
                             }
                         }
                     }
@@ -226,29 +274,153 @@ impl ResultCache {
         }
         ResultCache {
             path: Some(path),
-            entries: Mutex::new(entries),
+            store: Mutex::new(store),
+            cap: 0,
+            spill: None,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            spill_hits: AtomicU64::new(0),
             save_seq: AtomicU64::new(0),
         }
     }
 
-    /// Look up a key, counting a hit or a miss.
+    /// Bound resident entries at `cap` (builder; `0` = unbounded). On
+    /// overflow the least-recently-used entry is evicted — dropped, or
+    /// spilled to disk when [`ResultCache::with_spill`] is configured.
+    /// Recency is a monotone tick, so eviction order is deterministic.
+    pub fn with_capacity(mut self, cap: usize) -> ResultCache {
+        self.cap = cap;
+        let mut store = self.store.lock().unwrap();
+        Self::evict_overflow(
+            &mut store,
+            cap,
+            self.spill.as_ref(),
+            &self.evictions,
+            &self.save_seq,
+        );
+        drop(store);
+        self
+    }
+
+    /// Send evictions to `shards` JSON files under `dir` instead of
+    /// dropping them (builder). Lookups fault spilled entries back into
+    /// memory, counting a [`ResultCache::spill_hits`]. Existing shard
+    /// files from a previous run are indexed so a restarted daemon keeps
+    /// its spilled history.
+    pub fn with_spill(mut self, dir: impl Into<PathBuf>, shards: usize) -> ResultCache {
+        let dir = dir.into();
+        let shards = shards.max(1);
+        let _ = std::fs::create_dir_all(&dir);
+        {
+            let mut store = self.store.lock().unwrap();
+            for shard in 0..shards {
+                if let Some(Json::Obj(map)) =
+                    read_spill_shard(&dir, shard).and_then(|d| d.get("entries").cloned())
+                {
+                    for (k, _) in map {
+                        store.spilled.insert(k);
+                    }
+                }
+            }
+        }
+        self.spill = Some(SpillConfig { dir, shards });
+        self
+    }
+
+    /// Shard index a key spills to.
+    fn shard_of(key_hex: &str, shards: usize) -> usize {
+        let raw = u64::from_str_radix(key_hex, 16).unwrap_or(0);
+        (raw % shards.max(1) as u64) as usize
+    }
+
+    /// Evict LRU entries until `map.len() <= cap`, spilling when
+    /// configured. Runs under the store lock.
+    fn evict_overflow(
+        store: &mut Store,
+        cap: usize,
+        spill: Option<&SpillConfig>,
+        evictions: &AtomicU64,
+        save_seq: &AtomicU64,
+    ) {
+        if cap == 0 {
+            return;
+        }
+        while store.map.len() > cap {
+            let victim = store
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map above cap");
+            let slot = store.map.remove(&victim).expect("victim present");
+            evictions.fetch_add(1, Ordering::Relaxed);
+            if let Some(sp) = spill {
+                let seq = save_seq.fetch_add(1, Ordering::Relaxed);
+                if write_spill_entry(sp, &victim, &slot.outcome, seq).is_ok() {
+                    store.spilled.insert(victim);
+                }
+                // A failed spill write costs re-measurement later, never
+                // correctness: the entry is simply gone from the cache.
+            }
+        }
+    }
+
+    /// Look up a key, counting a hit or a miss. Spilled entries are
+    /// faulted back into memory (a hit, plus a `spill_hits` tally).
     pub fn lookup(&self, key: &CacheKey) -> Option<CachedOutcome> {
-        let found = self.entries.lock().unwrap().get(&key.hex()).cloned();
-        match &found {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
-        };
-        found
+        let hex = key.hex();
+        let mut store = self.store.lock().unwrap();
+        store.tick += 1;
+        let tick = store.tick;
+        if let Some(slot) = store.map.get_mut(&hex) {
+            slot.last_use = tick;
+            let found = slot.outcome.clone();
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(found);
+        }
+        if store.spilled.contains(&hex) {
+            if let Some(sp) = &self.spill {
+                let shard = Self::shard_of(&hex, sp.shards);
+                let entry = read_spill_shard(&sp.dir, shard)
+                    .and_then(|d| d.get("entries")?.get(&hex).cloned())
+                    .and_then(|v| CachedOutcome::from_json(&v));
+                if let Some(o) = entry {
+                    store.map.insert(hex, Slot { outcome: o.clone(), last_use: tick });
+                    Self::evict_overflow(
+                        &mut store,
+                        self.cap,
+                        self.spill.as_ref(),
+                        &self.evictions,
+                        &self.save_seq,
+                    );
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    self.spill_hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(o);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
     }
 
     pub fn insert(&self, key: CacheKey, outcome: CachedOutcome) {
-        self.entries.lock().unwrap().insert(key.hex(), outcome);
+        let mut store = self.store.lock().unwrap();
+        store.tick += 1;
+        let tick = store.tick;
+        store.map.insert(key.hex(), Slot { outcome, last_use: tick });
+        Self::evict_overflow(
+            &mut store,
+            self.cap,
+            self.spill.as_ref(),
+            &self.evictions,
+            &self.save_seq,
+        );
     }
 
+    /// Resident (in-memory) entries; spilled entries are not counted.
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.store.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -263,13 +435,29 @@ impl ResultCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Entries evicted from memory (LRU overflow), spilled or dropped.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Lookups answered by faulting a spilled entry back from disk.
+    pub fn spill_hits(&self) -> u64 {
+        self.spill_hits.load(Ordering::Relaxed)
+    }
+
     fn to_json(&self) -> Json {
-        let entries = self.entries.lock().unwrap();
+        let store = self.store.lock().unwrap();
         Json::obj(vec![
             ("schema", Json::str(SCHEMA)),
             (
                 "entries",
-                Json::Obj(entries.iter().map(|(k, v)| (k.clone(), v.to_json())).collect()),
+                Json::Obj(
+                    store
+                        .map
+                        .iter()
+                        .map(|(k, s)| (k.clone(), s.outcome.to_json()))
+                        .collect(),
+                ),
             ),
         ])
     }
@@ -299,6 +487,53 @@ impl ResultCache {
                 let _ = std::fs::remove_file(&tmp);
                 Err(e)
             }
+        }
+    }
+}
+
+fn spill_path(dir: &std::path::Path, shard: usize) -> PathBuf {
+    dir.join(format!("spill-{shard:02}.json"))
+}
+
+/// Parse one spill-shard file; `None` for missing/corrupt/foreign-schema
+/// files (a shard is an accelerator, never a failure — same contract as
+/// the primary file).
+fn read_spill_shard(dir: &std::path::Path, shard: usize) -> Option<Json> {
+    let text = std::fs::read_to_string(spill_path(dir, shard)).ok()?;
+    let doc = Json::parse(&text).ok()?;
+    if doc.get("schema").and_then(|s| s.as_str()) != Some(SPILL_SCHEMA) {
+        return None;
+    }
+    Some(doc)
+}
+
+/// Read-modify-write one entry into its spill shard, atomically (the same
+/// unique-tmp + rename discipline as [`ResultCache::save`]).
+fn write_spill_entry(
+    sp: &SpillConfig,
+    key_hex: &str,
+    outcome: &CachedOutcome,
+    seq: u64,
+) -> std::io::Result<()> {
+    let shard = ResultCache::shard_of(key_hex, sp.shards);
+    let mut entries = match read_spill_shard(&sp.dir, shard).and_then(|d| d.get("entries").cloned())
+    {
+        Some(Json::Obj(map)) => map,
+        _ => BTreeMap::new(),
+    };
+    entries.insert(key_hex.to_string(), outcome.to_json());
+    let doc = Json::obj(vec![
+        ("schema", Json::str(SPILL_SCHEMA)),
+        ("entries", Json::Obj(entries)),
+    ]);
+    let path = spill_path(&sp.dir, shard);
+    let tmp = path.with_extension(format!("tmp.{}.{}", std::process::id(), seq));
+    std::fs::write(&tmp, doc.to_pretty())?;
+    match std::fs::rename(&tmp, &path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
         }
     }
 }
@@ -427,6 +662,55 @@ mod tests {
         assert_eq!(ResultCache::open(&path).len(), 2);
         let _ = std::fs::remove_file(&tmp);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic_and_counted() {
+        let (cluster, w) = workload();
+        let space = ParamSpace::default();
+        let key = |seed| CacheKey::of(&cluster, &w, &space, seed, EvalMode::Simulated);
+        let cache = ResultCache::in_memory().with_capacity(2);
+        cache.insert(key(1), outcome());
+        cache.insert(key(2), outcome());
+        // Touch key(1): key(2) is now least-recently used.
+        assert!(cache.lookup(&key(1)).is_some());
+        cache.insert(key(3), outcome());
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2, "resident count bounded by cap");
+        assert!(cache.lookup(&key(2)).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(&key(1)).is_some(), "recently used entry kept");
+        assert!(cache.lookup(&key(3)).is_some());
+        // No spill configured: the evicted entry is simply gone.
+        assert_eq!(cache.spill_hits(), 0);
+    }
+
+    #[test]
+    fn spill_faults_evicted_entries_back_in_and_survives_restart() {
+        let dir = std::env::temp_dir()
+            .join(format!("lagom_cache_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (cluster, w) = workload();
+        let space = ParamSpace::default();
+        let key = |seed| CacheKey::of(&cluster, &w, &space, seed, EvalMode::Simulated);
+        {
+            let cache = ResultCache::in_memory().with_spill(&dir, 4).with_capacity(1);
+            cache.insert(key(1), outcome());
+            cache.insert(key(2), outcome()); // evicts key(1) to a shard
+            assert_eq!(cache.evictions(), 1);
+            assert_eq!(cache.len(), 1);
+            // Faulting key(1) back in evicts key(2) in turn.
+            assert_eq!(cache.lookup(&key(1)), Some(outcome()));
+            assert_eq!(cache.spill_hits(), 1);
+            assert_eq!(cache.evictions(), 2);
+            assert_eq!(cache.len(), 1, "cap holds through fault-in");
+        }
+        // A restarted cache over the same spill dir indexes old shards.
+        let reopened = ResultCache::in_memory().with_spill(&dir, 4).with_capacity(1);
+        assert!(reopened.is_empty());
+        assert_eq!(reopened.lookup(&key(2)), Some(outcome()));
+        assert_eq!(reopened.spill_hits(), 1);
+        assert!(reopened.lookup(&key(99)).is_none(), "unknown key still a miss");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -27,4 +27,6 @@ pub mod runner;
 pub use cache::{CacheKey, CachedOutcome, Fingerprint, ResultCache};
 pub use grid::{campaign_clusters, scenario_grid, Scenario, StrategyKind};
 pub use leaderboard::Leaderboard;
-pub use runner::{run_campaign, CampaignConfig, CampaignResult, ScenarioOutcome};
+pub use runner::{
+    run_campaign, scenario_seed, CampaignConfig, CampaignResult, ScenarioOutcome,
+};

@@ -124,8 +124,10 @@ pub struct CampaignResult {
 }
 
 /// Deterministic per-scenario seed: independent of worker scheduling,
-/// distinct per scenario content, stable across invocations.
-fn scenario_seed(base: u64, key: CacheKey) -> u64 {
+/// distinct per scenario content, stable across invocations. Public so the
+/// serve daemon derives the *same* seed for the same request content —
+/// crash replay depends on it.
+pub fn scenario_seed(base: u64, key: CacheKey) -> u64 {
     let mut s = base ^ key.raw().rotate_left(17);
     splitmix64(&mut s)
 }

@@ -160,6 +160,10 @@ pub struct HealthReport {
     /// Profile calls answered by the leader's local simulator because the
     /// distributed path was unavailable (degraded mode).
     pub fallbacks: u64,
+    /// Seed of the chaos-injection PRNG the workers ran under (`0` when no
+    /// faults were injected). Printed so any observed fault schedule can be
+    /// replayed exactly via `--chaos-seed`.
+    pub chaos_seed: u64,
 }
 
 impl HealthReport {
@@ -168,7 +172,8 @@ impl HealthReport {
         format!(
             "{} alive / {} suspect / {} rejoining / {} dead; \
              {} retries, {} suspected, {} died, {} rejoined, \
-             {} corrupt rejected, {} commit rollbacks, {} local fallbacks",
+             {} corrupt rejected, {} commit rollbacks, {} local fallbacks, \
+             chaos seed {:#x}",
             self.alive,
             self.suspect,
             self.rejoining,
@@ -180,6 +185,7 @@ impl HealthReport {
             self.stats.corrupt_rejected,
             self.stats.commit_rollbacks,
             self.fallbacks,
+            self.chaos_seed,
         )
     }
 }
@@ -227,8 +233,10 @@ mod tests {
             commit_epoch: 2,
             stats: HealthStats { deaths: 1, ..HealthStats::default() },
             fallbacks: 3,
+            chaos_seed: 0xfeed,
         };
         let s = hr.summary();
         assert!(s.contains("1 alive") && s.contains("1 dead") && s.contains("3 local"));
+        assert!(s.contains("chaos seed 0xfeed"), "replay seed surfaced: {s}");
     }
 }

@@ -54,6 +54,10 @@ pub struct Coordinator {
     stats: HealthStats,
     cluster: ClusterSpec,
     seed: u64,
+    /// Chaos PRNG seed the workers were spawned with (first non-zero seed
+    /// across the fault plans; `0` when no chaos is configured). Carried
+    /// into [`HealthReport`] so fault schedules are replayable.
+    chaos_seed: u64,
     /// Base per-job reply deadline (scaled per rank by backoff).
     pub timeout: Duration,
     /// Consecutive missed deadlines before a rank is declared dead
@@ -100,6 +104,7 @@ impl Coordinator {
             stats: HealthStats::default(),
             cluster: cluster.clone(),
             seed,
+            chaos_seed: faults.iter().map(|f| f.chaos_seed).find(|&s| s != 0).unwrap_or(0),
             timeout: Duration::from_secs(5),
             suspect_threshold: 3,
             backoff_cap: 4,
@@ -170,6 +175,7 @@ impl Coordinator {
             commit_epoch: self.commit_epoch,
             stats: self.stats.clone(),
             fallbacks: 0,
+            chaos_seed: self.chaos_seed,
             states,
         }
     }

@@ -92,6 +92,19 @@ impl EvalMode {
             EvalMode::Tiered => "tiered",
         }
     }
+
+    /// The next-cheaper fidelity, or `None` from the floor. This is the
+    /// serve daemon's graceful-degradation ladder: a request that blows
+    /// its deadline at one tier is retried one rung down (sim → tiered →
+    /// analytic) instead of failing, with the degradation recorded in the
+    /// response provenance.
+    pub fn degrade(self) -> Option<EvalMode> {
+        match self {
+            EvalMode::Simulated => Some(EvalMode::Tiered),
+            EvalMode::Tiered => Some(EvalMode::Analytic),
+            EvalMode::Analytic => None,
+        }
+    }
 }
 
 /// One costed candidate: the timing quantities of Eq. 1 plus provenance.
@@ -380,6 +393,13 @@ mod tests {
         }
         assert_eq!(EvalMode::parse("simulated"), Some(EvalMode::Simulated));
         assert_eq!(EvalMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn degradation_ladder_terminates_at_analytic() {
+        assert_eq!(EvalMode::Simulated.degrade(), Some(EvalMode::Tiered));
+        assert_eq!(EvalMode::Tiered.degrade(), Some(EvalMode::Analytic));
+        assert_eq!(EvalMode::Analytic.degrade(), None);
     }
 
     #[test]

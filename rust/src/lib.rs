@@ -19,6 +19,9 @@
 //! scenario space (model zoo × parallelism × cluster class) in parallel
 //! with a content-hashed result cache and a JSON leaderboard — Lagom's
 //! linear-complexity search (§3.1) is what makes that grid tractable.
+//! [`serve`] wraps the same tuner in a long-running daemon (`lagom serve`):
+//! admission-controlled, write-ahead-journaled, and deadline-aware, so
+//! callers get crash-safe, overload-tolerant tuning as a service.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
@@ -41,6 +44,7 @@ pub mod parallel;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod testing;
 pub mod train;

@@ -6,6 +6,9 @@
 //! * `compare` — NCCL vs AutoCCL vs Lagom on a workload (Fig 7 protocol).
 //! * `breakdown` — computation- vs communication-bound split (Fig 8).
 //! * `campaign` — the full scenario grid in parallel, cached, ranked.
+//! * `serve` — crash-safe tuning daemon on a Unix socket (WAL + admission
+//!   control + graceful degradation; see `DESIGN.md` §9).
+//! * `request` — one-shot client for a running `serve` daemon.
 //! * `trace` — export a chrome trace of the tuned schedule.
 //! * `train` — end-to-end training on the AOT artifacts (see EXPERIMENTS.md).
 
@@ -25,6 +28,9 @@ use lagom::parallel::{build_schedule, table2_workloads, Parallelism, Workload};
 use lagom::profiler::SimProfiler;
 use lagom::report::{
     bound_breakdown, compare_strategies_with_eval, comparison_table, evaluate,
+};
+use lagom::serve::{
+    client_request, serve, Journal, ServerOptions, ServiceConfig, TuneRequest, TuningService,
 };
 use lagom::sim::{simulate_schedule, SimEnv, TraceBuilder};
 use lagom::tuner::{AutoCclTuner, LagomTuner, LigerTuner, NcclTuner, Tuner};
@@ -48,6 +54,8 @@ fn main() {
         "compare" => cmd_compare(&args),
         "breakdown" => cmd_breakdown(&args),
         "campaign" => cmd_campaign(&args),
+        "serve" => cmd_serve(&args),
+        "request" => cmd_request(&args),
         "trace" => cmd_trace(&args),
         "train" => cmd_train(&args),
         _ => {
@@ -72,6 +80,11 @@ COMMANDS:
   campaign  --out leaderboard.json  full model-zoo x {dp,fsdp,pp,ep} x
                                     {high-bw,low-bw} grid in parallel, with
                                     a persistent result cache
+  serve     --socket PATH           run the crash-safe tuning daemon: framed
+                                    JSON requests over a Unix socket, with
+                                    admission control, a write-ahead journal
+                                    and deadline-driven degradation
+  request   --socket PATH           one-shot client for a running daemon
   trace     --model M --par P       write chrome trace of tuned schedule
   train     --steps N               end-to-end training on AOT artifacts
 
@@ -114,6 +127,10 @@ DISTRIBUTED TUNING (tune --distributed):
                                     Suspect rank is declared Dead (default 3)
   --casualties N                    inject N ranks that die mid-tuning, to
                                     exercise degraded-mode behaviour
+  --chaos-seed N                    seed the per-rank chaos PRNG so injected
+                                    fault schedules replay exactly; echoed in
+                                    the health summary (default 0 = no chaos
+                                    randomness)
 
 CAMPAIGN OPTIONS:
   --out PATH      leaderboard JSON (default target/leaderboard.json)
@@ -128,6 +145,36 @@ CAMPAIGN OPTIONS:
                   checkpoint with identical results
   --retry-scenarios N   extra attempts for a scenario whose measurement
                   panics before it is reported as failed (default 1)
+  --cache-cap N   bound the resident result cache to N entries, evicting
+                  least-recently-used entries beyond it (default 0 =
+                  unbounded); the campaign summary reports evictions
+
+SERVE OPTIONS (lagom serve):
+  --socket PATH   Unix socket to listen on (default target/lagom.sock)
+  --journal PATH  write-ahead journal; replayed at startup so a killed
+                  daemon re-serves journaled answers bitwise-identically
+                  (default target/serve_journal.wal)
+  --cache PATH    result cache file (default target/serve_cache.json)
+  --cache-cap N   LRU bound on resident cache entries (default 0 = unbounded)
+  --spill DIR     spill LRU-evicted results to sharded files under DIR
+                  instead of dropping them (off by default)
+  --spill-shards N  shard count for --spill (default 16)
+  --slots N       concurrent evaluations (default 2)
+  --queue N       waiting-room size beyond the slots; arrivals past it are
+                  shed with a retry-after hint (default 8)
+  --eval-jobs N   candidate-evaluation threads per request (default 1)
+  --retries N     panic retries per fidelity tier before degrading (default 1)
+  --max-requests N  exit after N tune requests (testing; default 0 = serve
+                  until a shutdown request)
+
+REQUEST OPTIONS (lagom request):
+  --socket PATH   daemon socket (default target/lagom.sock)
+  --kind tune|stats|shutdown        request kind (default tune)
+  --deadline-ms N service-level deadline; on exhaustion the daemon degrades
+                  fidelity (sim -> tiered -> analytic) instead of failing,
+                  and the response provenance says so (default 0 = none)
+  plus the scenario options: --model --cluster --par --mbs --layers --seed
+  --fidelity
 "
     );
 }
@@ -224,6 +271,7 @@ fn cmd_tune_distributed(args: &Args) -> i32 {
     }));
     let suspect_threshold = run_or_exit(args.get_u64("suspect-threshold", 3)) as u32;
     let casualties = run_or_exit(args.get_u64("casualties", 0)) as usize;
+    let chaos_seed = run_or_exit(args.get_u64("chaos-seed", 0));
     let world = cluster.world_size() as usize;
     if casualties > world {
         eprintln!("error: --casualties {casualties} exceeds world size {world}");
@@ -245,6 +293,13 @@ fn cmd_tune_distributed(args: &Args) -> i32 {
     let mut faults = vec![FaultPlan::healthy(); world];
     for (r, f) in faults.iter_mut().take(casualties).enumerate() {
         *f = FaultPlan::dies_after(5 + r as u64);
+    }
+    // Seed every rank's chaos PRNG so the whole fault schedule replays
+    // exactly from `--chaos-seed N`; the seed is echoed in the health line.
+    if chaos_seed != 0 {
+        for f in &mut faults {
+            f.chaos_seed = chaos_seed;
+        }
     }
     let mut coord = Coordinator::spawn(&cluster, seed, &faults);
     coord.commit_policy = policy;
@@ -413,9 +468,10 @@ fn cmd_campaign(args: &Args) -> i32 {
     let max_layers = if layers == 0 { None } else { Some(layers) };
     let out = args.get_or("out", "target/leaderboard.json").to_string();
     let cache_path = args.get_or("cache", "target/campaign_cache.json").to_string();
+    let cache_cap = run_or_exit(args.get_u64("cache-cap", 0)) as usize;
 
     let grid = scenario_grid(max_layers);
-    let cache = ResultCache::open(&cache_path);
+    let cache = ResultCache::open(&cache_path).with_capacity(cache_cap);
     let preloaded = cache.len();
     let config = CampaignConfig {
         seed,
@@ -439,12 +495,13 @@ fn cmd_campaign(args: &Args) -> i32 {
     let lb = Leaderboard::from_result(&result);
     lb.table().print();
     println!(
-        "\n{} scenarios on {} threads in {}: {} measured, {} from cache",
+        "\n{} scenarios on {} threads in {}: {} measured, {} from cache, {} evicted",
         result.outcomes.len(),
         result.threads,
         lagom::util::units::fmt_secs(result.wall_secs),
         result.cache_misses,
-        result.cache_hits
+        result.cache_hits,
+        cache.evictions()
     );
     println!(
         "geomean speedup — Lagom vs NCCL: {:.3}x, Lagom vs AutoCCL: {:.3}x",
@@ -465,6 +522,115 @@ fn cmd_campaign(args: &Args) -> i32 {
     }
     println!("wrote leaderboard to {out} (cache: {cache_path})");
     0
+}
+
+/// `lagom serve`: open (and replay) the journal, then run the daemon until
+/// a `shutdown` request (or the `--max-requests` test limit) arrives.
+fn cmd_serve(args: &Args) -> i32 {
+    let socket = args.get_or("socket", "target/lagom.sock").to_string();
+    let journal_path = args.get_or("journal", "target/serve_journal.wal").to_string();
+    let cache_path = args.get_or("cache", "target/serve_cache.json").to_string();
+    let cache_cap = run_or_exit(args.get_u64("cache-cap", 0)) as usize;
+    let spill_shards = run_or_exit(args.get_u64("spill-shards", 16)) as usize;
+    let slots = run_or_exit(args.get_u64("slots", 2)) as usize;
+    let queue = run_or_exit(args.get_u64("queue", 8)) as usize;
+    let eval_jobs = run_or_exit(args.get_u64("eval-jobs", 1)) as usize;
+    let retries = run_or_exit(args.get_u64("retries", 1)) as u32;
+    let max_requests = run_or_exit(args.get_u64("max-requests", 0));
+
+    let mut cache = ResultCache::open(&cache_path).with_capacity(cache_cap);
+    if let Some(dir) = args.get("spill") {
+        cache = cache.with_spill(dir, spill_shards);
+    }
+    let journal = match Journal::open(&journal_path) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("error: cannot open journal {journal_path}: {e}");
+            return 1;
+        }
+    };
+    let cfg = ServiceConfig { slots, queue, eval_jobs, retries, ..ServiceConfig::default() };
+    let svc = std::sync::Arc::new(TuningService::new(cfg, cache, Some(journal)));
+    let rec = svc.recover();
+    if rec.reserved + rec.reevaluated > 0 || rec.truncated_bytes > 0 {
+        println!(
+            "journal {journal_path}: {} answer(s) re-served verbatim, {} in-flight \
+             request(s) re-evaluated, {} torn byte(s) dropped",
+            rec.reserved, rec.reevaluated, rec.truncated_bytes
+        );
+    }
+    println!(
+        "serving on {socket} ({slots} slot(s), {queue}-deep waiting room, journal {journal_path})"
+    );
+    match serve(
+        std::sync::Arc::clone(&svc),
+        std::path::Path::new(&socket),
+        ServerOptions { max_requests },
+    ) {
+        Ok(report) => {
+            if let Err(e) = svc.cache().save() {
+                eprintln!("warning: could not persist cache {cache_path}: {e}");
+            }
+            println!(
+                "shutdown: {} tune request(s) over {} connection(s)",
+                report.tune_requests, report.connections
+            );
+            println!("{}", svc.stats_json().to_pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed on {socket}: {e}");
+            1
+        }
+    }
+}
+
+/// `lagom request`: one framed request against a running daemon; prints the
+/// response document and exits non-zero only on transport or error status.
+fn cmd_request(args: &Args) -> i32 {
+    let socket = args.get_or("socket", "target/lagom.sock").to_string();
+    let kind = args.get_or("kind", "tune").to_string();
+    let doc = match kind.as_str() {
+        "tune" => {
+            let req = TuneRequest {
+                cluster: args.get_or("cluster", "b8").to_string(),
+                model: args.get_or("model", "phi2").to_string(),
+                par: args.get_or("par", "fsdp").to_string(),
+                mbs: run_or_exit(args.get_u64("mbs", 2)) as u32,
+                layers: run_or_exit(args.get_u64("layers", 0)) as u32,
+                seed: run_or_exit(args.get_u64("seed", 42)),
+                fidelity: run_or_exit(fidelity_of(args)),
+                deadline_ms: run_or_exit(args.get_u64("deadline-ms", 0)),
+            };
+            let mut doc = req.to_json();
+            if let lagom::util::json::Json::Obj(m) = &mut doc {
+                m.insert("kind".to_string(), lagom::util::json::Json::str("tune"));
+            }
+            doc
+        }
+        "stats" | "shutdown" => lagom::util::json::Json::obj(vec![(
+            "kind",
+            lagom::util::json::Json::str(kind.clone()),
+        )]),
+        other => {
+            eprintln!("unknown request kind {other} (expected tune|stats|shutdown)");
+            return 2;
+        }
+    };
+    match client_request(std::path::Path::new(&socket), &doc) {
+        Ok(resp) => {
+            println!("{}", resp.to_pretty());
+            if resp.get("status").and_then(|s| s.as_str()) == Some("error") {
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("request to {socket} failed: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_trace(args: &Args) -> i32 {

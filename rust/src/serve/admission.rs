@@ -1,0 +1,191 @@
+//! Admission control: a bounded queue in front of the evaluation slots,
+//! with explicit load shedding and an EWMA service-time model for
+//! retry-after hints.
+//!
+//! The gate is a counting semaphore with a bounded waiting room: up to
+//! `slots` requests evaluate concurrently, up to `queue` more block
+//! waiting for a slot, and anything beyond that is *shed* — rejected
+//! immediately with a `retry_after_ms` hint derived from the observed
+//! service time and the current backlog. Overload therefore has exactly
+//! one failure mode, and it is loud: a terminal `shed` response, never a
+//! silent drop or an unbounded queue.
+
+use std::sync::{Condvar, Mutex};
+
+/// Outcome of [`Gate::enter`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// A slot is held; the caller must [`Gate::leave`] when done.
+    Admitted,
+    /// Queue full. `depth` is the backlog observed at rejection time
+    /// (active + waiting), for the retry-after hint.
+    Shed { depth: usize },
+}
+
+#[derive(Debug, Default)]
+struct GateState {
+    active: usize,
+    waiting: usize,
+}
+
+/// Bounded-concurrency admission gate (counting semaphore + waiting room).
+#[derive(Debug)]
+pub struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+    slots: usize,
+    queue: usize,
+}
+
+impl Gate {
+    /// `slots` concurrent holders (≥ 1 enforced), `queue` waiters beyond
+    /// them before new arrivals are shed.
+    pub fn new(slots: usize, queue: usize) -> Gate {
+        Gate { state: Mutex::new(GateState::default()), cv: Condvar::new(), slots: slots.max(1), queue }
+    }
+
+    /// Acquire a slot, blocking in the waiting room if one is free there;
+    /// sheds instead of blocking when the waiting room is full.
+    pub fn enter(&self) -> Admission {
+        let mut s = self.state.lock().unwrap();
+        if s.active < self.slots {
+            s.active += 1;
+            return Admission::Admitted;
+        }
+        if s.waiting >= self.queue {
+            return Admission::Shed { depth: s.active + s.waiting };
+        }
+        s.waiting += 1;
+        while s.active >= self.slots {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.waiting -= 1;
+        s.active += 1;
+        Admission::Admitted
+    }
+
+    /// Release a slot previously granted by [`Gate::enter`].
+    pub fn leave(&self) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(s.active > 0, "leave without a matching enter");
+        s.active = s.active.saturating_sub(1);
+        drop(s);
+        self.cv.notify_one();
+    }
+
+    /// Requests currently holding or waiting for a slot.
+    pub fn depth(&self) -> usize {
+        let s = self.state.lock().unwrap();
+        s.active + s.waiting
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+}
+
+/// Service-time EWMA feeding the shed responses' retry-after hints.
+#[derive(Debug, Default)]
+pub struct LoadTracker {
+    /// `None` until the first completed request.
+    ewma_ms: Mutex<Option<f64>>,
+}
+
+/// Smoothing factor: each completion contributes 20%.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Hint used before any request has completed.
+const DEFAULT_SERVICE_MS: f64 = 50.0;
+
+impl LoadTracker {
+    pub fn new() -> LoadTracker {
+        LoadTracker::default()
+    }
+
+    /// Record one completed request's service time.
+    pub fn record(&self, ms: f64) {
+        let mut e = self.ewma_ms.lock().unwrap();
+        *e = Some(match *e {
+            None => ms,
+            Some(prev) => (1.0 - EWMA_ALPHA) * prev + EWMA_ALPHA * ms,
+        });
+    }
+
+    pub fn ewma_ms(&self) -> f64 {
+        self.ewma_ms.lock().unwrap().unwrap_or(DEFAULT_SERVICE_MS)
+    }
+
+    /// Backpressure hint for a request shed at backlog `depth` over
+    /// `slots` workers: the expected time for the backlog to drain one
+    /// place, floored at 1 ms so the hint is always actionable.
+    pub fn retry_after_ms(&self, depth: usize, slots: usize) -> u64 {
+        let waves = (depth as f64 / slots.max(1) as f64).ceil().max(1.0);
+        (waves * self.ewma_ms()).ceil().max(1.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn admits_up_to_slots_plus_queue_then_sheds() {
+        let gate = Gate::new(2, 1);
+        assert_eq!(gate.enter(), Admission::Admitted);
+        assert_eq!(gate.enter(), Admission::Admitted);
+        assert_eq!(gate.depth(), 2);
+        // Both slots busy; the waiting room holds one, so a third
+        // concurrent arrival must shed rather than block forever.
+        let g = Arc::new(gate);
+        let g2 = Arc::clone(&g);
+        let waiter = std::thread::spawn(move || g2.enter());
+        while g.depth() < 3 {
+            std::thread::yield_now();
+        }
+        assert_eq!(g.enter(), Admission::Shed { depth: 3 });
+        g.leave();
+        assert_eq!(waiter.join().unwrap(), Admission::Admitted);
+        g.leave();
+        g.leave();
+        assert_eq!(g.depth(), 0);
+    }
+
+    #[test]
+    fn concurrency_never_exceeds_slots() {
+        let gate = Arc::new(Gate::new(3, 64));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let (gate, live, peak) = (Arc::clone(&gate), Arc::clone(&live), Arc::clone(&peak));
+            handles.push(std::thread::spawn(move || {
+                assert_eq!(gate.enter(), Admission::Admitted);
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                live.fetch_sub(1, Ordering::SeqCst);
+                gate.leave();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 3, "slot bound held");
+        assert_eq!(gate.depth(), 0);
+    }
+
+    #[test]
+    fn retry_hints_scale_with_backlog_and_never_vanish() {
+        let lt = LoadTracker::new();
+        assert!(lt.retry_after_ms(1, 2) >= 1, "pre-data hint is actionable");
+        lt.record(10.0);
+        lt.record(10.0);
+        let shallow = lt.retry_after_ms(2, 2);
+        let deep = lt.retry_after_ms(8, 2);
+        assert!(deep > shallow, "deeper backlog, longer hint: {shallow} vs {deep}");
+        lt.record(0.0);
+        assert!(lt.retry_after_ms(1, 4) >= 1, "floor survives a zero-cost sample");
+    }
+}

@@ -1,0 +1,243 @@
+//! Write-ahead request journal: crash safety for the tuning daemon.
+//!
+//! Every admitted request is appended *before* evaluation starts, and its
+//! response is appended when evaluation finishes. A record is one binary
+//! frame:
+//!
+//! ```text
+//! [len: u32 LE] [fnv1a(payload): u64 LE] [payload: `len` bytes of JSON]
+//! ```
+//!
+//! Appends are flushed and `fsync`ed (`sync_data`) before the evaluation
+//! they cover runs, so a `kill -9` at any instant loses at most the record
+//! being written — never a record that was acknowledged. Recovery scans
+//! the file front to back and stops at the first frame that is short,
+//! oversized, checksum-corrupt or unparsable; the torn tail past that
+//! point is amputated with `set_len`, exactly like a database WAL. The
+//! primary result cache keeps its own atomic unique-tmp + `rename`
+//! discipline (see [`crate::campaign::cache`]); the journal is the
+//! append-only complement for in-flight state.
+
+use crate::util::json::Json;
+use std::fs::{File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Frames larger than this are treated as corruption during the scan
+/// (matches the wire protocol's bound).
+const MAX_RECORD_BYTES: usize = super::proto::MAX_FRAME_BYTES;
+
+/// FNV-1a, 64-bit — the same hash the content caches use, applied to the
+/// record payload as an integrity check (torn-write detection, not crypto).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut state: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    state
+}
+
+/// Scan raw journal bytes into `(records, good_end)`: every valid record
+/// in order, plus the byte offset where the valid prefix ends.
+fn scan(bytes: &[u8]) -> (Vec<Json>, u64) {
+    let mut records = Vec::new();
+    let mut i = 0usize;
+    while i + 12 <= bytes.len() {
+        let len = u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]) as usize;
+        if len > MAX_RECORD_BYTES || i + 12 + len > bytes.len() {
+            break;
+        }
+        let mut sum8 = [0u8; 8];
+        sum8.copy_from_slice(&bytes[i + 4..i + 12]);
+        let sum = u64::from_le_bytes(sum8);
+        let payload = &bytes[i + 12..i + 12 + len];
+        if fnv1a(payload) != sum {
+            break;
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        let Ok(doc) = Json::parse(text) else { break };
+        records.push(doc);
+        i += 12 + len;
+    }
+    (records, i as u64)
+}
+
+/// An open, recovered journal: records read at open time plus an append
+/// handle positioned at the end of the valid prefix.
+pub struct Journal {
+    file: File,
+    path: PathBuf,
+    records: Vec<Json>,
+    /// Bytes of torn tail amputated at open (observability for tests and
+    /// the daemon's startup log line).
+    truncated_bytes: u64,
+}
+
+impl Journal {
+    /// Open (creating if absent) and recover: scan for the valid record
+    /// prefix and truncate any torn tail behind it.
+    pub fn open(path: impl Into<PathBuf>) -> std::io::Result<Journal> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let bytes = std::fs::read(&path).unwrap_or_default();
+        let (records, good_end) = scan(&bytes);
+        let mut file = OpenOptions::new().create(true).read(true).write(true).open(&path)?;
+        let truncated_bytes = (bytes.len() as u64).saturating_sub(good_end);
+        if truncated_bytes > 0 {
+            file.set_len(good_end)?;
+            file.sync_data()?;
+        }
+        file.seek(SeekFrom::Start(good_end))?;
+        Ok(Journal { file, path, records, truncated_bytes })
+    }
+
+    /// Append one record durably: frame, write, flush, `fsync`. When this
+    /// returns `Ok`, the record survives `kill -9`.
+    pub fn append(&mut self, rec: &Json) -> std::io::Result<()> {
+        let payload = rec.to_string();
+        let bytes = payload.as_bytes();
+        if bytes.len() > MAX_RECORD_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "journal record exceeds MAX_RECORD_BYTES",
+            ));
+        }
+        let mut frame = Vec::with_capacity(12 + bytes.len());
+        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv1a(bytes).to_le_bytes());
+        frame.extend_from_slice(bytes);
+        self.file.write_all(&frame)?;
+        self.file.flush()?;
+        self.file.sync_data()?;
+        self.records.push(rec.clone());
+        Ok(())
+    }
+
+    /// Records recovered at open plus those appended since.
+    pub fn records(&self) -> &[Json] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Torn-tail bytes dropped during open-time recovery.
+    pub fn truncated_bytes(&self) -> u64 {
+        self.truncated_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("admitted")),
+            ("id", Json::num(i as f64)),
+            ("payload", Json::str(format!("record-{i}"))),
+        ])
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lagom_wal_{tag}_{}.wal", std::process::id()))
+    }
+
+    #[test]
+    fn append_and_reopen_round_trips() {
+        let path = tmp("rt");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            assert!(j.is_empty());
+            for i in 0..5 {
+                j.append(&rec(i)).unwrap();
+            }
+            assert_eq!(j.len(), 5);
+        }
+        let j = Journal::open(&path).unwrap();
+        assert_eq!(j.records().to_vec(), (0..5).map(rec).collect::<Vec<_>>());
+        assert_eq!(j.truncated_bytes(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_at_every_byte_offset_recovers_the_prefix() {
+        let path = tmp("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            for i in 0..4 {
+                j.append(&rec(i)).unwrap();
+            }
+        }
+        let full = std::fs::read(&path).unwrap();
+        // Per-record frame boundaries, for computing the expected prefix.
+        let mut boundaries = vec![0usize];
+        {
+            let mut i = 0usize;
+            while i + 12 <= full.len() {
+                let len =
+                    u32::from_le_bytes([full[i], full[i + 1], full[i + 2], full[i + 3]]) as usize;
+                i += 12 + len;
+                boundaries.push(i);
+            }
+        }
+        for cut in 0..=full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let j = Journal::open(&path).unwrap();
+            let expected = boundaries.iter().filter(|&&b| b > 0 && b <= cut).count();
+            assert_eq!(j.len(), expected, "cut at byte {cut}");
+            assert_eq!(j.records().to_vec(), (0..expected as u64).map(rec).collect::<Vec<_>>());
+            assert_eq!(
+                std::fs::metadata(&path).unwrap().len(),
+                boundaries[expected] as u64,
+                "torn tail amputated at cut {cut}"
+            );
+            // Appending after recovery continues the valid prefix.
+            let mut j2 = Journal::open(&path).unwrap();
+            j2.append(&rec(99)).unwrap();
+            let j3 = Journal::open(&path).unwrap();
+            assert_eq!(j3.len(), expected + 1);
+            assert_eq!(j3.records()[expected], rec(99));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bit_flip_in_a_payload_truncates_from_that_record() {
+        let path = tmp("flip");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut j = Journal::open(&path).unwrap();
+            for i in 0..3 {
+                j.append(&rec(i)).unwrap();
+            }
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one byte inside the second record's payload.
+        let len0 = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+        let idx = 12 + len0 + 12 + 4;
+        bytes[idx] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let j = Journal::open(&path).unwrap();
+        assert_eq!(j.len(), 1, "checksum catches the flip; later records dropped");
+        assert_eq!(j.records()[0], rec(0));
+        assert!(j.truncated_bytes() > 0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,45 @@
+//! `lagom serve`: a crash-safe, overload-tolerant tuning daemon.
+//!
+//! Tuning a communication schedule is expensive enough (§3.1's simulator
+//! calls) that interactive callers — schedulers probing "what would this
+//! workload cost on that cluster?" — need a *service*, not a CLI run per
+//! question. This module turns the tuner into one, with the three
+//! robustness properties a long-running service owes its callers:
+//!
+//! 1. **Overload tolerance** ([`admission`]) — bounded concurrency plus a
+//!    bounded waiting room; excess load is shed *explicitly* with a
+//!    retry-after hint derived from observed service times. No silent
+//!    drops, no unbounded queues.
+//! 2. **Crash safety** ([`journal`]) — every admitted request hits a
+//!    write-ahead journal (checksummed frames, `fsync` before evaluation)
+//!    and every response is journaled on completion. After `kill -9`,
+//!    [`service::TuningService::recover`] replays: journal-completed
+//!    requests are re-served bitwise-identically with zero re-evaluation,
+//!    interrupted ones re-evaluate deterministically from their journaled
+//!    admission plan.
+//! 3. **Graceful degradation** ([`service`]) — per-request deadlines with
+//!    bounded panic-retry/backoff; when the deadline (or the retry budget)
+//!    is exhausted the request walks the fidelity ladder down
+//!    (`sim → tiered → analytic`) instead of failing, and the response
+//!    carries the degradation provenance.
+//!
+//! Results flow through the same content-hashed
+//! [`ResultCache`](crate::campaign::ResultCache) the
+//! campaign runner uses (LRU-bounded, disk-spillable), and completed
+//! scenarios feed a nearest-neighbor warm-start index that lets admission
+//! planning predict tuning cost for unseen scenarios.
+//!
+//! Wire format ([`proto`]): length-prefixed JSON frames over a local Unix
+//! socket ([`server`]); `lagom request` is the matching one-shot client.
+
+pub mod admission;
+pub mod journal;
+pub mod proto;
+pub mod server;
+pub mod service;
+
+pub use admission::{Admission, Gate, LoadTracker};
+pub use journal::Journal;
+pub use proto::{read_frame, write_frame, Status, TuneRequest, TuneResponse};
+pub use server::{client_request, serve, ServeReport, ServerOptions};
+pub use service::{RecoveryReport, ServiceConfig, TuningService};

@@ -1,0 +1,502 @@
+//! Wire protocol of the tuning daemon: request/response documents plus
+//! length-prefixed JSON framing.
+//!
+//! Every message on the socket is one *frame*: a little-endian `u32` byte
+//! count followed by exactly that many bytes of compact JSON. JSON keeps
+//! the protocol debuggable (`socat` + a text editor suffice as a client);
+//! the length prefix keeps parsing trivial and bounded. Requests are
+//! envelopes `{"kind": "tune" | "stats" | "shutdown", ...}`; the `tune`
+//! kind carries a [`TuneRequest`], and every reply to it is a
+//! [`TuneResponse`].
+//!
+//! Responses serialize deterministically (objects are `BTreeMap`-ordered),
+//! which the crash-recovery guarantee leans on: a replayed request must
+//! reproduce its answer *bitwise*, so the serialized response is the unit
+//! of comparison.
+
+use crate::campaign::CachedOutcome;
+use crate::comm::{Algorithm, CommConfig, Protocol, Transport};
+use crate::eval::EvalMode;
+use crate::hw::ClusterSpec;
+use crate::models::ModelSpec;
+use crate::parallel::{Parallelism, Workload};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+
+/// Upper bound on a single frame; anything larger is a protocol error,
+/// not an allocation request.
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Write one length-prefixed JSON frame.
+pub fn write_frame<W: Write>(w: &mut W, doc: &Json) -> std::io::Result<()> {
+    let payload = doc.to_string();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame exceeds MAX_FRAME_BYTES",
+        ));
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one frame; `Ok(None)` on a clean EOF before the length prefix.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Json>> {
+    let mut len4 = [0u8; 4];
+    match r.read_exact(&mut len4) {
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        other => other?,
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame exceeds MAX_FRAME_BYTES",
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    let text = String::from_utf8(buf)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "frame not UTF-8"))?;
+    Json::parse(&text)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad JSON: {e}")))
+}
+
+/// One tuning request: the scenario content, the requested evaluation
+/// fidelity, and the service-level deadline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneRequest {
+    /// Cluster preset name ([`ClusterSpec::by_name`]): `a8|a16|b8|b16`.
+    pub cluster: String,
+    /// Model zoo name ([`ModelSpec::by_name`]).
+    pub model: String,
+    /// Parallelization: `fsdp|tp|ep|dp|pp`.
+    pub par: String,
+    /// Micro-batch size (≥ 1).
+    pub mbs: u32,
+    /// Depth cap; `0` = full depth.
+    pub layers: u32,
+    /// Base seed of the measurement (part of the result identity).
+    pub seed: u64,
+    /// Fidelity the caller asked for; the service may *degrade* it, never
+    /// upgrade it.
+    pub fidelity: EvalMode,
+    /// Per-request deadline in milliseconds; `0` = none.
+    pub deadline_ms: u64,
+}
+
+impl TuneRequest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cluster", Json::str(self.cluster.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("par", Json::str(self.par.clone())),
+            ("mbs", Json::num(self.mbs as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            // Hex string: a full-range u64 does not survive the f64 JSON
+            // number type (same convention as the result cache).
+            ("seed", Json::str(format!("{:016x}", self.seed))),
+            ("fidelity", Json::str(self.fidelity.as_str())),
+            ("deadline_ms", Json::num(self.deadline_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TuneRequest> {
+        Some(TuneRequest {
+            cluster: j.get("cluster")?.as_str()?.to_string(),
+            model: j.get("model")?.as_str()?.to_string(),
+            par: j.get("par")?.as_str()?.to_string(),
+            mbs: j.get("mbs")?.as_u64()? as u32,
+            layers: j.get("layers")?.as_u64()? as u32,
+            seed: u64::from_str_radix(j.get("seed")?.as_str()?, 16).ok()?,
+            fidelity: EvalMode::parse(j.get("fidelity")?.as_str()?)?,
+            deadline_ms: j.get("deadline_ms")?.as_u64()?,
+        })
+    }
+
+    /// Resolve the request content into a concrete scenario, mirroring the
+    /// CLI's workload parsing so `lagom request` and `lagom compare` agree
+    /// on what a name means.
+    pub fn scenario(&self) -> Result<(ClusterSpec, Workload), String> {
+        let cluster = ClusterSpec::by_name(&self.cluster)
+            .ok_or_else(|| format!("unknown cluster {}", self.cluster))?;
+        let mut model = ModelSpec::by_name(&self.model)
+            .ok_or_else(|| format!("unknown model {}", self.model))?;
+        if self.layers > 0 {
+            model.layers = model.layers.min(self.layers);
+        }
+        let world = cluster.world_size();
+        let par = match self.par.as_str() {
+            "fsdp" => Parallelism::Fsdp { world },
+            "tp" => Parallelism::TpDp { tp: 8, dp: (world / 8).max(1) },
+            "ep" => {
+                if model.moe.is_none() {
+                    return Err(format!("parallelism ep needs a MoE model, got {}", self.model));
+                }
+                Parallelism::Ep { ep: 8 }
+            }
+            "dp" => Parallelism::Dp { world },
+            "pp" => Parallelism::Pp { stages: (world / 2).clamp(2, 4), microbatches: 8 },
+            other => return Err(format!("unknown parallelism {other}")),
+        };
+        let mbs = self.mbs.max(1);
+        Ok((cluster, Workload { model, par, mbs, gbs: 2 * world * mbs }))
+    }
+}
+
+/// Terminal disposition of a request. Every admitted or rejected request
+/// gets exactly one of these — the protocol has no silent outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Answered at the requested fidelity.
+    Served,
+    /// Answered, but at a lower fidelity than requested.
+    Degraded,
+    /// Rejected at admission; retry after `retry_after_ms`.
+    Shed,
+    /// Malformed request or a measurement that failed every tier.
+    Error,
+}
+
+impl Status {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Status::Served => "served",
+            Status::Degraded => "degraded",
+            Status::Shed => "shed",
+            Status::Error => "error",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Status> {
+        match s {
+            "served" => Some(Status::Served),
+            "degraded" => Some(Status::Degraded),
+            "shed" => Some(Status::Shed),
+            "error" => Some(Status::Error),
+            _ => None,
+        }
+    }
+}
+
+/// The daemon's reply to one `tune` request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneResponse {
+    /// Request id (journal identity); `0` for requests rejected before
+    /// admission (shed, parse errors).
+    pub id: u64,
+    pub status: Status,
+    /// Measured numbers (absent for shed/error).
+    pub outcome: Option<CachedOutcome>,
+    /// Lagom's chosen per-communication configs (may be empty when the
+    /// outcome was imported from a cache file that carries numbers only).
+    pub configs: Vec<CommConfig>,
+    /// Fidelity the caller requested.
+    pub requested: EvalMode,
+    /// Fidelity actually served (absent for shed/error).
+    pub served: Option<EvalMode>,
+    /// Evaluation attempts consumed (a cache hit counts as 1).
+    pub attempts: u64,
+    /// Leaderboard neighbor that warm-started admission planning.
+    pub warm_neighbor: Option<String>,
+    /// Neighbor-predicted simulator-call cost that drove predictive
+    /// degradation, when a neighbor was found.
+    pub predicted_sim_calls: Option<u64>,
+    /// Backpressure hint for shed requests.
+    pub retry_after_ms: Option<u64>,
+    pub error: Option<String>,
+}
+
+impl TuneResponse {
+    pub fn shed(requested: EvalMode, retry_after_ms: u64) -> TuneResponse {
+        TuneResponse {
+            id: 0,
+            status: Status::Shed,
+            outcome: None,
+            configs: Vec::new(),
+            requested,
+            served: None,
+            attempts: 0,
+            warm_neighbor: None,
+            predicted_sim_calls: None,
+            retry_after_ms: Some(retry_after_ms.max(1)),
+            error: None,
+        }
+    }
+
+    pub fn error(id: u64, requested: EvalMode, attempts: u64, msg: String) -> TuneResponse {
+        TuneResponse {
+            id,
+            status: Status::Error,
+            outcome: None,
+            configs: Vec::new(),
+            requested,
+            served: None,
+            attempts,
+            warm_neighbor: None,
+            predicted_sim_calls: None,
+            retry_after_ms: None,
+            error: Some(msg),
+        }
+    }
+
+    /// Every status is terminal: the caller always learns what happened.
+    pub fn is_terminal(&self) -> bool {
+        true
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("status", Json::str(self.status.as_str())),
+            (
+                "outcome",
+                match &self.outcome {
+                    Some(o) => o.to_json(),
+                    None => Json::Null,
+                },
+            ),
+            ("configs", Json::Arr(self.configs.iter().map(config_to_json).collect())),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("requested", Json::str(self.requested.as_str())),
+                    (
+                        "served",
+                        match self.served {
+                            Some(m) => Json::str(m.as_str()),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "degraded",
+                        Json::Bool(matches!(self.served, Some(m) if m != self.requested)),
+                    ),
+                    ("attempts", Json::num(self.attempts as f64)),
+                    (
+                        "warm_neighbor",
+                        match &self.warm_neighbor {
+                            Some(n) => Json::str(n.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "predicted_sim_calls",
+                        match self.predicted_sim_calls {
+                            Some(n) => Json::num(n as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "retry_after_ms",
+                match self.retry_after_ms {
+                    Some(n) => Json::num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TuneResponse> {
+        let prov = j.get("provenance")?;
+        Some(TuneResponse {
+            id: j.get("id")?.as_u64()?,
+            status: Status::parse(j.get("status")?.as_str()?)?,
+            outcome: match j.get("outcome")? {
+                Json::Null => None,
+                o => Some(CachedOutcome::from_json(o)?),
+            },
+            configs: j
+                .get("configs")?
+                .as_arr()?
+                .iter()
+                .map(config_from_json)
+                .collect::<Option<Vec<_>>>()?,
+            requested: EvalMode::parse(prov.get("requested")?.as_str()?)?,
+            served: match prov.get("served")? {
+                Json::Null => None,
+                s => Some(EvalMode::parse(s.as_str()?)?),
+            },
+            attempts: prov.get("attempts")?.as_u64()?,
+            warm_neighbor: match prov.get("warm_neighbor")? {
+                Json::Null => None,
+                s => Some(s.as_str()?.to_string()),
+            },
+            predicted_sim_calls: match prov.get("predicted_sim_calls")? {
+                Json::Null => None,
+                n => Some(n.as_u64()?),
+            },
+            retry_after_ms: match j.get("retry_after_ms")? {
+                Json::Null => None,
+                n => Some(n.as_u64()?),
+            },
+            error: match j.get("error")? {
+                Json::Null => None,
+                e => Some(e.as_str()?.to_string()),
+            },
+        })
+    }
+}
+
+/// Serialize one [`CommConfig`] using the `Display` spellings, so the wire
+/// form matches what the CLI prints.
+pub fn config_to_json(c: &CommConfig) -> Json {
+    Json::obj(vec![
+        ("algo", Json::str(format!("{}", c.algo))),
+        ("proto", Json::str(format!("{}", c.proto))),
+        ("transport", Json::str(format!("{}", c.transport))),
+        ("nc", Json::num(c.nc as f64)),
+        ("nt", Json::num(c.nt as f64)),
+        // Chunk sizes cap at 16 MiB — far inside f64's exact-integer range.
+        ("chunk", Json::num(c.chunk as f64)),
+    ])
+}
+
+pub fn config_from_json(j: &Json) -> Option<CommConfig> {
+    Some(CommConfig {
+        algo: match j.get("algo")?.as_str()? {
+            "Ring" => Algorithm::Ring,
+            "Tree" => Algorithm::Tree,
+            _ => return None,
+        },
+        proto: match j.get("proto")?.as_str()? {
+            "LL" => Protocol::LL,
+            "LL128" => Protocol::LL128,
+            "Simple" => Protocol::Simple,
+            _ => return None,
+        },
+        transport: match j.get("transport")?.as_str()? {
+            "P2P" => Transport::P2p,
+            "SHM" => Transport::Shm,
+            "NET" => Transport::Net,
+            _ => return None,
+        },
+        nc: j.get("nc")?.as_u64()? as u32,
+        nt: j.get("nt")?.as_u64()? as u32,
+        chunk: j.get("chunk")?.as_u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request() -> TuneRequest {
+        TuneRequest {
+            cluster: "b8".to_string(),
+            model: "phi2".to_string(),
+            par: "fsdp".to_string(),
+            mbs: 2,
+            layers: 1,
+            seed: 0x9e37_79b9_7f4a_7c15, // above 2^53: locks in hex seeds
+            fidelity: EvalMode::Simulated,
+            deadline_ms: 250,
+        }
+    }
+
+    #[test]
+    fn request_round_trips_and_resolves() {
+        let r = request();
+        let j = r.to_json();
+        assert_eq!(TuneRequest::from_json(&j), Some(r.clone()));
+        let (cluster, w) = r.scenario().unwrap();
+        assert_eq!(cluster.world_size(), 8);
+        assert_eq!(w.model.layers, 1, "--layers caps depth");
+        assert_eq!(w.gbs, 2 * 8 * 2);
+        // Invalid content resolves to errors, not panics.
+        assert!(TuneRequest { cluster: "z9".into(), ..request() }.scenario().is_err());
+        assert!(TuneRequest { par: "ep".into(), ..request() }.scenario().is_err());
+    }
+
+    #[test]
+    fn response_round_trips_bitwise() {
+        let resp = TuneResponse {
+            id: 7,
+            status: Status::Degraded,
+            outcome: Some(CachedOutcome {
+                nccl_iter: 0.5,
+                autoccl_iter: 0.45,
+                lagom_iter: 0.4,
+                lagom_tuning_iterations: 33,
+                autoccl_tuning_iterations: 16,
+                lagom_sim_calls: 120,
+                autoccl_sim_calls: 310,
+                seed: u64::MAX,
+            }),
+            configs: vec![CommConfig::default_ring()],
+            requested: EvalMode::Simulated,
+            served: Some(EvalMode::Analytic),
+            attempts: 2,
+            warm_neighbor: Some("phi-2/FSDP(8)".to_string()),
+            predicted_sim_calls: Some(4096),
+            retry_after_ms: None,
+            error: None,
+        };
+        let text = resp.to_json().to_string();
+        let back = TuneResponse::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // Serialize → parse → serialize is a fixpoint: the bitwise-replay
+        // guarantee compares serialized responses.
+        assert_eq!(back.to_json().to_string(), text);
+        let prov = resp.to_json();
+        let degraded = prov.get("provenance").unwrap().get("degraded").unwrap();
+        assert_eq!(degraded.as_bool(), Some(true), "degradation is visible provenance");
+    }
+
+    #[test]
+    fn shed_and_error_are_terminal_with_hints() {
+        let shed = TuneResponse::shed(EvalMode::Simulated, 0);
+        assert_eq!(shed.status, Status::Shed);
+        assert!(shed.retry_after_ms.unwrap() >= 1, "hint is always actionable");
+        assert!(shed.is_terminal());
+        let err = TuneResponse::error(3, EvalMode::Tiered, 4, "boom".into());
+        let back = TuneResponse::from_json(&err.to_json()).unwrap();
+        assert_eq!(back.error.as_deref(), Some("boom"));
+        assert_eq!(back.attempts, 4);
+    }
+
+    #[test]
+    fn frames_round_trip_over_a_byte_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &request().to_json()).unwrap();
+        write_frame(&mut buf, &Json::obj(vec![("kind", Json::str("stats"))])).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let f1 = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(TuneRequest::from_json(&f1), Some(request()));
+        let f2 = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(f2.get("kind").and_then(|k| k.as_str()), Some("stats"));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF is None");
+    }
+
+    #[test]
+    fn oversized_and_torn_frames_are_errors_not_hangs() {
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut std::io::Cursor::new(huge)).is_err());
+        let mut torn = Vec::new();
+        write_frame(&mut torn, &request().to_json()).unwrap();
+        torn.truncate(torn.len() - 3);
+        let mut r = std::io::Cursor::new(torn);
+        assert!(read_frame(&mut r).is_err(), "mid-frame EOF is an error");
+    }
+
+    #[test]
+    fn config_json_uses_display_spellings() {
+        let c = CommConfig::default_ring();
+        let j = config_to_json(&c);
+        assert_eq!(j.get("algo").and_then(|a| a.as_str()), Some("Ring"));
+        assert_eq!(config_from_json(&j), Some(c));
+    }
+}

@@ -1,0 +1,154 @@
+//! Unix-socket front end for the tuning daemon.
+//!
+//! One [`serve`] call binds a local socket, accepts connections, and runs
+//! each on its own thread; a connection is a sequence of framed JSON
+//! requests (see [`super::proto`]), each answered with exactly one framed
+//! response. Request kinds:
+//!
+//! * `"tune"` — a [`super::TuneRequest`] envelope; answered with the
+//!   [`super::TuneResponse`] document (served, degraded, shed, or error —
+//!   always terminal).
+//! * `"stats"` — the service's operator counters
+//!   ([`super::TuningService::stats_json`]).
+//! * `"shutdown"` — acknowledge, then stop accepting; in-flight
+//!   connections drain before [`serve`] returns.
+//!
+//! Admission control lives in the service, not the socket: every accepted
+//! connection can *submit*, but submissions beyond the waiting room come
+//! back as explicit `shed` responses with a retry-after hint.
+
+use super::proto::{read_frame, write_frame, TuneRequest, TuneResponse};
+use super::service::TuningService;
+use crate::eval::EvalMode;
+use crate::util::json::Json;
+use std::io::{BufReader, BufWriter};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Options for [`serve`] beyond the service itself.
+#[derive(Debug, Clone, Default)]
+pub struct ServerOptions {
+    /// Stop (as if a `shutdown` request arrived) after this many `tune`
+    /// requests have been answered. `0` means run until `shutdown`.
+    /// Exists for tests and soak benches; a production daemon runs with 0.
+    pub max_requests: u64,
+}
+
+/// What one [`serve`] run did, for the caller's summary line.
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub connections: u64,
+    pub tune_requests: u64,
+}
+
+/// Dispatch one decoded request document against the service.
+fn dispatch(svc: &TuningService, doc: &Json) -> (Json, bool) {
+    match doc.get("kind").and_then(|k| k.as_str()) {
+        Some("tune") => match TuneRequest::from_json(doc) {
+            Some(req) => (svc.handle(&req).to_json(), false),
+            None => (
+                TuneResponse::error(
+                    0,
+                    EvalMode::Analytic,
+                    0,
+                    "malformed tune request".to_string(),
+                )
+                .to_json(),
+                false,
+            ),
+        },
+        Some("stats") => (svc.stats_json(), false),
+        Some("shutdown") => (Json::obj(vec![("ok", Json::Bool(true))]), true),
+        other => (
+            TuneResponse::error(
+                0,
+                EvalMode::Analytic,
+                0,
+                format!("unknown request kind {other:?}"),
+            )
+            .to_json(),
+            false,
+        ),
+    }
+}
+
+/// Run the daemon on `socket` until a `shutdown` request (or the
+/// `max_requests` test limit) arrives, then drain and return.
+pub fn serve(
+    svc: Arc<TuningService>,
+    socket: &Path,
+    opts: ServerOptions,
+) -> std::io::Result<ServeReport> {
+    // A stale socket file from a crashed daemon would make bind fail;
+    // removing it is safe because the WAL, not the socket, carries state.
+    let _ = std::fs::remove_file(socket);
+    if let Some(dir) = socket.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let listener = UnixListener::bind(socket)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let tunes = Arc::new(AtomicU64::new(0));
+    let mut report = ServeReport::default();
+    let mut handles = Vec::new();
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = conn?;
+        report.connections += 1;
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        let tunes = Arc::clone(&tunes);
+        let socket = socket.to_path_buf();
+        let max_requests = opts.max_requests;
+        handles.push(std::thread::spawn(move || {
+            let mut reader = BufReader::new(match stream.try_clone() {
+                Ok(s) => s,
+                Err(_) => return,
+            });
+            let mut writer = BufWriter::new(stream);
+            while let Ok(Some(doc)) = read_frame(&mut reader) {
+                let (resp, shutdown) = dispatch(&svc, &doc);
+                if write_frame(&mut writer, &resp).is_err() {
+                    break;
+                }
+                let is_tune = doc.get("kind").and_then(|k| k.as_str()) == Some("tune");
+                let total = if is_tune { tunes.fetch_add(1, Ordering::SeqCst) + 1 } else { tunes.load(Ordering::SeqCst) };
+                let limit_hit = max_requests > 0 && total >= max_requests;
+                if shutdown || limit_hit {
+                    stop.store(true, Ordering::SeqCst);
+                    // The accept loop is blocked in `incoming()`; a
+                    // throwaway self-connection wakes it so it can see
+                    // the stop flag and drain.
+                    let _ = UnixStream::connect(&socket);
+                    break;
+                }
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    report.tune_requests = tunes.load(Ordering::SeqCst);
+    let _ = std::fs::remove_file(socket);
+    Ok(report)
+}
+
+/// One-shot client: connect, send one framed request, read one framed
+/// response. The `lagom request` CLI and the tests both use this.
+pub fn client_request(socket: &Path, doc: &Json) -> std::io::Result<Json> {
+    let stream = UnixStream::connect(socket)?;
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream);
+    write_frame(&mut writer, doc)?;
+    read_frame(&mut reader)?.ok_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "server closed the connection without a response",
+        )
+    })
+}

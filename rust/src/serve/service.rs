@@ -1,0 +1,841 @@
+//! The tuning service: admission → WAL → evaluation → provenance.
+//!
+//! One [`TuningService`] owns everything a request touches:
+//!
+//! * the admission [`Gate`] (bounded concurrency + bounded waiting room,
+//!   loud shedding — see [`super::admission`]);
+//! * the write-ahead [`Journal`] — every admitted request is journaled
+//!   *before* evaluation, its response journaled after, so `kill -9` at
+//!   any instant recovers by replay ([`TuningService::recover`]);
+//! * the content-hashed [`ResultCache`] (bounded via LRU + optional disk
+//!   spill), so repeated scenarios are answered without re-measurement;
+//! * a leaderboard of completed scenarios whose [`FeatureVec`]s
+//!   warm-start admission planning for *new* scenarios — the nearest
+//!   neighbor's tuning cost predicts whether the requested fidelity can
+//!   meet the deadline, degrading it up front when it cannot.
+//!
+//! Determinism is the load-bearing property: evaluation seeds derive from
+//! request content ([`scenario_seed`]), admission-time decisions (warm
+//! neighbor, planned fidelity) are journaled rather than recomputed, and
+//! responses serialize canonically — which is what makes the recovery
+//! guarantee *bitwise*, not just approximate.
+
+use super::admission::{Admission, Gate, LoadTracker};
+use super::journal::Journal;
+use super::proto::{Status, TuneRequest, TuneResponse};
+use crate::campaign::{scenario_seed, CacheKey, CachedOutcome, ResultCache};
+use crate::comm::{CommConfig, ParamSpace};
+use crate::coordinator::health::backoff_multiplier;
+use crate::eval::{EvalMode, EvalOpts};
+use crate::hw::ClusterSpec;
+use crate::parallel::{Parallelism, Workload};
+use crate::report::compare_strategies_with_eval;
+use crate::util::fingerprint::FeatureVec;
+use crate::util::json::Json;
+use crate::util::parallel::{effective_jobs, run_indexed_with};
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Service-level knobs (the daemon CLI maps flags onto this).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Concurrent evaluations (the drain rate); `0` treated as 1.
+    pub slots: usize,
+    /// Bounded waiting room beyond the slots; arrivals past it are shed.
+    pub queue: usize,
+    /// Worker threads *inside* one evaluation (wall-time only, never part
+    /// of result identity — same contract as the campaign's `eval_jobs`).
+    pub eval_jobs: usize,
+    /// Extra attempts per fidelity tier when a measurement panics.
+    pub retries: u32,
+    /// Backoff between retry attempts: `base * backoff_multiplier(attempt,
+    /// cap)` milliseconds (the coordinator's bounded-exponential curve).
+    pub backoff_base_ms: u64,
+    pub backoff_cap: u32,
+    /// Cosine-similarity floor for a leaderboard neighbor to warm-start
+    /// admission planning.
+    pub warm_threshold: f64,
+    /// Deadline budget model: a deadline of D ms affords roughly
+    /// `D * sim_calls_per_ms` simulator calls; a neighbor predicting more
+    /// degrades the planned fidelity up front.
+    pub sim_calls_per_ms: f64,
+    /// Per-tier predicted-cost reduction applied when planning degrades
+    /// one rung (tiering exists to cut simulator calls).
+    pub tier_cost_cut: u64,
+    /// Tunable space requests are tuned over (part of result identity).
+    pub space: ParamSpace,
+    /// Test hook: panic injection for `(request, mode, attempt)`.
+    pub chaos_panic: Option<fn(&TuneRequest, EvalMode, u32) -> bool>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            slots: 2,
+            queue: 8,
+            eval_jobs: 1,
+            retries: 1,
+            backoff_base_ms: 2,
+            backoff_cap: 8,
+            warm_threshold: 0.92,
+            sim_calls_per_ms: 64.0,
+            tier_cost_cut: 4,
+            space: ParamSpace::default(),
+            chaos_panic: None,
+        }
+    }
+}
+
+/// Admission-time decisions, journaled so replay never recomputes them.
+#[derive(Debug, Clone, PartialEq)]
+struct AdmissionPlan {
+    /// Fidelity evaluation starts at (requested, possibly pre-degraded).
+    fidelity: EvalMode,
+    warm_neighbor: Option<String>,
+    predicted_sim_calls: Option<u64>,
+}
+
+impl AdmissionPlan {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("fidelity", Json::str(self.fidelity.as_str())),
+            (
+                "warm_neighbor",
+                match &self.warm_neighbor {
+                    Some(n) => Json::str(n.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "predicted_sim_calls",
+                match self.predicted_sim_calls {
+                    Some(n) => Json::num(n as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<AdmissionPlan> {
+        Some(AdmissionPlan {
+            fidelity: EvalMode::parse(j.get("fidelity")?.as_str()?)?,
+            warm_neighbor: match j.get("warm_neighbor")? {
+                Json::Null => None,
+                s => Some(s.as_str()?.to_string()),
+            },
+            predicted_sim_calls: match j.get("predicted_sim_calls")? {
+                Json::Null => None,
+                n => Some(n.as_u64()?),
+            },
+        })
+    }
+}
+
+/// One completed scenario the warm-start index knows about.
+#[derive(Debug, Clone)]
+struct Neighbor {
+    key_hex: String,
+    label: String,
+    feat: FeatureVec,
+    /// Simulator calls its tuning consumed (both searching strategies) —
+    /// the predicted cost of tuning "something like this" again.
+    sim_calls: u64,
+}
+
+/// What [`TuningService::recover`] did with the journal.
+#[derive(Debug)]
+pub struct RecoveryReport {
+    /// Response documents in request-id order: journal-completed requests
+    /// verbatim, interrupted ones re-evaluated deterministically.
+    pub responses: Vec<Json>,
+    /// Requests re-served from their journaled response without any
+    /// evaluation.
+    pub reserved: usize,
+    /// Requests found admitted-but-incomplete and re-evaluated.
+    pub reevaluated: usize,
+    /// Torn-tail bytes the journal dropped at open.
+    pub truncated_bytes: u64,
+}
+
+/// Crash-safe, overload-tolerant tuning service (the daemon behind
+/// `lagom serve`).
+pub struct TuningService {
+    cfg: ServiceConfig,
+    cache: ResultCache,
+    journal: Option<Mutex<Journal>>,
+    gate: Gate,
+    load: LoadTracker,
+    /// Lagom's chosen configs per served cache key (the cache itself holds
+    /// numbers only, keeping its schema shared with the campaign).
+    configs: Mutex<BTreeMap<String, Vec<CommConfig>>>,
+    /// Warm-start index over completed scenarios.
+    neighbors: Mutex<Vec<Neighbor>>,
+    next_id: AtomicU64,
+    admitted: AtomicU64,
+    served: AtomicU64,
+    degraded: AtomicU64,
+    shed: AtomicU64,
+    errors: AtomicU64,
+    /// Evaluations actually executed (the no-double-evaluation currency).
+    fresh_measures: AtomicU64,
+    /// Requests answered verbatim from the journal during recovery.
+    replayed: AtomicU64,
+}
+
+impl TuningService {
+    pub fn new(cfg: ServiceConfig, cache: ResultCache, journal: Option<Journal>) -> TuningService {
+        let gate = Gate::new(cfg.slots, cfg.queue);
+        TuningService {
+            cfg,
+            cache,
+            journal: journal.map(Mutex::new),
+            gate,
+            load: LoadTracker::new(),
+            configs: Mutex::new(BTreeMap::new()),
+            neighbors: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
+            admitted: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            fresh_measures: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
+        }
+    }
+
+    /// Handle one request end to end: validate → admit (or shed) →
+    /// journal → evaluate → journal → answer. Always returns a terminal
+    /// response.
+    pub fn handle(&self, req: &TuneRequest) -> TuneResponse {
+        let (cluster, w) = match req.scenario() {
+            Ok(s) => s,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return TuneResponse::error(0, req.fidelity, 0, e);
+            }
+        };
+        // The deadline clock starts before admission: time spent in the
+        // waiting room is time the caller is waiting too.
+        let deadline = (req.deadline_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(req.deadline_ms));
+        match self.gate.enter() {
+            Admission::Shed { depth } => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                TuneResponse::shed(
+                    req.fidelity,
+                    self.load.retry_after_ms(depth, self.gate.slots()),
+                )
+            }
+            Admission::Admitted => {
+                let t0 = Instant::now();
+                let resp = self.process(req, &cluster, &w, deadline);
+                self.load.record(t0.elapsed().as_secs_f64() * 1e3);
+                self.gate.leave();
+                match resp.status {
+                    Status::Served => self.served.fetch_add(1, Ordering::Relaxed),
+                    Status::Degraded => self.degraded.fetch_add(1, Ordering::Relaxed),
+                    _ => self.errors.fetch_add(1, Ordering::Relaxed),
+                };
+                resp
+            }
+        }
+    }
+
+    /// Admitted path: id, plan, WAL, evaluate, WAL, absorb.
+    fn process(
+        &self,
+        req: &TuneRequest,
+        cluster: &ClusterSpec,
+        w: &Workload,
+        deadline: Option<Instant>,
+    ) -> TuneResponse {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        let plan = self.plan_admission(req, cluster, w);
+        self.journal_append(&admitted_record(id, req, &plan));
+        let resp = self.execute(id, req, cluster, w, &plan, deadline);
+        self.journal_append(&completed_record(id, &resp.to_json()));
+        self.absorb(req, cluster, w, &resp);
+        resp
+    }
+
+    /// Admission-time planning: find the nearest completed neighbor, and
+    /// pre-degrade the fidelity if its predicted tuning cost cannot fit
+    /// the deadline budget. Both decisions are journaled — replay reuses
+    /// them instead of recomputing against a changed index.
+    fn plan_admission(
+        &self,
+        req: &TuneRequest,
+        cluster: &ClusterSpec,
+        w: &Workload,
+    ) -> AdmissionPlan {
+        let feat = scenario_features(cluster, w);
+        let neighbors = self.neighbors.lock().unwrap();
+        // Deterministic argmax: similarity first, key hex as tie-break.
+        let mut best: Option<(f64, String, u64)> = None;
+        for n in neighbors.iter() {
+            let sim = n.feat.cosine(&feat);
+            if sim < self.cfg.warm_threshold {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((bs, bk, _)) => sim > *bs || (sim == *bs && n.key_hex < *bk),
+            };
+            if better {
+                best = Some((sim, n.key_hex.clone(), n.sim_calls));
+            }
+        }
+        drop(neighbors);
+        let warm_neighbor = best.as_ref().map(|(_, k, _)| {
+            // Label the neighbor by workload, not hash, for readable
+            // provenance; fall back to the hex key.
+            self.neighbor_label(k).unwrap_or_else(|| k.clone())
+        });
+        let predicted_sim_calls = best.as_ref().map(|(_, _, c)| *c);
+        let mut fidelity = req.fidelity;
+        if let (Some(mut predicted), true) = (predicted_sim_calls, req.deadline_ms > 0) {
+            let budget = req.deadline_ms as f64 * self.cfg.sim_calls_per_ms;
+            while (predicted as f64) > budget {
+                match fidelity.degrade() {
+                    Some(next) => {
+                        fidelity = next;
+                        predicted /= self.cfg.tier_cost_cut.max(1);
+                    }
+                    None => break,
+                }
+            }
+        }
+        AdmissionPlan { fidelity, warm_neighbor, predicted_sim_calls }
+    }
+
+    fn neighbor_label(&self, key_hex: &str) -> Option<String> {
+        let neighbors = self.neighbors.lock().unwrap();
+        neighbors.iter().find(|n| n.key_hex == key_hex).map(|n| n.label.clone())
+    }
+
+    /// Evaluate down the degradation ladder: per tier, consult the cache,
+    /// then measure with bounded panic retries and backoff; a tier whose
+    /// deadline is exhausted (or whose retries are spent) falls one rung.
+    /// The analytic floor runs regardless of the deadline — degraded
+    /// answers beat no answers.
+    fn execute(
+        &self,
+        id: u64,
+        req: &TuneRequest,
+        cluster: &ClusterSpec,
+        w: &Workload,
+        plan: &AdmissionPlan,
+        deadline: Option<Instant>,
+    ) -> TuneResponse {
+        let mut mode = plan.fidelity;
+        let mut attempts: u64 = 0;
+        let mut last_err = String::new();
+        loop {
+            // Wall-clock degradation: a request whose deadline passed
+            // (possibly entirely in the waiting room) drops to the
+            // cheapest remaining tier instead of starting expensive work.
+            if let (Some(d), Some(next)) = (deadline, mode.degrade()) {
+                if Instant::now() >= d {
+                    mode = next;
+                    continue;
+                }
+            }
+            let key = CacheKey::of(cluster, w, &self.cfg.space, req.seed, mode);
+            if let Some(outcome) = self.cache.lookup(&key) {
+                let configs = self
+                    .configs
+                    .lock()
+                    .unwrap()
+                    .get(&key.hex())
+                    .cloned()
+                    .unwrap_or_default();
+                return self.ok_response(id, req, plan, mode, attempts.max(1), outcome, configs);
+            }
+            let seed = scenario_seed(req.seed, key);
+            let opts = EvalOpts {
+                jobs: self.cfg.eval_jobs,
+                plan: true,
+                soa: true,
+                noise_sigma: None,
+            };
+            for attempt in 0..=self.cfg.retries {
+                attempts += 1;
+                let run = catch_unwind(AssertUnwindSafe(|| {
+                    if let Some(hook) = self.cfg.chaos_panic {
+                        if hook(req, mode, attempt) {
+                            panic!(
+                                "injected serve chaos: {} at {} attempt {attempt}",
+                                w.label(),
+                                mode.as_str()
+                            );
+                        }
+                    }
+                    measure(w, cluster, seed, &self.cfg.space, mode, opts)
+                }));
+                match run {
+                    Ok((outcome, configs)) => {
+                        self.fresh_measures.fetch_add(1, Ordering::Relaxed);
+                        self.cache.insert(key, outcome.clone());
+                        self.configs.lock().unwrap().insert(key.hex(), configs.clone());
+                        return self.ok_response(id, req, plan, mode, attempts, outcome, configs);
+                    }
+                    Err(p) => {
+                        last_err = panic_text(p);
+                        if deadline.is_some_and(|d| Instant::now() >= d) {
+                            break; // no budget left for this tier's retries
+                        }
+                        if attempt < self.cfg.retries {
+                            let mult = backoff_multiplier(attempt, self.cfg.backoff_cap) as u64;
+                            std::thread::sleep(Duration::from_millis(
+                                self.cfg.backoff_base_ms.saturating_mul(mult),
+                            ));
+                        }
+                    }
+                }
+            }
+            match mode.degrade() {
+                Some(next) => mode = next,
+                None => return TuneResponse::error(id, req.fidelity, attempts, last_err),
+            }
+        }
+    }
+
+    fn ok_response(
+        &self,
+        id: u64,
+        req: &TuneRequest,
+        plan: &AdmissionPlan,
+        mode: EvalMode,
+        attempts: u64,
+        outcome: CachedOutcome,
+        configs: Vec<CommConfig>,
+    ) -> TuneResponse {
+        TuneResponse {
+            id,
+            status: if mode == req.fidelity { Status::Served } else { Status::Degraded },
+            outcome: Some(outcome),
+            configs,
+            requested: req.fidelity,
+            served: Some(mode),
+            attempts,
+            warm_neighbor: plan.warm_neighbor.clone(),
+            predicted_sim_calls: plan.predicted_sim_calls,
+            retry_after_ms: None,
+            error: None,
+        }
+    }
+
+    /// Feed a completed response into the warm-start index (idempotent
+    /// per key, so replay and live traffic cannot double-register).
+    fn absorb(
+        &self,
+        req: &TuneRequest,
+        cluster: &ClusterSpec,
+        w: &Workload,
+        resp: &TuneResponse,
+    ) {
+        let (Some(mode), Some(outcome)) = (resp.served, resp.outcome.as_ref()) else {
+            return;
+        };
+        let key_hex = CacheKey::of(cluster, w, &self.cfg.space, req.seed, mode).hex();
+        let mut neighbors = self.neighbors.lock().unwrap();
+        if neighbors.iter().any(|n| n.key_hex == key_hex) {
+            return;
+        }
+        neighbors.push(Neighbor {
+            key_hex,
+            label: w.label(),
+            feat: scenario_features(cluster, w),
+            sim_calls: outcome.lagom_sim_calls + outcome.autoccl_sim_calls,
+        });
+    }
+
+    /// Best-effort WAL append: a failed append costs recovery coverage for
+    /// this request, never the request itself.
+    fn journal_append(&self, rec: &Json) {
+        if let Some(j) = &self.journal {
+            let _ = j.lock().unwrap().append(rec);
+        }
+    }
+
+    /// Replay the journal after a restart.
+    ///
+    /// * Requests with a journaled response are re-served **verbatim** —
+    ///   zero evaluation, bitwise-identical bytes.
+    /// * Requests journaled as admitted but interrupted mid-evaluation are
+    ///   re-evaluated deterministically: same journaled admission plan,
+    ///   same content-derived seed, drained through the shared
+    ///   [`run_indexed_with`] worklist pool (deduplicated by result key,
+    ///   so a repeated scenario is still measured once).
+    /// * `next_id` resumes past the highest journaled id, so new requests
+    ///   never collide with replayed ones.
+    pub fn recover(&self) -> RecoveryReport {
+        let (records, truncated_bytes) = match &self.journal {
+            Some(j) => {
+                let j = j.lock().unwrap();
+                (j.records().to_vec(), j.truncated_bytes())
+            }
+            None => (Vec::new(), 0),
+        };
+        let mut admitted: BTreeMap<u64, (TuneRequest, AdmissionPlan)> = BTreeMap::new();
+        let mut completed: BTreeMap<u64, Json> = BTreeMap::new();
+        for rec in &records {
+            let Some(id) = rec.get("id").and_then(|i| i.as_u64()) else { continue };
+            match rec.get("kind").and_then(|k| k.as_str()) {
+                Some("admitted") => {
+                    let req = rec.get("request").and_then(TuneRequest::from_json);
+                    let plan = rec.get("plan").and_then(AdmissionPlan::from_json);
+                    if let (Some(req), Some(plan)) = (req, plan) {
+                        admitted.insert(id, (req, plan));
+                    }
+                }
+                Some("completed") => {
+                    if let Some(doc) = rec.get("response") {
+                        completed.insert(id, doc.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+        let max_id = admitted.keys().chain(completed.keys()).max().copied().unwrap_or(0);
+        self.next_id.store(max_id + 1, Ordering::Relaxed);
+
+        // Pass 1 — completed requests: re-serve verbatim, and absorb their
+        // outcomes so the cache and warm-start index match the pre-crash
+        // state (in id order, like the original completion order of a
+        // serial workload).
+        let mut responses: Vec<Json> = Vec::new();
+        let mut reserved = 0usize;
+        for (id, doc) in &completed {
+            if let (Some((req, _)), Some(resp)) =
+                (admitted.get(id), TuneResponse::from_json(doc))
+            {
+                if let Ok((cluster, w)) = req.scenario() {
+                    if let (Some(mode), Some(outcome)) = (resp.served, resp.outcome.clone()) {
+                        let key = CacheKey::of(&cluster, &w, &self.cfg.space, req.seed, mode);
+                        self.cache.insert(key, outcome);
+                        self.configs
+                            .lock()
+                            .unwrap()
+                            .insert(key.hex(), resp.configs.clone());
+                        self.absorb(req, &cluster, &w, &resp);
+                    }
+                }
+            }
+            self.replayed.fetch_add(1, Ordering::Relaxed);
+            reserved += 1;
+            responses.push(doc.clone());
+        }
+
+        // Pass 2 — interrupted requests: pre-warm unique result keys
+        // through the worklist pool (parallel, deduplicated), then rebuild
+        // each response serially in id order. The rebuild hits the
+        // freshly warmed cache, so responses are identical to what the
+        // uninterrupted run would have produced.
+        let incomplete: Vec<(u64, TuneRequest, AdmissionPlan)> = admitted
+            .iter()
+            .filter(|(id, _)| !completed.contains_key(*id))
+            .map(|(id, (req, plan))| (*id, req.clone(), plan.clone()))
+            .collect();
+        let reevaluated = incomplete.len();
+        let mut unique: Vec<&(u64, TuneRequest, AdmissionPlan)> = Vec::new();
+        let mut seen_keys: Vec<String> = Vec::new();
+        for item in &incomplete {
+            let Ok((cluster, w)) = item.1.scenario() else { continue };
+            let hex =
+                CacheKey::of(&cluster, &w, &self.cfg.space, item.1.seed, item.2.fidelity).hex();
+            if !seen_keys.contains(&hex) {
+                seen_keys.push(hex);
+                unique.push(item);
+            }
+        }
+        let jobs = effective_jobs(self.cfg.slots, unique.len());
+        run_indexed_with(
+            jobs,
+            unique.len(),
+            || (),
+            |_, i| {
+                let (_, req, plan) = unique[i];
+                if let Ok((cluster, w)) = req.scenario() {
+                    let _ = self.execute(0, req, &cluster, &w, plan, None);
+                }
+            },
+        );
+        for (id, req, plan) in &incomplete {
+            let resp = match req.scenario() {
+                Ok((cluster, w)) => self.execute(*id, req, &cluster, &w, plan, None),
+                Err(e) => TuneResponse::error(*id, req.fidelity, 0, e),
+            };
+            let doc = resp.to_json();
+            self.journal_append(&completed_record(*id, &doc));
+            if let Ok((cluster, w)) = req.scenario() {
+                self.absorb(req, &cluster, &w, &resp);
+            }
+            responses.push(doc);
+        }
+        responses.sort_by_key(|doc| {
+            doc.get("id").and_then(|i| i.as_u64()).unwrap_or(u64::MAX)
+        });
+        RecoveryReport { responses, reserved, reevaluated, truncated_bytes }
+    }
+
+    pub fn cache(&self) -> &ResultCache {
+        &self.cache
+    }
+
+    pub fn fresh_measures(&self) -> u64 {
+        self.fresh_measures.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted_count(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Operator-facing counters (the `stats` request kind).
+    pub fn stats_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("lagom.serve.stats/v1")),
+            ("admitted", Json::num(self.admitted.load(Ordering::Relaxed) as f64)),
+            ("served", Json::num(self.served.load(Ordering::Relaxed) as f64)),
+            ("degraded", Json::num(self.degraded.load(Ordering::Relaxed) as f64)),
+            ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("fresh_measures", Json::num(self.fresh_measures.load(Ordering::Relaxed) as f64)),
+            ("replayed", Json::num(self.replayed.load(Ordering::Relaxed) as f64)),
+            (
+                "queue",
+                Json::obj(vec![
+                    ("depth", Json::num(self.gate.depth() as f64)),
+                    ("slots", Json::num(self.gate.slots() as f64)),
+                    ("waiting_cap", Json::num(self.cfg.queue as f64)),
+                ]),
+            ),
+            ("ewma_service_ms", Json::num(self.load.ewma_ms())),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("resident", Json::num(self.cache.len() as f64)),
+                    ("hits", Json::num(self.cache.hits() as f64)),
+                    ("misses", Json::num(self.cache.misses() as f64)),
+                    ("evictions", Json::num(self.cache.evictions() as f64)),
+                    ("spill_hits", Json::num(self.cache.spill_hits() as f64)),
+                ]),
+            ),
+            (
+                "warm_index",
+                Json::num(self.neighbors.lock().unwrap().len() as f64),
+            ),
+        ])
+    }
+}
+
+/// The Fig-7 measurement protocol for one request, at one fidelity.
+fn measure(
+    w: &Workload,
+    cluster: &ClusterSpec,
+    seed: u64,
+    space: &ParamSpace,
+    fidelity: EvalMode,
+    opts: EvalOpts,
+) -> (CachedOutcome, Vec<CommConfig>) {
+    let c = compare_strategies_with_eval(w, cluster, seed, space, fidelity, opts);
+    let outcome = CachedOutcome {
+        nccl_iter: c.row("NCCL").iter_time,
+        autoccl_iter: c.row("AutoCCL").iter_time,
+        lagom_iter: c.row("Lagom").iter_time,
+        lagom_tuning_iterations: c.row("Lagom").tuning_iterations,
+        autoccl_tuning_iterations: c.row("AutoCCL").tuning_iterations,
+        lagom_sim_calls: c.row("Lagom").sim_calls,
+        autoccl_sim_calls: c.row("AutoCCL").sim_calls,
+        seed,
+    };
+    (outcome, c.row("Lagom").configs.clone())
+}
+
+/// Dense features for nearest-neighbor scenario similarity.
+fn scenario_features(cluster: &ClusterSpec, w: &Workload) -> FeatureVec {
+    let mut f = FeatureVec::new();
+    let m = &w.model;
+    f.push_log(m.total_params() as f64);
+    f.push_log(m.layers as f64);
+    f.push_log(m.d_model as f64);
+    f.push_log(m.d_ff as f64);
+    f.push_log(m.seq as f64);
+    f.push(m.moe.map_or(0.0, |moe| moe.experts as f64));
+    f.push(match w.par {
+        Parallelism::Fsdp { .. } => 1.0,
+        Parallelism::TpDp { .. } => 2.0,
+        Parallelism::Ep { .. } => 3.0,
+        Parallelism::Dp { .. } => 4.0,
+        Parallelism::Pp { .. } => 5.0,
+    });
+    f.push_log(w.mbs as f64);
+    f.push_log(w.gbs as f64);
+    f.push(cluster.topology.gpus_per_node as f64);
+    f.push(cluster.topology.nodes as f64);
+    f.push_log(cluster.topology.intra.bandwidth);
+    f.push_log(cluster.topology.inter.as_ref().map_or(0.0, |l| l.bandwidth));
+    f.push_log(cluster.gpu().mem_bw);
+    f.push_log(cluster.gpu().peak_flops);
+    f
+}
+
+fn admitted_record(id: u64, req: &TuneRequest, plan: &AdmissionPlan) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("admitted")),
+        ("id", Json::num(id as f64)),
+        ("request", req.to_json()),
+        ("plan", plan.to_json()),
+    ])
+}
+
+fn completed_record(id: u64, response: &Json) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("completed")),
+        ("id", Json::num(id as f64)),
+        ("response", response.clone()),
+    ])
+}
+
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request(model: &str, seed: u64, fidelity: EvalMode) -> TuneRequest {
+        TuneRequest {
+            cluster: "b8".to_string(),
+            model: model.to_string(),
+            par: "fsdp".to_string(),
+            mbs: 2,
+            layers: 1,
+            seed,
+            fidelity,
+            deadline_ms: 0,
+        }
+    }
+
+    fn service(cfg: ServiceConfig) -> TuningService {
+        TuningService::new(cfg, ResultCache::in_memory(), None)
+    }
+
+    #[test]
+    fn serves_fresh_then_repeats_from_cache_without_reevaluating() {
+        let svc = service(ServiceConfig::default());
+        let req = request("phi2", 7, EvalMode::Analytic);
+        let a = svc.handle(&req);
+        assert_eq!(a.status, Status::Served);
+        assert_eq!(a.served, Some(EvalMode::Analytic));
+        assert_eq!(svc.fresh_measures(), 1);
+        let b = svc.handle(&req);
+        assert_eq!(svc.fresh_measures(), 1, "repeat is a cache hit, not a re-measure");
+        assert_eq!(b.outcome, a.outcome, "cached numbers identical");
+        assert_eq!(b.configs, a.configs, "configs survive the cache hit");
+        assert!(!b.configs.is_empty(), "Lagom's configs are part of the answer");
+        assert_eq!(b.id, a.id + 1, "distinct requests, distinct ids");
+    }
+
+    #[test]
+    fn warm_start_provenance_appears_for_similar_scenarios() {
+        let svc = service(ServiceConfig::default());
+        let first = svc.handle(&request("phi2", 1, EvalMode::Analytic));
+        assert_eq!(first.warm_neighbor, None, "empty index: no warm start");
+        // Same model, different seed: a new scenario (different key) that
+        // is feature-identical, so the index must offer the neighbor.
+        let second = svc.handle(&request("phi2", 2, EvalMode::Analytic));
+        assert!(second.warm_neighbor.is_some(), "neighbor found: {:?}", second.warm_neighbor);
+        assert!(second.predicted_sim_calls.is_some());
+        assert_eq!(svc.fresh_measures(), 2, "warm start informs planning, not results");
+    }
+
+    #[test]
+    fn chaos_panics_are_retried_then_degraded_with_provenance() {
+        // Analytic never panics; sim and tiered always do — the request
+        // must walk the ladder down to the floor and say so.
+        fn boom(_: &TuneRequest, mode: EvalMode, _: u32) -> bool {
+            mode != EvalMode::Analytic
+        }
+        let cfg = ServiceConfig { chaos_panic: Some(boom), retries: 1, backoff_base_ms: 0, ..ServiceConfig::default() };
+        let svc = service(cfg);
+        let resp = svc.handle(&request("phi2", 3, EvalMode::Simulated));
+        assert_eq!(resp.status, Status::Degraded);
+        assert_eq!(resp.requested, EvalMode::Simulated);
+        assert_eq!(resp.served, Some(EvalMode::Analytic));
+        assert_eq!(resp.attempts, 5, "2 sim + 2 tiered panics, then 1 analytic success");
+        let doc = resp.to_json();
+        assert_eq!(
+            doc.get("provenance").unwrap().get("degraded").unwrap().as_bool(),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn all_tiers_failing_yields_a_terminal_error() {
+        fn boom(_: &TuneRequest, _: EvalMode, _: u32) -> bool {
+            true
+        }
+        let cfg = ServiceConfig { chaos_panic: Some(boom), retries: 0, backoff_base_ms: 0, ..ServiceConfig::default() };
+        let svc = service(cfg);
+        let resp = svc.handle(&request("phi2", 4, EvalMode::Simulated));
+        assert_eq!(resp.status, Status::Error);
+        assert!(resp.error.as_deref().unwrap_or("").contains("injected serve chaos"));
+        assert_eq!(resp.attempts, 3, "one attempt per tier");
+        assert!(resp.is_terminal());
+    }
+
+    #[test]
+    fn malformed_requests_error_without_admission() {
+        let svc = service(ServiceConfig::default());
+        let resp = svc.handle(&request("no-such-model", 1, EvalMode::Analytic));
+        assert_eq!(resp.status, Status::Error);
+        assert_eq!(resp.id, 0, "rejected before admission");
+        assert_eq!(svc.admitted_count(), 0);
+    }
+
+    #[test]
+    fn exhausted_deadline_degrades_to_the_analytic_floor() {
+        let svc = service(ServiceConfig::default());
+        // Deadline of 1 ms, already consumed by the time evaluation
+        // starts: sleep past it by issuing a request whose deadline
+        // elapsed in the waiting room. Simulate by a direct process()
+        // call with an already-expired deadline.
+        let req = request("phi2", 5, EvalMode::Simulated);
+        let (cluster, w) = req.scenario().unwrap();
+        let plan = svc.plan_admission(&req, &cluster, &w);
+        let expired = Instant::now() - Duration::from_millis(1);
+        let resp = svc.execute(9, &req, &cluster, &w, &plan, Some(expired));
+        assert_eq!(resp.status, Status::Degraded);
+        assert_eq!(resp.served, Some(EvalMode::Analytic), "dropped to the floor");
+        assert!(resp.outcome.is_some(), "degraded beats denied");
+    }
+
+    #[test]
+    fn stats_document_carries_the_operator_counters() {
+        let svc = service(ServiceConfig::default());
+        svc.handle(&request("phi2", 6, EvalMode::Analytic));
+        let s = svc.stats_json();
+        assert_eq!(s.get("schema").and_then(|v| v.as_str()), Some("lagom.serve.stats/v1"));
+        assert_eq!(s.get("admitted").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(s.get("served").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(s.get("cache").and_then(|c| c.get("resident")).and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(s.get("warm_index").and_then(|v| v.as_u64()), Some(1));
+    }
+}

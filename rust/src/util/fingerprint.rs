@@ -49,6 +49,59 @@ impl Fingerprint {
     }
 }
 
+/// Dense scenario feature vector for nearest-neighbor similarity.
+///
+/// Where [`Fingerprint`] answers "is this *exactly* the same content?",
+/// `FeatureVec` answers "how *close* is this content?" — the serve layer
+/// warm-starts a new tuning scenario from the most similar completed
+/// leaderboard entry, and similarity is cosine over these features.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FeatureVec {
+    dims: Vec<f64>,
+}
+
+impl FeatureVec {
+    pub fn new() -> FeatureVec {
+        FeatureVec { dims: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.dims.push(v);
+    }
+
+    /// `ln(1 + v)` compression for count-like features spanning orders of
+    /// magnitude (parameter counts, chunk bytes, bandwidths).
+    pub fn push_log(&mut self, v: f64) {
+        self.dims.push((1.0 + v.max(0.0)).ln());
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dims.is_empty()
+    }
+
+    /// Cosine similarity in `[-1, 1]`; `0.0` for mismatched dimension
+    /// counts or zero-norm vectors (no basis for a warm start).
+    pub fn cosine(&self, other: &FeatureVec) -> f64 {
+        if self.dims.len() != other.dims.len() || self.dims.is_empty() {
+            return 0.0;
+        }
+        let (mut dot, mut na, mut nb) = (0.0, 0.0, 0.0);
+        for (a, b) in self.dims.iter().zip(&other.dims) {
+            dot += a * b;
+            na += a * a;
+            nb += b * b;
+        }
+        if na <= 0.0 || nb <= 0.0 {
+            return 0.0;
+        }
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -64,6 +117,27 @@ mod tests {
         assert_eq!(a.finish(), b.finish());
         b.push_u64(0);
         assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn cosine_similarity_ranks_nearer_vectors_higher() {
+        let mut a = FeatureVec::new();
+        let mut near = FeatureVec::new();
+        let mut far = FeatureVec::new();
+        for (x, y, z) in [(1.0, 1.1, 8.0), (2.0, 2.0, 0.5), (4.0, 3.9, 9.0)] {
+            a.push(x);
+            near.push(y);
+            far.push(z);
+        }
+        assert!(a.cosine(&near) > a.cosine(&far));
+        assert!((a.cosine(&a) - 1.0).abs() < 1e-12, "self-similarity is 1");
+        // Mismatched dimensionality and empty vectors are "no basis".
+        assert_eq!(a.cosine(&FeatureVec::new()), 0.0);
+        assert_eq!(FeatureVec::new().cosine(&FeatureVec::new()), 0.0);
+        let mut log = FeatureVec::new();
+        log.push_log(f64::from(u32::MAX));
+        log.push_log(-5.0); // negative clamps to ln(1) = 0
+        assert!(log.dims[0] > 0.0 && log.dims[1] == 0.0);
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! Overload behaviour of the tuning daemon: drive the service at 4× its
+//! drain capacity and require every request to end in a terminal response
+//! — served, degraded, or an explicit shed with an actionable retry-after
+//! hint. Silent drops and unbounded queues are the failure modes under
+//! test. Also covers the Unix-socket front end end to end.
+
+use lagom::campaign::ResultCache;
+use lagom::eval::EvalMode;
+use lagom::serve::{
+    client_request, serve, ServerOptions, ServiceConfig, Status, TuneRequest, TuningService,
+};
+use lagom::util::json::Json;
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+fn req(seed: u64) -> TuneRequest {
+    TuneRequest {
+        cluster: "b8".to_string(),
+        model: "phi2".to_string(),
+        par: "fsdp".to_string(),
+        mbs: 2,
+        layers: 1,
+        seed,
+        fidelity: EvalMode::Analytic,
+        deadline_ms: 0,
+    }
+}
+
+#[test]
+fn four_x_capacity_is_all_terminal_with_zero_silent_drops() {
+    // Capacity = 2 slots + 2 waiting = 4; offered load = 16 concurrent.
+    let cap = 2usize;
+    let svc = Arc::new(TuningService::new(
+        ServiceConfig { slots: 2, queue: 2, ..ServiceConfig::default() },
+        ResultCache::in_memory().with_capacity(cap),
+        None,
+    ));
+    let n = 16usize;
+    let barrier = Arc::new(Barrier::new(n));
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let svc = Arc::clone(&svc);
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            svc.handle(&req(100 + i as u64))
+        }));
+    }
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Accountability: exactly one terminal response per submission.
+    assert_eq!(responses.len(), n, "zero silent drops");
+    let shed: Vec<_> = responses.iter().filter(|r| r.status == Status::Shed).collect();
+    let answered: Vec<_> = responses
+        .iter()
+        .filter(|r| matches!(r.status, Status::Served | Status::Degraded))
+        .collect();
+    assert_eq!(shed.len() + answered.len(), n, "every status is terminal");
+    assert_eq!(svc.admitted_count() + svc.shed_count(), n as u64);
+    assert_eq!(svc.shed_count(), shed.len() as u64);
+
+    // 16 simultaneous arrivals against capacity 4: overload must actually
+    // shed, and every shed carries an actionable backpressure hint.
+    assert!(!shed.is_empty(), "4x load must trip admission control");
+    assert!(!answered.is_empty(), "admitted work still completes under overload");
+    for r in &shed {
+        assert!(r.retry_after_ms.unwrap_or(0) >= 1, "shed without a retry hint");
+        assert!(r.outcome.is_none());
+    }
+    for r in &answered {
+        assert!(r.outcome.is_some(), "answered requests carry numbers");
+        assert!(r.id > 0);
+    }
+
+    // Bounded memory under load: the LRU cap held even though more unique
+    // scenarios than `cap` were admitted.
+    assert!(svc.cache().len() <= cap, "resident cache exceeded its cap");
+    assert!(svc.cache().evictions() >= 1, "overload churned the LRU");
+}
+
+fn sock(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("lagom_serve_{tag}_{}.sock", std::process::id()))
+}
+
+fn tune_doc(r: &TuneRequest) -> Json {
+    let mut doc = r.to_json();
+    if let Json::Obj(m) = &mut doc {
+        m.insert("kind".to_string(), Json::str("tune"));
+    }
+    doc
+}
+
+fn await_socket(path: &PathBuf) {
+    for _ in 0..2000 {
+        if path.exists() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    panic!("daemon socket {path:?} never appeared");
+}
+
+#[test]
+fn socket_round_trip_tune_stats_shutdown() {
+    let path = sock("rt");
+    let _ = std::fs::remove_file(&path);
+    let svc = Arc::new(TuningService::new(
+        ServiceConfig::default(),
+        ResultCache::in_memory(),
+        None,
+    ));
+    let (svc2, path2) = (Arc::clone(&svc), path.clone());
+    let daemon =
+        std::thread::spawn(move || serve(svc2, &path2, ServerOptions::default()).unwrap());
+    await_socket(&path);
+
+    let resp = client_request(&path, &tune_doc(&req(7))).unwrap();
+    assert_eq!(resp.get("status").and_then(|s| s.as_str()), Some("served"));
+    assert_eq!(resp.get("id").and_then(|i| i.as_u64()), Some(1));
+    assert!(resp.get("outcome").is_some_and(|o| *o != Json::Null));
+
+    let stats = client_request(&path, &Json::obj(vec![("kind", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("schema").and_then(|s| s.as_str()), Some("lagom.serve.stats/v1"));
+    assert_eq!(stats.get("served").and_then(|v| v.as_u64()), Some(1));
+
+    // Malformed tune envelopes get terminal error responses, not hangups.
+    let bad = client_request(&path, &Json::obj(vec![("kind", Json::str("tune"))])).unwrap();
+    assert_eq!(bad.get("status").and_then(|s| s.as_str()), Some("error"));
+
+    let ack = client_request(&path, &Json::obj(vec![("kind", Json::str("shutdown"))])).unwrap();
+    assert_eq!(ack.get("ok").and_then(|b| b.as_bool()), Some(true));
+    let report = daemon.join().unwrap();
+    assert_eq!(report.tune_requests, 2, "both tune envelopes count, malformed included");
+    assert!(!path.exists(), "socket file cleaned up on shutdown");
+}
+
+#[test]
+fn max_requests_drains_and_exits_without_a_shutdown_message() {
+    let path = sock("max");
+    let _ = std::fs::remove_file(&path);
+    let svc = Arc::new(TuningService::new(
+        ServiceConfig::default(),
+        ResultCache::in_memory(),
+        None,
+    ));
+    let (svc2, path2) = (Arc::clone(&svc), path.clone());
+    let daemon = std::thread::spawn(move || {
+        serve(svc2, &path2, ServerOptions { max_requests: 2 }).unwrap()
+    });
+    await_socket(&path);
+    let a = client_request(&path, &tune_doc(&req(40))).unwrap();
+    let b = client_request(&path, &tune_doc(&req(41))).unwrap();
+    assert_eq!(a.get("status").and_then(|s| s.as_str()), Some("served"));
+    assert_eq!(b.get("status").and_then(|s| s.as_str()), Some("served"));
+    let report = daemon.join().unwrap();
+    assert_eq!(report.tune_requests, 2, "limit reached, daemon drained");
+}
