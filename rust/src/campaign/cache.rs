@@ -28,8 +28,11 @@ pub use crate::util::fingerprint::Fingerprint;
 /// v2 added per-strategy sim-call counts and fidelity-aware keys; v3
 /// invalidates v2 numbers because the engine's deterministic arithmetic
 /// changed with wave compression (identical to the last ulps, but "cache
-/// hit == recompute" must stay exactly true).
-const SCHEMA: &str = "lagom.campaign.cache/v3";
+/// hit == recompute" must stay exactly true); v4 extends the cluster
+/// fingerprint with the heterogeneity extension (islands, mixed fleets,
+/// tenants, stragglers) that routes measurement to the discrete-event
+/// tier.
+const SCHEMA: &str = "lagom.campaign.cache/v4";
 
 /// Schema tag for spill-shard files. Spilled entries carry the same
 /// payload as the main file; the distinct tag just keeps a shard from

@@ -50,7 +50,8 @@ impl StrategyKind {
 pub struct Scenario {
     /// Stable slug, e.g. `high-bw/phi-2-2b/FSDP8` (leaderboard identity).
     pub id: String,
-    /// Bandwidth class of the cluster (`high-bw` / `low-bw`).
+    /// Cluster class of the row: `high-bw` / `low-bw` for the homogeneous
+    /// grid, `hier` / `mixed` / `tenant` for the heterogeneous rows.
     pub bw_class: String,
     pub cluster: ClusterSpec,
     pub workload: Workload,
@@ -61,6 +62,20 @@ pub struct Scenario {
 /// each so every strategy family fits on both.
 pub fn campaign_clusters() -> Vec<(&'static str, ClusterSpec)> {
     vec![("high-bw", ClusterSpec::cluster_a(1)), ("low-bw", ClusterSpec::cluster_b(1))]
+}
+
+/// The heterogeneous cluster classes, measured on the discrete-event tier
+/// ([`crate::sim::des`]): hierarchical islands with an oversubscribed
+/// bridge, a mixed A40/A100 fleet, and a multi-tenant node with a
+/// background bandwidth reservation. Kept separate from
+/// [`campaign_clusters`] so the homogeneous half of the grid is
+/// byte-for-byte what it always was.
+pub fn hetero_clusters() -> Vec<(&'static str, ClusterSpec)> {
+    vec![
+        ("hier", ClusterSpec::hetero_islands()),
+        ("mixed", ClusterSpec::hetero_mixed()),
+        ("tenant", ClusterSpec::multi_tenant()),
+    ]
 }
 
 /// Micro-batch size per model, following Table 2: wide (d ≥ 4096) models
@@ -100,6 +115,30 @@ pub fn scenario_grid(max_layers: Option<u32>) -> Vec<Scenario> {
             }
         }
     }
+    // Heterogeneous rows: one representative model (Phi-2, the cheapest)
+    // under the two bandwidth-bound families, per hetero cluster class —
+    // enough to rank tuners where the fast path cannot even run, without
+    // tripling campaign cost.
+    for (bw_class, cluster) in hetero_clusters() {
+        let world = cluster.world_size();
+        let mut model = ModelSpec::phi2();
+        if let Some(cap) = max_layers {
+            model.layers = model.layers.min(cap.max(1));
+        }
+        for kind in [StrategyKind::Dp, StrategyKind::Fsdp] {
+            let Some(par) = kind.instantiate(&model, world) else {
+                continue;
+            };
+            let mbs = mbs_for(&model);
+            let workload = Workload { model: model.clone(), par, mbs, gbs: 2 * world * mbs };
+            out.push(Scenario {
+                id: format!("{bw_class}/{}/{par}", model.name.to_lowercase()),
+                bw_class: bw_class.to_string(),
+                cluster: cluster.clone(),
+                workload,
+            });
+        }
+    }
     out
 }
 
@@ -111,8 +150,9 @@ mod tests {
     fn grid_covers_zoo_times_strategies_times_clusters() {
         let g = scenario_grid(Some(2));
         // 5 models × 4 strategies × 2 clusters, minus EP on the 3 dense
-        // models on both clusters.
-        assert_eq!(g.len(), 5 * 4 * 2 - 3 * 2);
+        // models on both clusters, plus Phi-2 × {DP, FSDP} on each of the
+        // 3 heterogeneous cluster classes.
+        assert_eq!(g.len(), 5 * 4 * 2 - 3 * 2 + 3 * 2);
         let moe_ep = g
             .iter()
             .filter(|s| matches!(s.workload.par, Parallelism::Ep { .. }))
@@ -120,6 +160,16 @@ mod tests {
         assert_eq!(moe_ep, 4, "EP only for the two MoE models, per cluster");
         assert!(g.iter().any(|s| s.bw_class == "high-bw"));
         assert!(g.iter().any(|s| s.bw_class == "low-bw"));
+        for class in ["hier", "mixed", "tenant"] {
+            let rows: Vec<_> = g.iter().filter(|s| s.bw_class == class).collect();
+            assert_eq!(rows.len(), 2, "{class}: Phi-2 under DP and FSDP");
+            assert!(rows.iter().all(|s| s.cluster.needs_des()), "{class} routes to the DES");
+        }
+        // The homogeneous half never routes to the DES.
+        assert!(g
+            .iter()
+            .filter(|s| s.bw_class == "high-bw" || s.bw_class == "low-bw")
+            .all(|s| !s.cluster.needs_des()));
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod leaderboard;
 pub mod runner;
 
 pub use cache::{CacheKey, CachedOutcome, Fingerprint, ResultCache};
-pub use grid::{campaign_clusters, scenario_grid, Scenario, StrategyKind};
+pub use grid::{campaign_clusters, hetero_clusters, scenario_grid, Scenario, StrategyKind};
 pub use leaderboard::Leaderboard;
 pub use runner::{
     run_campaign, scenario_seed, CampaignConfig, CampaignResult, ScenarioOutcome,

@@ -17,7 +17,7 @@
 use super::Evaluation;
 use crate::comm::CommConfig;
 use crate::graph::OverlapGroup;
-use crate::hw::{ClusterSpec, LinkSpec};
+use crate::hw::{ClusterSpec, GpuSpec, LinkSpec};
 use crate::util::Fingerprint;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,9 +29,7 @@ pub(crate) fn push_link(fp: &mut Fingerprint, link: &LinkSpec) {
     fp.push_f64(link.latency);
 }
 
-/// Fingerprint every cluster field the cost models read.
-pub(crate) fn push_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
-    let gpu = cluster.gpu();
+pub(crate) fn push_gpu(fp: &mut Fingerprint, gpu: &GpuSpec) {
     fp.push_u64(gpu.sms as u64);
     fp.push_f64(gpu.mem_bw);
     fp.push_f64(gpu.peak_flops);
@@ -40,6 +38,15 @@ pub(crate) fn push_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
     fp.push_u64(gpu.max_threads_per_sm as u64);
     fp.push_u64(gpu.smem_per_sm);
     fp.push_f64(gpu.launch_overhead);
+}
+
+/// Fingerprint every cluster field the cost models read — including the
+/// heterogeneity extension, so a hetero cluster can never collide with its
+/// homogeneous base (and existing homogeneous keys keep their exact byte
+/// sequence: `ext: None` appends the same single `0` tag as a missing
+/// inter link).
+pub(crate) fn push_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
+    push_gpu(fp, cluster.gpu());
     fp.push_u64(cluster.node.gpus as u64);
     fp.push_u64(cluster.topology.gpus_per_node as u64);
     fp.push_u64(cluster.topology.nodes as u64);
@@ -49,6 +56,35 @@ pub(crate) fn push_cluster(fp: &mut Fingerprint, cluster: &ClusterSpec) {
         Some(l) => {
             fp.push_u64(1);
             push_link(fp, l);
+        }
+    }
+    match &cluster.ext {
+        None => fp.push_u64(0),
+        Some(ext) => {
+            fp.push_u64(1);
+            fp.push_u64(ext.node_gpus.len() as u64);
+            for g in &ext.node_gpus {
+                push_gpu(fp, g);
+            }
+            match &ext.hierarchy {
+                None => fp.push_u64(0),
+                Some(h) => {
+                    fp.push_u64(1);
+                    fp.push_u64(h.island_size as u64);
+                    push_link(fp, &h.inter_island);
+                    fp.push_f64(h.oversubscription);
+                }
+            }
+            fp.push_u64(ext.tenants.len() as u64);
+            for t in &ext.tenants {
+                fp.push_f64(t.intra_frac);
+                fp.push_f64(t.inter_frac);
+            }
+            fp.push_u64(ext.straggle.len() as u64);
+            for &(node, factor) in &ext.straggle {
+                fp.push_u64(node as u64);
+                fp.push_f64(factor);
+            }
         }
     }
 }

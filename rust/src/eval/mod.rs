@@ -173,6 +173,12 @@ pub struct EvalStats {
     pub plan_hits: u64,
     /// Plans evicted from the plan cache (FIFO, capacity-bounded).
     pub plan_evictions: u64,
+    /// Simulator executions that ran on the discrete-event tier
+    /// ([`crate::sim::des`]) because the cluster needs it
+    /// ([`crate::hw::ClusterSpec::needs_des`]). Always a subset of
+    /// `sim_calls`; asserted **zero** on every homogeneous cluster — the
+    /// DES must never steal the fast-path route.
+    pub des_evals: u64,
 }
 
 impl EvalStats {

@@ -8,6 +8,12 @@
 //! bitwise-identical to the serial path, results *and* accounting (the
 //! plan-cache counters being the one route-visible exception — see
 //! [`EvalStats::route_invariant`]).
+//!
+//! Clusters the fast path cannot express (heterogeneous GPU mixes,
+//! hierarchical islands, tenant reservations, static stragglers — see
+//! [`crate::hw::ClusterSpec::needs_des`]) route to the discrete-event tier
+//! ([`crate::sim::des`]) instead, counted in [`EvalStats::des_evals`];
+//! homogeneous clusters never take it.
 
 use super::cache::{eval_key, eval_key_prefix, eval_key_suffix, group_key, ShardedEvalCache};
 use super::{EvalStats, Evaluation, Evaluator, Fidelity};
@@ -15,8 +21,8 @@ use crate::comm::CommConfig;
 use crate::graph::OverlapGroup;
 use crate::hw::ClusterSpec;
 use crate::sim::{
-    simulate_group_summary, FrontierBatch, GroupSummary, PlanCache, PlanScratch, SimEnv,
-    SimScratch,
+    simulate_group_des, simulate_group_summary, FrontierBatch, GroupSummary, PlanCache,
+    PlanScratch, SimEnv, SimScratch,
 };
 use crate::util::parallel::{chunk_ranges, effective_jobs, run_indexed_with};
 use crate::util::prng::{splitmix64, Prng};
@@ -68,6 +74,7 @@ pub struct SimEvaluator {
     plan_scratch: PlanScratch,
     evaluations: u64,
     sim_calls: u64,
+    des_evals: u64,
 }
 
 impl SimEvaluator {
@@ -90,6 +97,7 @@ impl SimEvaluator {
             plan_scratch: PlanScratch::new(),
             evaluations: 0,
             sim_calls: 0,
+            des_evals: 0,
         }
     }
 
@@ -109,6 +117,7 @@ impl SimEvaluator {
             plan_scratch: PlanScratch::new(),
             evaluations: 0,
             sim_calls: 0,
+            des_evals: 0,
         }
     }
 
@@ -357,6 +366,50 @@ fn evaluation_from_plan(scratch: &PlanScratch, k: usize, reps: u32) -> Evaluatio
     evaluation_from_summary(scratch.summaries()[k], || scratch.comm_times(k), reps)
 }
 
+/// Simulate one candidate on the discrete-event tier ([`crate::sim::des`])
+/// under the same purity contract as [`simulate_candidate`]: the noise
+/// stream is re-derived from the cache key, so any caller on any thread
+/// computes identical numbers. Routed to only when
+/// [`crate::hw::ClusterSpec::needs_des`] holds — homogeneous clusters
+/// never pay for it.
+fn des_candidate(
+    env: &mut SimEnv,
+    group: &OverlapGroup,
+    configs: &[CommConfig],
+    key: u64,
+    reps: u32,
+) -> Evaluation {
+    let mut s = key;
+    env.prng = Prng::new(splitmix64(&mut s));
+
+    let mut comm_times = vec![0.0; group.comms.len()];
+    let mut comp_total = 0.0;
+    let mut comm_total = 0.0;
+    let mut makespan = 0.0;
+    for _ in 0..reps {
+        let r = simulate_group_des(group, configs, env, &[]);
+        for (acc, t) in comm_times.iter_mut().zip(r.comm_times.iter()) {
+            *acc += t;
+        }
+        comp_total += r.comp_total;
+        comm_total += r.comm_total;
+        makespan += r.makespan;
+    }
+    let n = reps as f64;
+    for t in &mut comm_times {
+        *t /= n;
+    }
+    Evaluation {
+        comm_times,
+        comp_total: comp_total / n,
+        comm_total: comm_total / n,
+        makespan: makespan / n,
+        fidelity: Fidelity::Simulated,
+        confidence: 0.9,
+        cached: false,
+    }
+}
+
 /// Simulate one candidate with the key-derived noise stream: a pure
 /// function of `(env.cluster, env.noise_sigma, group, configs, key, reps)`
 /// — any caller on any thread computes identical numbers, which is what
@@ -414,8 +467,12 @@ impl Evaluator for SimEvaluator {
             return e;
         }
         self.sim_calls += 1;
-        let e =
-            simulate_candidate(&mut self.env, group, configs, key, self.reps, &mut self.scratch);
+        let e = if self.env.cluster.needs_des() {
+            self.des_evals += 1;
+            des_candidate(&mut self.env, group, configs, key, self.reps)
+        } else {
+            simulate_candidate(&mut self.env, group, configs, key, self.reps, &mut self.scratch)
+        };
         self.cache.insert(key, e.clone());
         e
     }
@@ -425,8 +482,9 @@ impl Evaluator for SimEvaluator {
         group: &OverlapGroup,
         candidates: &[Vec<CommConfig>],
     ) -> Vec<Evaluation> {
-        let plan = self.plan_eligible(candidates.len());
-        let soa = self.soa_eligible(candidates.len());
+        let des = self.env.cluster.needs_des();
+        let plan = !des && self.plan_eligible(candidates.len());
+        let soa = !des && self.soa_eligible(candidates.len());
         if candidates.len() < 2 || (!plan && !soa && self.jobs == 1) {
             return candidates.iter().map(|c| self.evaluate(group, c)).collect();
         }
@@ -479,6 +537,21 @@ impl Evaluator for SimEvaluator {
             self.run_plan(group, plan_key, candidates, &miss)
         } else if soa {
             self.run_soa(group, candidates, &miss)
+        } else if des {
+            self.des_evals += miss.len() as u64;
+            let env = &self.env;
+            let reps = self.reps;
+            let miss = &miss;
+            let keys = &keys;
+            run_indexed_with(
+                self.jobs,
+                miss.len(),
+                || env.clone(),
+                |wenv, k| {
+                    let i = miss[k];
+                    des_candidate(wenv, group, &candidates[i], keys[i], reps)
+                },
+            )
         } else {
             let env = &self.env;
             let reps = self.reps;
@@ -518,6 +591,7 @@ impl Evaluator for SimEvaluator {
             plan_compiles: self.plan_cache.compiles(),
             plan_hits: self.plan_cache.hits(),
             plan_evictions: self.plan_cache.evictions(),
+            des_evals: self.des_evals,
             ..EvalStats::default()
         }
     }

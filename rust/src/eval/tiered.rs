@@ -283,6 +283,7 @@ impl Evaluator for TieredEvaluator {
             plan_compiles: sim.plan_compiles,
             plan_hits: sim.plan_hits,
             plan_evictions: sim.plan_evictions,
+            des_evals: sim.des_evals,
         }
     }
 }

@@ -1,7 +1,11 @@
-//! Cluster presets matching the paper's §4.1 hardware infrastructure.
+//! Cluster presets matching the paper's §4.1 hardware infrastructure, plus
+//! the heterogeneity extension that feeds the discrete-event tier
+//! (`sim::des`): mixed-GPU fleets, hierarchical NVLink-island topologies,
+//! multi-tenant bandwidth reservations, and static straggler schedules.
 
 use super::gpu::GpuSpec;
-use super::topology::{infiniband, nvlink_400gbps, pcie4, Topology};
+use super::topology::{infiniband, nvlink_400gbps, pcie4, LinkKind, LinkSpec, Topology};
+use crate::util::json::Json;
 
 /// One node: a GPU model replicated `gpus` times.
 #[derive(Debug, Clone, PartialEq)]
@@ -10,12 +14,74 @@ pub struct NodeSpec {
     pub gpus: u32,
 }
 
-/// A full cluster: homogeneous nodes + interconnect topology.
+/// Hierarchical intra-node structure: NVLink islands bridged by a slower
+/// link, and an oversubscribed inter-node fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hierarchy {
+    /// GPUs per NVLink island; must divide `gpus_per_node`.
+    pub island_size: u32,
+    /// Link bridging islands within a node (slower than `intra`); a
+    /// collective whose ring crosses an island boundary is bounded by it.
+    pub inter_island: LinkSpec,
+    /// Oversubscription factor on the inter-node fabric: effective
+    /// inter-node bandwidth is `inter.bandwidth / oversubscription` (≥ 1).
+    pub oversubscription: f64,
+}
+
+/// A background tenant holding a static bandwidth reservation on the
+/// fabric (co-located training/inference job).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Fraction of intra-node bandwidth reserved, in `[0, 1)`.
+    pub intra_frac: f64,
+    /// Fraction of inter-node bandwidth reserved, in `[0, 1)`.
+    pub inter_frac: f64,
+}
+
+/// Scenario extensions the wave-compressed fast path cannot express.
+///
+/// Every homogeneous preset carries `ext: None`, which is what keeps those
+/// clusters on the plan/SoA/compressed evaluator routes bitwise-unchanged;
+/// a present-but-trivial extension (all fields empty) also stays on the
+/// fast path.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ClusterExt {
+    /// Per-node GPU override (heterogeneous fleet). When non-empty it must
+    /// hold exactly `topology.nodes` entries; node `i` runs `node_gpus[i]`
+    /// instead of `node.gpu`.
+    pub node_gpus: Vec<GpuSpec>,
+    /// Hierarchical topology (islands + oversubscription).
+    pub hierarchy: Option<Hierarchy>,
+    /// Background tenants with bandwidth reservations.
+    pub tenants: Vec<TenantSpec>,
+    /// Static per-node straggle factors `(node, factor ≥ 1)`: multiplies
+    /// every duration the node produces, the same semantics as the
+    /// coordinator `FaultPlan::straggle_factor` applies to measured times.
+    pub straggle: Vec<(u32, f64)>,
+}
+
+impl ClusterExt {
+    /// Whether the extension changes anything at all. Trivial extensions
+    /// keep the cluster on the fast path.
+    pub fn is_trivial(&self) -> bool {
+        self.node_gpus.is_empty()
+            && self.hierarchy.is_none()
+            && self.tenants.is_empty()
+            && self.straggle.is_empty()
+    }
+}
+
+/// A full cluster: nodes + interconnect topology + optional heterogeneity
+/// extension (`None` for the homogeneous paper presets).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
     pub name: String,
     pub node: NodeSpec,
     pub topology: Topology,
+    /// Heterogeneity extension; `None` (or trivial) routes the evaluator
+    /// through the fast path, anything substantive through `sim::des`.
+    pub ext: Option<ClusterExt>,
 }
 
 impl ClusterSpec {
@@ -31,6 +97,7 @@ impl ClusterSpec {
                 intra: nvlink_400gbps(),
                 inter: if nodes > 1 { Some(infiniband(800.0)) } else { None },
             },
+            ext: None,
         }
     }
 
@@ -45,16 +112,67 @@ impl ClusterSpec {
                 intra: pcie4(),
                 inter: if nodes > 1 { Some(infiniband(100.0)) } else { None },
             },
+            ext: None,
         }
     }
 
-    /// Look up a preset by name used on the CLI: `a8`, `a16`, `b8`, `b16`.
+    /// Mixed-GPU fleet: cluster-A fabric, node 0 keeps its A40s while
+    /// node 1 runs A100s — the "mixed generation" scenario class.
+    pub fn hetero_mixed() -> ClusterSpec {
+        let mut c = Self::cluster_a(2);
+        c.name = "H/8xA40+8xA100-NVLink".to_string();
+        c.ext = Some(ClusterExt {
+            node_gpus: vec![GpuSpec::a40(), GpuSpec::a100()],
+            ..ClusterExt::default()
+        });
+        c
+    }
+
+    /// Hierarchical topology: cluster-A hardware but each node's NVLink is
+    /// split into two 4-GPU islands bridged by PCIe, and the inter-node
+    /// rail is 2:1 oversubscribed.
+    pub fn hetero_islands() -> ClusterSpec {
+        let mut c = Self::cluster_a(2);
+        c.name = "ISL/2x(2x4xA40)-NVLink+PCIe".to_string();
+        c.ext = Some(ClusterExt {
+            hierarchy: Some(Hierarchy {
+                island_size: 4,
+                inter_island: pcie4(),
+                oversubscription: 2.0,
+            }),
+            ..ClusterExt::default()
+        });
+        c
+    }
+
+    /// Multi-tenant contention: single cluster-B node shared with a
+    /// background job reserving 30% of intra-node bandwidth.
+    pub fn multi_tenant() -> ClusterSpec {
+        let mut c = Self::cluster_b(1);
+        c.name = "MT/8xA40-PCIe+tenant".to_string();
+        c.ext = Some(ClusterExt {
+            tenants: vec![TenantSpec {
+                name: "background".to_string(),
+                intra_frac: 0.3,
+                inter_frac: 0.5,
+            }],
+            ..ClusterExt::default()
+        });
+        c
+    }
+
+    /// Look up a preset by CLI name: the homogeneous paper presets
+    /// (`a8`, `a16`, `b8`, `b16`) plus the heterogeneous trio
+    /// (`h16` mixed-GPU, `isl16` hierarchical islands, `mt8` multi-tenant).
     pub fn by_name(name: &str) -> Option<ClusterSpec> {
         match name.to_ascii_lowercase().as_str() {
             "a8" | "a" => Some(Self::cluster_a(1)),
             "a16" => Some(Self::cluster_a(2)),
             "b8" | "b" => Some(Self::cluster_b(1)),
             "b16" => Some(Self::cluster_b(2)),
+            "h16" | "mixed16" => Some(Self::hetero_mixed()),
+            "isl16" | "islands16" => Some(Self::hetero_islands()),
+            "mt8" | "tenant8" => Some(Self::multi_tenant()),
             _ => None,
         }
     }
@@ -65,6 +183,252 @@ impl ClusterSpec {
 
     pub fn gpu(&self) -> &GpuSpec {
         &self.node.gpu
+    }
+
+    /// GPU model of a specific node, honouring a heterogeneous override.
+    pub fn gpu_of_node(&self, node: u32) -> &GpuSpec {
+        match &self.ext {
+            Some(e) if !e.node_gpus.is_empty() => {
+                &e.node_gpus[node as usize % e.node_gpus.len()]
+            }
+            _ => &self.node.gpu,
+        }
+    }
+
+    /// Whether this cluster requires the discrete-event tier: any
+    /// non-trivial heterogeneity extension. Homogeneous presets return
+    /// `false` and stay on plan/SoA/compressed.
+    pub fn needs_des(&self) -> bool {
+        self.ext.as_ref().map(|e| !e.is_trivial()).unwrap_or(false)
+    }
+
+    /// Construction-time sanity check: topology invariants plus extension
+    /// cross-field consistency, errors naming the offending field.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.node.gpus == 0 {
+            return Err("node.gpus: must be positive (got 0)".to_string());
+        }
+        if self.node.gpus != self.topology.gpus_per_node {
+            return Err(format!(
+                "node.gpus: {} does not match topology.gpus_per_node {}",
+                self.node.gpus, self.topology.gpus_per_node
+            ));
+        }
+        self.topology.validate()?;
+        let Some(e) = &self.ext else { return Ok(()) };
+        if !e.node_gpus.is_empty() && e.node_gpus.len() != self.topology.nodes as usize {
+            return Err(format!(
+                "ext.node_gpus: expected {} entries (one per node), got {}",
+                self.topology.nodes,
+                e.node_gpus.len()
+            ));
+        }
+        if let Some(h) = &e.hierarchy {
+            if h.island_size == 0 || self.topology.gpus_per_node % h.island_size != 0 {
+                return Err(format!(
+                    "ext.hierarchy.island_size: {} must be positive and divide gpus_per_node {}",
+                    h.island_size, self.topology.gpus_per_node
+                ));
+            }
+            h.inter_island.validate("ext.hierarchy.inter_island")?;
+            if h.oversubscription < 1.0 || !h.oversubscription.is_finite() {
+                return Err(format!(
+                    "ext.hierarchy.oversubscription: must be >= 1 (got {})",
+                    h.oversubscription
+                ));
+            }
+        }
+        let mut intra_total = 0.0;
+        let mut inter_total = 0.0;
+        for t in &e.tenants {
+            for (field, frac) in [("intra_frac", t.intra_frac), ("inter_frac", t.inter_frac)] {
+                if !(0.0..1.0).contains(&frac) {
+                    return Err(format!(
+                        "ext.tenants[{}].{field}: must be in [0, 1) (got {frac})",
+                        t.name
+                    ));
+                }
+            }
+            intra_total += t.intra_frac;
+            inter_total += t.inter_frac;
+        }
+        if intra_total >= 1.0 || inter_total >= 1.0 {
+            return Err(format!(
+                "ext.tenants: total reservations must leave bandwidth for the job \
+                 (intra {intra_total}, inter {inter_total})"
+            ));
+        }
+        for (node, factor) in &e.straggle {
+            if *node >= self.topology.nodes {
+                return Err(format!(
+                    "ext.straggle: node {node} out of range (nodes = {})",
+                    self.topology.nodes
+                ));
+            }
+            if *factor < 1.0 || !factor.is_finite() {
+                return Err(format!(
+                    "ext.straggle: factor for node {node} must be >= 1 (got {factor})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse and validate a cluster from a JSON document (`--cluster
+    /// path.json`). Errors name the offending field. Format:
+    ///
+    /// ```json
+    /// {
+    ///   "name": "my-cluster", "gpu": "a40",
+    ///   "gpus_per_node": 8, "nodes": 2,
+    ///   "intra": {"kind": "nvlink", "bandwidth": 50e9, "latency": 2e-6},
+    ///   "inter": {"kind": "ib", "bandwidth": 11.25e9, "latency": 8e-6},
+    ///   "node_gpus": ["a40", "a100"],
+    ///   "hierarchy": {"island_size": 4,
+    ///                 "inter_island": {"kind": "pcie4", "bandwidth": 26e9,
+    ///                                  "latency": 5e-6},
+    ///                 "oversubscription": 2.0},
+    ///   "tenants": [{"name": "bg", "intra_frac": 0.3, "inter_frac": 0.5}],
+    ///   "straggle": [[1, 2.0]]
+    /// }
+    /// ```
+    pub fn from_json_str(text: &str) -> Result<ClusterSpec, String> {
+        let doc = Json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+        let gpu_by_name = |field: &str, name: &str| -> Result<GpuSpec, String> {
+            match name.to_ascii_lowercase().as_str() {
+                "a40" => Ok(GpuSpec::a40()),
+                "a100" => Ok(GpuSpec::a100()),
+                other => Err(format!("{field}: unknown gpu \"{other}\" (expected a40|a100)")),
+            }
+        };
+        let link_of = |field: &str, v: &Json| -> Result<LinkSpec, String> {
+            let kind_s = v
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{field}.kind: missing or not a string"))?;
+            let kind = LinkKind::parse(kind_s).ok_or_else(|| {
+                format!("{field}.kind: unknown link kind \"{kind_s}\" (expected nvlink|pcie4|ib|local)")
+            })?;
+            let num = |sub: &str| -> Result<f64, String> {
+                v.get(sub)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("{field}.{sub}: missing or not a number"))
+            };
+            let link = LinkSpec { kind, bandwidth: num("bandwidth")?, latency: num("latency")? };
+            link.validate(field)?;
+            Ok(link)
+        };
+        let u32_of = |field: &str| -> Result<u32, String> {
+            let n = doc
+                .get(field)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{field}: missing or not a number"))?;
+            if n <= 0.0 || n.fract() != 0.0 || n > u32::MAX as f64 {
+                return Err(format!("{field}: must be a positive integer (got {n})"));
+            }
+            Ok(n as u32)
+        };
+
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("custom")
+            .to_string();
+        let gpu = gpu_by_name(
+            "gpu",
+            doc.get("gpu").and_then(Json::as_str).unwrap_or("a40"),
+        )?;
+        let gpus_per_node = u32_of("gpus_per_node")?;
+        let nodes = u32_of("nodes")?;
+        let intra = link_of(
+            "intra",
+            doc.get("intra").ok_or("intra: missing (intra-node link spec required)")?,
+        )?;
+        let inter = match doc.get("inter") {
+            Some(v) => Some(link_of("inter", v)?),
+            None => None,
+        };
+
+        let mut ext = ClusterExt::default();
+        if let Some(v) = doc.get("node_gpus") {
+            let arr = v.as_arr().ok_or("node_gpus: must be an array of gpu names")?;
+            for (i, g) in arr.iter().enumerate() {
+                let s = g
+                    .as_str()
+                    .ok_or_else(|| format!("node_gpus[{i}]: must be a gpu name string"))?;
+                ext.node_gpus.push(gpu_by_name(&format!("node_gpus[{i}]"), s)?);
+            }
+        }
+        if let Some(v) = doc.get("hierarchy") {
+            let island = v
+                .get("island_size")
+                .and_then(Json::as_f64)
+                .ok_or("hierarchy.island_size: missing or not a number")?;
+            if island <= 0.0 || island.fract() != 0.0 {
+                return Err(format!(
+                    "hierarchy.island_size: must be a positive integer (got {island})"
+                ));
+            }
+            ext.hierarchy = Some(Hierarchy {
+                island_size: island as u32,
+                inter_island: link_of(
+                    "hierarchy.inter_island",
+                    v.get("inter_island").ok_or("hierarchy.inter_island: missing")?,
+                )?,
+                oversubscription: v
+                    .get("oversubscription")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(1.0),
+            });
+        }
+        if let Some(v) = doc.get("tenants") {
+            let arr = v.as_arr().ok_or("tenants: must be an array")?;
+            for (i, t) in arr.iter().enumerate() {
+                let frac = |sub: &str| -> Result<f64, String> {
+                    t.get(sub)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| format!("tenants[{i}].{sub}: missing or not a number"))
+                };
+                ext.tenants.push(TenantSpec {
+                    name: match t.get("name").and_then(Json::as_str) {
+                        Some(s) => s.to_string(),
+                        None => format!("tenant{i}"),
+                    },
+                    intra_frac: frac("intra_frac")?,
+                    inter_frac: frac("inter_frac")?,
+                });
+            }
+        }
+        if let Some(v) = doc.get("straggle") {
+            let arr = v.as_arr().ok_or("straggle: must be an array of [node, factor]")?;
+            for (i, pair) in arr.iter().enumerate() {
+                let node = pair
+                    .idx(0)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| format!("straggle[{i}][0]: missing node index"))?;
+                let factor = pair
+                    .idx(1)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("straggle[{i}][1]: missing factor"))?;
+                ext.straggle.push((node as u32, factor));
+            }
+        }
+
+        let cluster = ClusterSpec {
+            name,
+            node: NodeSpec { gpu, gpus: gpus_per_node },
+            topology: Topology { gpus_per_node, nodes, intra, inter },
+            ext: if ext.is_trivial() { None } else { Some(ext) },
+        };
+        cluster.validate()?;
+        Ok(cluster)
+    }
+
+    /// Load and validate a cluster spec from a JSON file on disk.
+    pub fn from_json_file(path: &std::path::Path) -> Result<ClusterSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::from_json_str(&text)
     }
 }
 
@@ -98,5 +462,113 @@ mod tests {
         assert_eq!(ClusterSpec::by_name("a16").unwrap().world_size(), 16);
         assert_eq!(ClusterSpec::by_name("B8").unwrap().world_size(), 8);
         assert!(ClusterSpec::by_name("c").is_none());
+    }
+
+    #[test]
+    fn hetero_presets_validate_and_need_des() {
+        for name in ["h16", "isl16", "mt8"] {
+            let c = ClusterSpec::by_name(name).unwrap();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(c.needs_des(), "{name} must route to the DES tier");
+        }
+        for name in ["a8", "a16", "b8", "b16"] {
+            let c = ClusterSpec::by_name(name).unwrap();
+            c.validate().unwrap();
+            assert!(!c.needs_des(), "{name} must stay on the fast path");
+        }
+    }
+
+    #[test]
+    fn trivial_ext_stays_on_fast_path() {
+        let mut c = ClusterSpec::cluster_b(1);
+        c.ext = Some(ClusterExt::default());
+        assert!(!c.needs_des());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn gpu_of_node_honours_override() {
+        let c = ClusterSpec::hetero_mixed();
+        assert_eq!(c.gpu_of_node(0).name, "A40");
+        assert_eq!(c.gpu_of_node(1).name, "A100");
+        let b = ClusterSpec::cluster_b(2);
+        assert_eq!(b.gpu_of_node(1).name, "A40");
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_ext() {
+        let mut c = ClusterSpec::cluster_a(2);
+        c.ext = Some(ClusterExt {
+            node_gpus: vec![GpuSpec::a40()], // 1 entry for 2 nodes
+            ..ClusterExt::default()
+        });
+        assert!(c.validate().unwrap_err().contains("node_gpus"));
+
+        let mut c = ClusterSpec::hetero_islands();
+        c.ext.as_mut().unwrap().hierarchy.as_mut().unwrap().island_size = 3;
+        assert!(c.validate().unwrap_err().contains("island_size"));
+
+        let mut c = ClusterSpec::multi_tenant();
+        c.ext.as_mut().unwrap().tenants[0].intra_frac = 1.5;
+        assert!(c.validate().unwrap_err().contains("intra_frac"));
+
+        let mut c = ClusterSpec::cluster_b(2);
+        c.ext = Some(ClusterExt { straggle: vec![(5, 2.0)], ..ClusterExt::default() });
+        assert!(c.validate().unwrap_err().contains("straggle"));
+    }
+
+    #[test]
+    fn multi_node_preset_without_inter_fails_validation() {
+        // Regression for the silently-free inter-node comm bug.
+        let mut c = ClusterSpec::cluster_b(2);
+        c.topology.inter = None;
+        assert!(c.validate().unwrap_err().contains("topology.inter"));
+    }
+
+    #[test]
+    fn json_loader_roundtrip() {
+        let text = r#"{
+            "name": "custom-2x8",
+            "gpu": "a40",
+            "gpus_per_node": 8,
+            "nodes": 2,
+            "intra": {"kind": "nvlink", "bandwidth": 5e10, "latency": 2e-6},
+            "inter": {"kind": "ib", "bandwidth": 1.125e10, "latency": 8e-6},
+            "node_gpus": ["a40", "a100"],
+            "straggle": [[1, 2.0]]
+        }"#;
+        let c = ClusterSpec::from_json_str(text).unwrap();
+        assert_eq!(c.name, "custom-2x8");
+        assert_eq!(c.world_size(), 16);
+        assert!(c.needs_des());
+        assert_eq!(c.gpu_of_node(1).name, "A100");
+        assert_eq!(c.ext.as_ref().unwrap().straggle, vec![(1, 2.0)]);
+    }
+
+    #[test]
+    fn json_loader_errors_name_the_field() {
+        let bad_bw = r#"{"gpus_per_node": 8, "nodes": 1,
+            "intra": {"kind": "pcie4", "bandwidth": -1, "latency": 5e-6}}"#;
+        assert!(ClusterSpec::from_json_str(bad_bw).unwrap_err().contains("intra.bandwidth"));
+
+        let bad_kind = r#"{"gpus_per_node": 8, "nodes": 1,
+            "intra": {"kind": "carrier-pigeon", "bandwidth": 1e9, "latency": 1e-6}}"#;
+        assert!(ClusterSpec::from_json_str(bad_kind).unwrap_err().contains("intra.kind"));
+
+        let no_inter = r#"{"gpus_per_node": 8, "nodes": 2,
+            "intra": {"kind": "pcie4", "bandwidth": 26e9, "latency": 5e-6}}"#;
+        assert!(ClusterSpec::from_json_str(no_inter).unwrap_err().contains("topology.inter"));
+
+        let bad_nodes = r#"{"gpus_per_node": 8, "nodes": 0,
+            "intra": {"kind": "pcie4", "bandwidth": 26e9, "latency": 5e-6}}"#;
+        assert!(ClusterSpec::from_json_str(bad_nodes).unwrap_err().contains("nodes"));
+
+        let bad_gpu_count = r#"{"gpus_per_node": 8, "nodes": 2,
+            "intra": {"kind": "pcie4", "bandwidth": 26e9, "latency": 5e-6},
+            "inter": {"kind": "ib", "bandwidth": 1.125e10, "latency": 8e-6},
+            "node_gpus": ["a40", "a100", "a40"]}"#;
+        assert!(ClusterSpec::from_json_str(bad_gpu_count).unwrap_err().contains("node_gpus"));
+
+        assert!(ClusterSpec::from_json_str("not json").unwrap_err().contains("invalid JSON"));
     }
 }

@@ -13,6 +13,6 @@ pub mod cluster;
 pub mod gpu;
 pub mod topology;
 
-pub use cluster::{ClusterSpec, NodeSpec};
+pub use cluster::{ClusterExt, ClusterSpec, Hierarchy, NodeSpec, TenantSpec};
 pub use gpu::GpuSpec;
 pub use topology::{LinkKind, LinkSpec, Topology};

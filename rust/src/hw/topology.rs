@@ -23,6 +23,18 @@ impl LinkKind {
             LinkKind::Local => "local",
         }
     }
+
+    /// Parse a user-facing name (JSON cluster specs, CLI). Accepts the
+    /// `as_str` forms and common lowercase aliases.
+    pub fn parse(s: &str) -> Option<LinkKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "nvlink" => Some(LinkKind::NvLink),
+            "pcie4" | "pcie" => Some(LinkKind::Pcie4),
+            "ib" | "infiniband" => Some(LinkKind::InfiniBand),
+            "local" => Some(LinkKind::Local),
+            _ => None,
+        }
+    }
 }
 
 /// Physical properties of one link class.
@@ -34,6 +46,26 @@ pub struct LinkSpec {
     pub bandwidth: f64,
     /// Per-hop base latency in seconds.
     pub latency: f64,
+}
+
+impl LinkSpec {
+    /// Check physical plausibility, naming the offending field relative to
+    /// `field` (e.g. `"intra"` → `"intra.bandwidth: ..."`).
+    pub fn validate(&self, field: &str) -> Result<(), String> {
+        if self.bandwidth <= 0.0 || !self.bandwidth.is_finite() {
+            return Err(format!(
+                "{field}.bandwidth: must be positive and finite (got {})",
+                self.bandwidth
+            ));
+        }
+        if self.latency <= 0.0 || !self.latency.is_finite() {
+            return Err(format!(
+                "{field}.latency: must be positive and finite (got {})",
+                self.latency
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Cluster interconnect description.
@@ -56,6 +88,31 @@ pub struct Topology {
 impl Topology {
     pub fn world_size(&self) -> u32 {
         self.gpus_per_node * self.nodes
+    }
+
+    /// Construction-time sanity check. The load-bearing case is the last
+    /// one: a multi-node topology with `inter: None` used to be
+    /// representable and silently simulated *free* inter-node communication
+    /// (`ring_hop_latency` fell back to 0 and `bottleneck_link` panicked
+    /// only on some paths) — it is now an error naming the field.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.gpus_per_node == 0 {
+            return Err("topology.gpus_per_node: must be positive (got 0)".to_string());
+        }
+        if self.nodes == 0 {
+            return Err("topology.nodes: must be positive (got 0)".to_string());
+        }
+        self.intra.validate("topology.intra")?;
+        if let Some(inter) = &self.inter {
+            inter.validate("topology.inter")?;
+        } else if self.nodes > 1 {
+            return Err(format!(
+                "topology.inter: required for a multi-node topology (nodes = {}); \
+                 omitting it would simulate free inter-node communication",
+                self.nodes
+            ));
+        }
+        Ok(())
     }
 
     /// Node index of a rank.
@@ -191,5 +248,40 @@ mod tests {
         assert!(!t.spans_nodes(0, 8));
         assert!(t.spans_nodes(4, 8));
         assert!(t.spans_nodes(0, 16));
+    }
+
+    #[test]
+    fn multi_node_without_inter_is_rejected() {
+        // Regression: this shape used to pass silently and simulate free
+        // inter-node comm.
+        let t = Topology { gpus_per_node: 8, nodes: 2, intra: pcie4(), inter: None };
+        let err = t.validate().unwrap_err();
+        assert!(err.contains("topology.inter"), "names the field: {err}");
+        // Single-node without inter stays legal.
+        let t1 = Topology { gpus_per_node: 8, nodes: 1, intra: pcie4(), inter: None };
+        assert!(t1.validate().is_ok());
+        assert!(topo2x8().validate().is_ok());
+    }
+
+    #[test]
+    fn non_positive_fields_are_rejected_with_names() {
+        let mut t = topo2x8();
+        t.intra.bandwidth = 0.0;
+        assert!(t.validate().unwrap_err().contains("topology.intra.bandwidth"));
+        let mut t = topo2x8();
+        t.inter.as_mut().unwrap().latency = -1.0;
+        assert!(t.validate().unwrap_err().contains("topology.inter.latency"));
+        let mut t = topo2x8();
+        t.gpus_per_node = 0;
+        assert!(t.validate().unwrap_err().contains("gpus_per_node"));
+    }
+
+    #[test]
+    fn link_kind_parse_roundtrip() {
+        for k in [LinkKind::NvLink, LinkKind::Pcie4, LinkKind::InfiniBand, LinkKind::Local] {
+            assert_eq!(LinkKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(LinkKind::parse("infiniband"), Some(LinkKind::InfiniBand));
+        assert_eq!(LinkKind::parse("warp-drive"), None);
     }
 }

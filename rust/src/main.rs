@@ -89,7 +89,14 @@ COMMANDS:
   train     --steps N               end-to-end training on AOT artifacts
 
 COMMON OPTIONS:
-  --cluster a8|a16|b8|b16           cluster preset (default b8)
+  --cluster a8|a16|b8|b16           cluster preset (default b8); also the
+                                    heterogeneous presets h16 (mixed
+                                    A40+A100), isl16 (hierarchical islands)
+                                    and mt8 (multi-tenant), or a path to a
+                                    cluster spec JSON file (*.json) — see
+                                    README for the format. Heterogeneous
+                                    clusters are simulated on the
+                                    discrete-event tier
   --model phi2|llama3|mpt|deepseek-moe|olmoe
   --par fsdp|tp|ep|dp               parallelism (default fsdp)
   --strategy lagom|autoccl|nccl|liger (tune only; default lagom)
@@ -200,7 +207,13 @@ fn parse_workload(args: &Args, cluster: &ClusterSpec) -> Result<Workload, String
 
 fn cluster_of(args: &Args) -> Result<ClusterSpec, String> {
     let name = args.get_or("cluster", "b8");
-    ClusterSpec::by_name(name).ok_or_else(|| format!("unknown cluster {name}"))
+    if name.ends_with(".json") {
+        return ClusterSpec::from_json_file(std::path::Path::new(name))
+            .map_err(|e| format!("--cluster {name}: {e}"));
+    }
+    ClusterSpec::by_name(name).ok_or_else(|| {
+        format!("unknown cluster {name} (expected a preset a8|a16|b8|b16|h16|isl16|mt8 or a .json file)")
+    })
 }
 
 fn fidelity_of(args: &Args) -> Result<EvalMode, String> {

@@ -11,7 +11,7 @@
 
 use crate::comm::CommConfig;
 use crate::graph::{IterationSchedule, OverlapGroup};
-use crate::sim::{simulate_group_summary, SimEnv, SimScratch};
+use crate::sim::{simulate_group_des, simulate_group_summary, SimEnv, SimScratch};
 
 /// One measured execution of an overlap group (possibly averaged reps).
 #[derive(Debug, Clone, PartialEq)]
@@ -66,7 +66,21 @@ impl ProfileBackend for SimProfiler {
         let mut comp_total = 0.0;
         let mut comm_total = 0.0;
         let mut makespan = 0.0;
+        // Clusters the fast path cannot express measure on the
+        // discrete-event tier — the campaign leaderboard reports what the
+        // cluster actually does, not its homogeneous approximation.
+        let des = self.env.cluster.needs_des();
         for _ in 0..self.reps {
+            if des {
+                let r = simulate_group_des(group, configs, &mut self.env, &[]);
+                for (acc, &t) in comm_times.iter_mut().zip(r.comm_times.iter()) {
+                    *acc += t;
+                }
+                comp_total += r.comp_total;
+                comm_total += r.comm_total;
+                makespan += r.makespan;
+                continue;
+            }
             let r = simulate_group_summary(group, configs, &mut self.env, &mut self.scratch);
             for (acc, t) in comm_times.iter_mut().zip(self.scratch.comm_times()) {
                 *acc += t;

@@ -1,0 +1,175 @@
+//! Schedulable components and the deterministic min-heap scheduler.
+//!
+//! A DES run is a set of components sharing a world. Each component
+//! answers "when is your next event?" and, when the scheduler fires it,
+//! advances its state. The scheduler is a binary min-heap keyed by
+//! `(time, component id)`: ties at the same instant always fire in
+//! component-id order, which is what makes runs replay-identical — the
+//! fault injector of a class carries a lower id than its compute stream,
+//! so a straggle factor taking effect "at t" is applied before any work
+//! scheduled "at t" runs.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// One schedulable simulation actor, generic over the shared world type.
+///
+/// The engine fires the earliest pending event, calls `advance` on its
+/// owner, then re-queries every component's `next_event` (components are
+/// few — O(nodes) — so the refresh is cheap and keeps the coupling rule
+/// trivial: anything a component changed is visible to all).
+pub trait Component<W> {
+    /// Stable identity used for deterministic tie-breaking.
+    fn id(&self) -> usize;
+    /// Wall-clock time of this component's next event, or `None` when it
+    /// has nothing pending. Must be monotone: never earlier than the last
+    /// event the scheduler fired.
+    fn next_event(&self, world: &W) -> Option<f64>;
+    /// Fire the pending event at `now`, mutating shared/internal state.
+    fn advance(&mut self, now: f64, world: &mut W);
+}
+
+/// Heap entry. Ordered by `(time, id)` ascending; the generation is not
+/// part of the ordering — it only marks stale entries for lazy discard.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    time: f64,
+    id: usize,
+    gen: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Event times are finite by construction; total_cmp keeps the
+        // comparison a total order regardless.
+        self.time.total_cmp(&other.time).then(self.id.cmp(&other.id))
+    }
+}
+
+/// Deterministic event queue over a fixed set of component ids.
+///
+/// Rescheduling a component invalidates its previous entry lazily: each
+/// `schedule` bumps the component's generation and pushes a fresh entry;
+/// `pop` discards entries whose generation no longer matches. Scheduling
+/// the *same* time again is a no-op, so the steady-state refresh loop in
+/// the engine does not grow the heap.
+#[derive(Debug)]
+pub struct Scheduler {
+    heap: BinaryHeap<Reverse<Entry>>,
+    /// Pending `(time, generation)` per component id; `None` = idle.
+    slots: Vec<Option<(f64, u64)>>,
+    gens: Vec<u64>,
+}
+
+impl Scheduler {
+    pub fn new(components: usize) -> Scheduler {
+        Scheduler {
+            heap: BinaryHeap::with_capacity(components * 2),
+            slots: vec![None; components],
+            gens: vec![0; components],
+        }
+    }
+
+    /// (Re)schedule component `id` at `time`, superseding any pending
+    /// entry it has.
+    pub fn schedule(&mut self, id: usize, time: f64) {
+        if let Some((t, _)) = self.slots[id] {
+            if t == time {
+                return; // unchanged — keep the live entry
+            }
+        }
+        self.gens[id] += 1;
+        let gen = self.gens[id];
+        self.slots[id] = Some((time, gen));
+        self.heap.push(Reverse(Entry { time, id, gen }));
+    }
+
+    /// Drop any pending event of `id`.
+    pub fn cancel(&mut self, id: usize) {
+        self.slots[id] = None;
+    }
+
+    /// Pop the earliest live `(time, id)` pair, discarding stale entries.
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        while let Some(Reverse(e)) = self.heap.pop() {
+            match self.slots[e.id] {
+                Some((t, gen)) if gen == e.gen => {
+                    debug_assert!(t == e.time);
+                    self.slots[e.id] = None;
+                    return Some((e.time, e.id));
+                }
+                _ => continue, // superseded or cancelled
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut s = Scheduler::new(3);
+        s.schedule(0, 3.0);
+        s.schedule(1, 1.0);
+        s.schedule(2, 2.0);
+        assert_eq!(s.pop(), Some((1.0, 1)));
+        assert_eq!(s.pop(), Some((2.0, 2)));
+        assert_eq!(s.pop(), Some((3.0, 0)));
+        assert_eq!(s.pop(), None);
+    }
+
+    #[test]
+    fn ties_break_by_component_id() {
+        let mut s = Scheduler::new(4);
+        for id in [3, 1, 2, 0] {
+            s.schedule(id, 5.0);
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| s.pop()).map(|(_, id)| id).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reschedule_supersedes_previous_entry() {
+        let mut s = Scheduler::new(2);
+        s.schedule(0, 10.0);
+        s.schedule(1, 5.0);
+        s.schedule(0, 1.0); // moves earlier
+        assert_eq!(s.pop(), Some((1.0, 0)));
+        assert_eq!(s.pop(), Some((5.0, 1)));
+        assert_eq!(s.pop(), None, "stale 10.0 entry must be discarded");
+    }
+
+    #[test]
+    fn cancel_removes_pending_event() {
+        let mut s = Scheduler::new(2);
+        s.schedule(0, 1.0);
+        s.schedule(1, 2.0);
+        s.cancel(0);
+        assert_eq!(s.pop(), Some((2.0, 1)));
+        assert_eq!(s.pop(), None);
+    }
+
+    #[test]
+    fn same_time_reschedule_is_a_noop() {
+        let mut s = Scheduler::new(1);
+        for _ in 0..1000 {
+            s.schedule(0, 7.0);
+        }
+        assert!(s.heap.len() <= 1, "steady-state refresh must not grow the heap");
+        assert_eq!(s.pop(), Some((7.0, 0)));
+    }
+}

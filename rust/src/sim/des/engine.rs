@@ -1,0 +1,629 @@
+//! The discrete-event engine: world state, the four component kinds, and
+//! [`simulate_group_des`].
+//!
+//! ## Model
+//!
+//! Ranks of one node behave identically under the engine's homogeneous
+//! per-node contention model, so the DES simulates one **rank class per
+//! node**. Each class owns a compute stream and a serialized comm stream —
+//! exactly the two streams of the fast path — driven by four component
+//! kinds:
+//!
+//! * [`ComputeStream`] — one event per computation op; its `advance`
+//!   replays the fast path's launch + wave arithmetic against the class's
+//!   comm state via the engine's own [`CommStream`]/[`run_waves_det`].
+//! * [`LinkChannel`] — fires the uncontended comm drain once the class's
+//!   compute stream retires (the communication-bound tail).
+//! * [`Nic`] — observes cross-class completion and records the finish-time
+//!   skew between classes (how unbalanced the fleet is).
+//! * [`FaultInjector`] — applies straggle factors to a class's time map at
+//!   scheduled wall-clock instants; changes bind at op boundaries, the
+//!   same granularity at which real schedulers observe slowdowns.
+//!
+//! ## The parity contract
+//!
+//! On a homogeneous single-tenant cluster every class is the fast path's
+//! group run: comm setup, launch overhead, wave stepping and drain all go
+//! through the *same* `pub(super)` engine primitives with the same inputs
+//! in the same order, and the straggle [`TimeMap`] is the exact identity
+//! (`0.0 + (t - 0.0) * 1.0`). The DES therefore returns results
+//! **bitwise-equal** to [`crate::sim::simulate_group_reference`] —
+//! property-tested by `prop_des_matches_reference`.
+
+use super::component::{Component, Scheduler};
+use crate::comm::{comm_resources, comm_time, CommConfig};
+use crate::contention::model::{wave_time, CompContext};
+use crate::coordinator::FaultPlan;
+use crate::graph::OverlapGroup;
+use crate::hw::{ClusterSpec, GpuSpec, Topology};
+use crate::sim::engine::{run_waves_det, wave_capacity, wave_rate, CommOpState, CommStream, SimEnv};
+use crate::util::prng::Prng;
+
+/// Affine map from a class's internal (unstraggled) clock to wall time.
+/// Identity for healthy classes — chosen so `wall(t) == t` bitwise, which
+/// the parity contract depends on. A static straggle factor `s` gives
+/// `wall(t) = t * s` (one exact multiply), so a 2× straggler stretches the
+/// makespan by exactly 2.0.
+#[derive(Debug, Clone, Copy)]
+struct TimeMap {
+    wall_base: f64,
+    int_base: f64,
+    scale: f64,
+}
+
+impl TimeMap {
+    fn identity() -> TimeMap {
+        TimeMap { wall_base: 0.0, int_base: 0.0, scale: 1.0 }
+    }
+
+    fn wall(&self, t: f64) -> f64 {
+        self.wall_base + (t - self.int_base) * self.scale
+    }
+
+    fn internal(&self, wall: f64) -> f64 {
+        self.int_base + (wall - self.wall_base) / self.scale
+    }
+
+    /// Change the rate at internal time `int_now`, keeping wall time
+    /// continuous at the change point.
+    fn rebase(&mut self, int_now: f64, scale: f64) {
+        self.wall_base = self.wall(int_now);
+        self.int_base = int_now;
+        self.scale = scale;
+    }
+}
+
+/// Shared world state: the per-class stream state every component reads
+/// and the results the outcome is assembled from.
+struct World {
+    /// Per-class serialized comm-op buffers (the engine's own state type,
+    /// driven through [`CommStream`] — one arithmetic, two drivers).
+    ops: Vec<Vec<CommOpState>>,
+    heads: Vec<usize>,
+    /// Internal (unstraggled) compute-stream clock per class.
+    clock: Vec<f64>,
+    /// Internal total computation time per class.
+    comp_total: Vec<f64>,
+    /// Internal→wall time map per class (fault injectors mutate).
+    maps: Vec<TimeMap>,
+    compute_done: Vec<bool>,
+    drained: Vec<bool>,
+    /// Internal comm-stream finish time per class (set by the drain).
+    comm_end: Vec<f64>,
+    /// Wall-clock finish-time skew across classes (set by the NIC).
+    nic_skew: f64,
+    nic_done: bool,
+}
+
+impl World {
+    fn class_wall_makespan(&self, c: usize) -> f64 {
+        self.maps[c].wall(self.clock[c].max(self.comm_end[c]))
+    }
+}
+
+/// Compute stream of one rank class: one event per computation op.
+struct ComputeStream {
+    id: usize,
+    class: usize,
+    gpu: GpuSpec,
+    sigma: f64,
+    prng: Prng,
+    /// Precomputed `(contention context, threadblocks)` per comp op.
+    comps: Vec<(CompContext, u64)>,
+    cursor: usize,
+}
+
+impl ComputeStream {
+    fn noise(&mut self) -> f64 {
+        if self.sigma == 0.0 {
+            1.0
+        } else {
+            self.prng.noise_factor(self.sigma)
+        }
+    }
+}
+
+impl Component<World> for ComputeStream {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn next_event(&self, world: &World) -> Option<f64> {
+        if self.cursor < self.comps.len() {
+            Some(world.maps[self.class].wall(world.clock[self.class]))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, _now: f64, world: &mut World) {
+        let (ctx, tbs0) = self.comps[self.cursor];
+        let start = world.clock[self.class];
+        let head0 = world.heads[self.class];
+        let (t, head) = {
+            // Same sequence as the fast path's per-comp body: launch
+            // overhead on the compute stream, then the wave loop.
+            let mut comm =
+                CommStream { ops: world.ops[self.class].as_mut_slice(), head: head0 };
+            let mut t = start;
+            let launch = self.gpu.launch_overhead * self.noise();
+            comm.advance(t, launch, 1.0);
+            t += launch;
+            let mut tbs = tbs0;
+            if self.sigma == 0.0 {
+                t = run_waves_det(&mut comm, &ctx, tbs, &self.gpu, t, true);
+            } else {
+                while tbs > 0 {
+                    let active = comm.active_res().copied();
+                    let capacity = wave_capacity(&ctx, &self.gpu, active.as_ref());
+                    let wave_tbs = tbs.min(capacity);
+                    let d = wave_time(&ctx, wave_tbs, &self.gpu, active.as_ref()) * self.noise();
+                    let rate = wave_rate(comm.done(), &ctx, wave_tbs, d, &self.gpu);
+                    comm.advance(t, d, rate);
+                    t += d;
+                    tbs -= wave_tbs;
+                }
+            }
+            (t, comm.head)
+        };
+        world.heads[self.class] = head;
+        world.clock[self.class] = t;
+        world.comp_total[self.class] += t - start;
+        self.cursor += 1;
+        if self.cursor == self.comps.len() {
+            world.compute_done[self.class] = true;
+        }
+    }
+}
+
+/// Link channel of one rank class: drains the comm stream uncontended
+/// once compute retires — the communication-bound tail.
+struct LinkChannel {
+    id: usize,
+    class: usize,
+}
+
+impl Component<World> for LinkChannel {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn next_event(&self, world: &World) -> Option<f64> {
+        if world.compute_done[self.class] && !world.drained[self.class] {
+            Some(world.maps[self.class].wall(world.clock[self.class]))
+        } else {
+            None
+        }
+    }
+
+    fn advance(&mut self, _now: f64, world: &mut World) {
+        let clock = world.clock[self.class];
+        let head0 = world.heads[self.class];
+        let (end, head) = {
+            let mut comm =
+                CommStream { ops: world.ops[self.class].as_mut_slice(), head: head0 };
+            let end = comm.drain(clock);
+            (end, comm.head)
+        };
+        world.heads[self.class] = head;
+        world.comm_end[self.class] = end;
+        world.drained[self.class] = true;
+    }
+}
+
+/// Cross-class observer: once every class has drained, records the wall
+/// finish-time skew (max − min) across classes. Purely observational — it
+/// never feeds back into class timing, so it cannot perturb parity.
+struct Nic {
+    id: usize,
+}
+
+impl Component<World> for Nic {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn next_event(&self, world: &World) -> Option<f64> {
+        if world.nic_done || !world.drained.iter().all(|d| *d) {
+            return None;
+        }
+        let latest = (0..world.clock.len())
+            .map(|c| world.class_wall_makespan(c))
+            .fold(0.0_f64, f64::max);
+        Some(latest)
+    }
+
+    fn advance(&mut self, _now: f64, world: &mut World) {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0_f64;
+        for c in 0..world.clock.len() {
+            let m = world.class_wall_makespan(c);
+            lo = lo.min(m);
+            hi = hi.max(m);
+        }
+        world.nic_skew = (hi - lo).max(0.0);
+        world.nic_done = true;
+    }
+}
+
+/// Applies straggle factors to one class's time map at scheduled wall
+/// instants. `(0.0, factor)` entries model the coordinator's static
+/// [`FaultPlan::straggle_factor`] ("multiplies this rank's measured
+/// times"); later instants model mid-run slowdowns, binding at op
+/// boundaries.
+struct FaultInjector {
+    id: usize,
+    class: usize,
+    /// `(wall time, new factor)`, sorted ascending.
+    pending: Vec<(f64, f64)>,
+    cursor: usize,
+}
+
+impl Component<World> for FaultInjector {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn next_event(&self, _world: &World) -> Option<f64> {
+        self.pending.get(self.cursor).map(|(t, _)| *t)
+    }
+
+    fn advance(&mut self, now: f64, world: &mut World) {
+        let (_, factor) = self.pending[self.cursor];
+        self.cursor += 1;
+        let int_now = world.maps[self.class].internal(now);
+        world.maps[self.class].rebase(int_now, factor);
+    }
+}
+
+/// Effective topology each comm op sees, with the heterogeneity
+/// extension folded in: tenant bandwidth reservations derate the fabric,
+/// hierarchy oversubscription divides the inter-node rail, and a ring
+/// crossing an island boundary is bounded by the inter-island bridge.
+/// With no (or a trivial) extension the base topology is returned
+/// unchanged — bitwise, which keeps `comm_time` on the parity path.
+fn op_topologies(cluster: &ClusterSpec, group: &OverlapGroup) -> Vec<Topology> {
+    let base = &cluster.topology;
+    let ext = cluster.ext.as_ref().filter(|e| !e.is_trivial());
+    let Some(ext) = ext else {
+        return group.comms.iter().map(|_| base.clone()).collect();
+    };
+    let intra_free = 1.0 - ext.tenants.iter().map(|t| t.intra_frac).sum::<f64>();
+    let inter_free = 1.0 - ext.tenants.iter().map(|t| t.inter_frac).sum::<f64>();
+    group
+        .comms
+        .iter()
+        .map(|op| {
+            let mut topo = base.clone();
+            if !ext.tenants.is_empty() {
+                topo.intra.bandwidth *= intra_free;
+                if let Some(l) = topo.inter.as_mut() {
+                    l.bandwidth *= inter_free;
+                }
+            }
+            if let Some(h) = &ext.hierarchy {
+                if let Some(l) = topo.inter.as_mut() {
+                    l.bandwidth /= h.oversubscription;
+                }
+                // island_size divides gpus_per_node, so node boundaries
+                // are island boundaries and global-rank division works.
+                let spans_islands = op.world > 0
+                    && op.base_rank / h.island_size
+                        != (op.base_rank + op.world - 1) / h.island_size;
+                if spans_islands && h.inter_island.bandwidth < topo.intra.bandwidth {
+                    topo.intra = h.inter_island;
+                }
+            }
+            topo
+        })
+        .collect()
+}
+
+/// Outcome of a DES group run. On the shared homogeneous class the scalar
+/// fields and `comm_times` are bitwise-equal to the reference engine's.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesOutcome {
+    /// Wall-clock end of the latest class (the fleet makespan).
+    pub makespan: f64,
+    /// Total computation wall time of the critical class.
+    pub comp_total: f64,
+    /// Total communication wall time of the critical class.
+    pub comm_total: f64,
+    /// Per-comm wall durations of the critical class, in op order.
+    pub comm_times: Vec<f64>,
+    /// The class (node) whose makespan bounds the fleet; ties resolve to
+    /// the lowest index.
+    pub critical_class: usize,
+    /// Wall makespan of every class.
+    pub class_makespans: Vec<f64>,
+    /// Finish-time skew across classes observed by the NIC (max − min).
+    pub nic_skew: f64,
+    /// Events the scheduler fired (determinism/overhead diagnostics).
+    pub events: u64,
+}
+
+/// Run one overlap group through the discrete-event tier.
+///
+/// `faults` carries one coordinator [`FaultPlan`] per node (missing
+/// entries are healthy); its `straggle_factor` combines multiplicatively
+/// with any static `ext.straggle` entries of the cluster. Only the
+/// straggle/chaos-seed machinery of the plan is meaningful for a single
+/// group run — job-lifecycle fields (deaths, flapping) act at the
+/// coordinator layer.
+pub fn simulate_group_des(
+    group: &OverlapGroup,
+    configs: &[CommConfig],
+    env: &mut SimEnv,
+    faults: &[FaultPlan],
+) -> DesOutcome {
+    assert_eq!(
+        configs.len(),
+        group.comms.len(),
+        "one config per communication op required"
+    );
+    let cluster = env.cluster.clone();
+    let sigma = env.noise_sigma;
+    let classes = cluster.topology.nodes.max(1) as usize;
+    let topos = op_topologies(&cluster, group);
+
+    // Combined static straggle factor per class: cluster extension first,
+    // then the per-node fault plan.
+    let mut factor = vec![1.0_f64; classes];
+    if let Some(e) = cluster.ext.as_ref() {
+        for (node, f) in &e.straggle {
+            if (*node as usize) < classes {
+                factor[*node as usize] *= f;
+            }
+        }
+    }
+    for (c, plan) in faults.iter().take(classes).enumerate() {
+        factor[c] *= plan.straggle_factor;
+    }
+
+    // Per-class setup. Each class draws from its own forked PRNG stream
+    // (tagged with the class index and the fault plan's chaos seed), so
+    // results are independent of event interleaving and replay-identical
+    // for the same seeds. sigma == 0 draws nothing — the parity path.
+    let mut ops: Vec<Vec<CommOpState>> = Vec::with_capacity(classes);
+    let mut components: Vec<Box<dyn Component<World>>> = Vec::new();
+    for c in 0..classes {
+        let gpu = cluster.gpu_of_node(c as u32).clone();
+        let mut prng = if sigma == 0.0 {
+            Prng::new(0)
+        } else {
+            let chaos = faults.get(c).map(|p| p.chaos_seed).unwrap_or(0);
+            env.prng.fork(c as u64 ^ chaos)
+        };
+        let noise = |p: &mut Prng| if sigma == 0.0 { 1.0 } else { p.noise_factor(sigma) };
+
+        // Comm stream setup — same per-op arithmetic and draw order as the
+        // fast path, against this class's GPU and effective topologies.
+        let mut class_ops = Vec::with_capacity(group.comms.len());
+        for ((op, cfg), topo) in group.comms.iter().zip(configs).zip(&topos) {
+            let w = comm_time(op, cfg, topo, &gpu);
+            class_ops.push(CommOpState {
+                remaining: w * noise(&mut prng),
+                res: comm_resources(op, cfg, topo, &gpu, w),
+                span: (0.0, 0.0),
+            });
+        }
+        ops.push(class_ops);
+
+        let comps: Vec<(CompContext, u64)> = group
+            .comps
+            .iter()
+            .map(|comp| (CompContext::new(comp, &gpu), comp.threadblocks.max(1)))
+            .collect();
+
+        // Component ids are assigned in push order; the injector precedes
+        // the class's compute stream so a factor taking effect "at t"
+        // orders before work scheduled "at t" under (time, id) tie-break.
+        if factor[c] != 1.0 {
+            components.push(Box::new(FaultInjector {
+                id: components.len(),
+                class: c,
+                pending: vec![(0.0, factor[c])],
+                cursor: 0,
+            }));
+        }
+        components.push(Box::new(ComputeStream {
+            id: components.len(),
+            class: c,
+            gpu,
+            sigma,
+            prng,
+            comps,
+            cursor: 0,
+        }));
+        components.push(Box::new(LinkChannel { id: components.len(), class: c }));
+    }
+    components.push(Box::new(Nic { id: components.len() }));
+
+    let mut world = World {
+        heads: vec![0; classes],
+        clock: vec![0.0; classes],
+        comp_total: vec![0.0; classes],
+        maps: vec![TimeMap::identity(); classes],
+        compute_done: vec![group.comps.is_empty(); classes],
+        drained: vec![false; classes],
+        comm_end: vec![0.0; classes],
+        nic_skew: 0.0,
+        nic_done: false,
+        ops,
+    };
+
+    // Event loop: fire the earliest pending event, then refresh every
+    // component's schedule (components are O(nodes); the refresh keeps
+    // cross-component coupling rules trivial).
+    let mut sched = Scheduler::new(components.len());
+    for comp in &components {
+        if let Some(t) = comp.next_event(&world) {
+            sched.schedule(comp.id(), t);
+        }
+    }
+    let mut events = 0u64;
+    while let Some((t, id)) = sched.pop() {
+        components[id].advance(t, &mut world);
+        events += 1;
+        for comp in &components {
+            match comp.next_event(&world) {
+                Some(tn) => sched.schedule(comp.id(), tn),
+                None => sched.cancel(comp.id()),
+            }
+        }
+    }
+
+    // Assemble the outcome from the critical class (ties → lowest index;
+    // on a homogeneous cluster that is class 0 = the reference run).
+    let class_makespans: Vec<f64> = (0..classes).map(|c| world.class_wall_makespan(c)).collect();
+    let mut crit = 0;
+    for c in 1..classes {
+        if class_makespans[c] > class_makespans[crit] {
+            crit = c;
+        }
+    }
+    let scale = world.maps[crit].scale;
+    let comm_times: Vec<f64> =
+        world.ops[crit].iter().map(|o| (o.span.1 - o.span.0) * scale).collect();
+    DesOutcome {
+        makespan: class_makespans[crit],
+        comp_total: world.comp_total[crit] * scale,
+        comm_total: comm_times.iter().sum(),
+        comm_times,
+        critical_class: crit,
+        class_makespans,
+        nic_skew: world.nic_skew,
+        events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CollectiveKind, CommOpDesc};
+    use crate::graph::{CompOpDesc, OverlapGroup};
+    use crate::sim::simulate_group_reference;
+
+    const MIB: u64 = 1024 * 1024;
+
+    fn group() -> OverlapGroup {
+        OverlapGroup::with(
+            "g",
+            vec![
+                CompOpDesc::ffn("ffn1", 2048, 1024, 4096, 2),
+                CompOpDesc::ffn("ffn2", 2048, 4096, 1024, 2),
+            ],
+            vec![
+                CommOpDesc::new("ag", CollectiveKind::AllGather, 16 * MIB, 8),
+                CommOpDesc::new("ar", CollectiveKind::AllReduce, 8 * MIB, 8),
+            ],
+        )
+    }
+
+    fn cfgs(n: usize) -> Vec<CommConfig> {
+        vec![CommConfig::default_ring(); n]
+    }
+
+    #[test]
+    fn homogeneous_single_node_matches_reference_bitwise() {
+        let cl = ClusterSpec::cluster_b(1);
+        let g = group();
+        let c = cfgs(g.comms.len());
+        let r = simulate_group_reference(&g, &c, &mut SimEnv::deterministic(cl.clone()));
+        let d = simulate_group_des(&g, &c, &mut SimEnv::deterministic(cl), &[]);
+        assert_eq!(d.makespan, r.makespan);
+        assert_eq!(d.comp_total, r.comp_total());
+        assert_eq!(d.comm_total, r.comm_total());
+        assert_eq!(d.comm_times, r.comm_times);
+        assert_eq!(d.critical_class, 0);
+        assert_eq!(d.nic_skew, 0.0);
+    }
+
+    #[test]
+    fn homogeneous_multi_node_matches_reference_bitwise() {
+        let cl = ClusterSpec::cluster_a(2);
+        let g = group();
+        let c = cfgs(g.comms.len());
+        let r = simulate_group_reference(&g, &c, &mut SimEnv::deterministic(cl.clone()));
+        let d = simulate_group_des(&g, &c, &mut SimEnv::deterministic(cl), &[]);
+        assert_eq!(d.makespan, r.makespan);
+        assert_eq!(d.comm_times, r.comm_times);
+        assert_eq!(d.class_makespans, vec![r.makespan; 2], "identical classes");
+        assert_eq!(d.nic_skew, 0.0);
+    }
+
+    #[test]
+    fn mixed_gpus_bound_by_the_slower_class() {
+        let cl = ClusterSpec::hetero_mixed(); // node 0 A40, node 1 A100
+        let g = group();
+        let c = cfgs(g.comms.len());
+        let d = simulate_group_des(&g, &c, &mut SimEnv::deterministic(cl), &[]);
+        assert_eq!(d.critical_class, 0, "A40 node bounds the fleet");
+        assert!(
+            d.class_makespans[1] < d.class_makespans[0],
+            "A100 class must finish first: {:?}",
+            d.class_makespans
+        );
+        assert!(d.nic_skew > 0.0, "heterogeneous classes must skew");
+    }
+
+    #[test]
+    fn island_crossing_collective_pays_the_bridge() {
+        let isl = ClusterSpec::hetero_islands();
+        let base = ClusterSpec::cluster_a(2);
+        // world 8 spans both 4-GPU islands of node 0.
+        let g = OverlapGroup::with(
+            "g",
+            vec![CompOpDesc::ffn("ffn", 1024, 1024, 4096, 2)],
+            vec![CommOpDesc::new("ar", CollectiveKind::AllReduce, 32 * MIB, 8)],
+        );
+        let c = cfgs(1);
+        let on_isl = simulate_group_des(&g, &c, &mut SimEnv::deterministic(isl), &[]);
+        let on_base = simulate_group_des(&g, &c, &mut SimEnv::deterministic(base), &[]);
+        assert!(
+            on_isl.comm_total > on_base.comm_total,
+            "PCIe island bridge must slow the collective: {} vs {}",
+            on_isl.comm_total,
+            on_base.comm_total
+        );
+    }
+
+    #[test]
+    fn tenant_reservation_slows_communication() {
+        let mt = ClusterSpec::multi_tenant();
+        let base = ClusterSpec::cluster_b(1);
+        let g = group();
+        let c = cfgs(g.comms.len());
+        let with_tenant = simulate_group_des(&g, &c, &mut SimEnv::deterministic(mt), &[]);
+        let alone = simulate_group_des(&g, &c, &mut SimEnv::deterministic(base), &[]);
+        assert!(
+            with_tenant.comm_total > alone.comm_total,
+            "a 30% reservation must stretch comm: {} vs {}",
+            with_tenant.comm_total,
+            alone.comm_total
+        );
+        assert!(with_tenant.makespan >= alone.makespan);
+    }
+
+    #[test]
+    fn noisy_runs_are_replay_identical_and_jitter() {
+        let cl = ClusterSpec::hetero_mixed();
+        let g = group();
+        let c = cfgs(g.comms.len());
+        let run = |seed: u64| {
+            let mut env = SimEnv::new(cl.clone(), seed);
+            simulate_group_des(&g, &c, &mut env, &[])
+        };
+        assert_eq!(run(7), run(7), "same seed replays bitwise");
+        assert_ne!(run(7).makespan, run(8).makespan, "different seeds jitter");
+    }
+
+    #[test]
+    fn empty_group_is_zero() {
+        let cl = ClusterSpec::cluster_b(1);
+        let g = OverlapGroup::with("empty", vec![], vec![]);
+        let d = simulate_group_des(&g, &[], &mut SimEnv::deterministic(cl), &[]);
+        assert_eq!(d.makespan, 0.0);
+        assert_eq!(d.comm_times, Vec::<f64>::new());
+    }
+}

@@ -1,0 +1,26 @@
+//! Discrete-event tier: the generality engine beside the wave-compressed
+//! fast path.
+//!
+//! The fast path ([`super::engine`], [`super::batch`], [`super::plan`])
+//! is built for one shape: a homogeneous, deterministic, single-tenant
+//! group, where all ranks behave identically and one compute + one comm
+//! stream suffice. This module is the engine for everything else —
+//! heterogeneous GPU fleets, hierarchical island topologies with
+//! oversubscribed rails, background-tenant bandwidth reservations, and
+//! per-rank straggler schedules — modeled as schedulable components
+//! (compute streams, link channels, NICs, fault injectors) over a
+//! deterministic min-heap scheduler.
+//!
+//! It *replaces nothing*: [`crate::eval::SimEvaluator`] routes a group
+//! here only when [`crate::hw::ClusterSpec::needs_des`] says the fast
+//! path cannot express the cluster, and on any homogeneous single-tenant
+//! group the DES result is bitwise-equal to
+//! [`super::simulate_group_reference`] because the components reuse the
+//! engine's own stream arithmetic rather than reimplementing it (the
+//! parity contract, pinned by `prop_des_matches_reference`).
+
+pub mod component;
+pub mod engine;
+
+pub use component::{Component, Scheduler};
+pub use engine::{simulate_group_des, DesOutcome};

@@ -142,7 +142,9 @@ pub(super) struct CommStream<'a> {
 }
 
 impl CommStream<'_> {
-    fn active_res(&self) -> Option<&CommResources> {
+    /// Resources of the op at the head of the stream. `pub(super)`: the
+    /// DES tier's noisy wave loop reads the same state.
+    pub(super) fn active_res(&self) -> Option<&CommResources> {
         self.ops.get(self.head).map(|o| &o.res)
     }
 
@@ -225,9 +227,16 @@ pub(super) fn wave_capacity(
 }
 
 /// Comm progress rate under one wave's memory pressure (1.0 once the comm
-/// stream has drained). Shared by both stepping loops.
+/// stream has drained). Shared by both stepping loops (and the DES tier's
+/// noisy per-wave loop — one contention model, three drivers).
 #[inline]
-fn wave_rate(comm_done: bool, ctx: &CompContext, wave_tbs: u64, d: f64, gpu: &GpuSpec) -> f64 {
+pub(super) fn wave_rate(
+    comm_done: bool,
+    ctx: &CompContext,
+    wave_tbs: u64,
+    d: f64,
+    gpu: &GpuSpec,
+) -> f64 {
     if comm_done {
         1.0
     } else {

@@ -23,12 +23,22 @@
 //! candidate scoring into a walk of precompiled regime tables — cached
 //! across frontiers, still bitwise-identical.
 
+//! Beside the fast path sits the **discrete-event tier** ([`des`]):
+//! compute streams, link channels, NICs and fault injectors as schedulable
+//! components over a deterministic min-heap scheduler. It activates only
+//! for clusters the fast path cannot express (heterogeneous GPU mixes,
+//! hierarchical island topologies, multi-tenant reservations, straggler
+//! schedules) and is bitwise-equal to [`simulate_group_reference`] on the
+//! shared homogeneous class — see [`des`] for the parity contract.
+
 pub mod batch;
+pub mod des;
 pub mod engine;
 pub mod plan;
 pub mod trace;
 
 pub use batch::FrontierBatch;
+pub use des::{simulate_group_des, DesOutcome};
 pub use plan::{GroupPlan, PlanCache, PlanScratch};
 pub use engine::{
     simulate_group, simulate_group_cost, simulate_group_reference, simulate_group_summary,

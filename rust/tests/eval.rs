@@ -215,6 +215,7 @@ fn every_tuner_identical_at_jobs_1_vs_8() {
         assert_eq!(r1.iterations, r8.iterations, "{name}: sim-fidelity iterations");
         assert_eq!(r1.trajectory, r8.trajectory, "{name}: sim-fidelity trajectory");
         assert_eq!(e1.stats(), e8.stats(), "{name}: sim-fidelity eval accounting");
+        assert_eq!(e1.stats().des_evals, 0, "{name}: homogeneous suite stays off the DES");
 
         let mut t1 = TieredEvaluator::new(cluster.clone(), 33);
         let q1 = tuner_by_name(name, &cluster).tune_schedule(&s, &mut t1);
@@ -250,6 +251,7 @@ fn cache_accounting_invariant_under_parallel_batches() {
         );
         assert_eq!(c.lookups(), 2 * frontier.len() as u64, "soa={soa}");
         assert!(c.hits() >= frontier.len() as u64, "soa={soa}: second pass all hits");
+        assert_eq!(ev.stats().des_evals, 0, "soa={soa}: homogeneous batches never hit the DES");
     }
 }
 
@@ -283,6 +285,46 @@ fn mixed_group_frontiers_fall_back_with_identical_results() {
     assert_eq!(mixed.stats(), reference.stats(), "accounting identical too");
     assert_eq!(mixed.stats().sim_calls, items.len() as u64, "no SoA batch formed");
     assert_eq!(mixed.stats().plan_compiles, 0, "singletons never compile a plan");
+    assert_eq!(mixed.stats().des_evals, 0, "homogeneous cluster never routes to the DES");
+}
+
+#[test]
+fn heterogeneous_clusters_route_to_the_des_tier_jobs_invariantly() {
+    // PR 10 tentpole acceptance at the evaluator layer: a cluster the fast
+    // path cannot express routes every cache miss to the discrete-event
+    // tier — counted in `des_evals`, memoized like any other evaluation,
+    // bitwise jobs-invariant, and never engaging the plan/SoA routes.
+    let cluster = ClusterSpec::hetero_mixed();
+    assert!(cluster.needs_des());
+    let group = comp_bound_group();
+    let frontier: Vec<Vec<CommConfig>> = [1u32, 4, 16, 64]
+        .iter()
+        .map(|&nc| vec![CommConfig { nc, ..CommConfig::default_ring() }])
+        .collect();
+    let mut e1 = SimEvaluator::with_reps(cluster.clone(), 77, 1);
+    let a = e1.evaluate_batch(&group, &frontier);
+    let mut e8 = SimEvaluator::with_reps(cluster.clone(), 77, 1).with_jobs(8);
+    let b = e8.evaluate_batch(&group, &frontier);
+    assert_eq!(a, b, "DES route is jobs-invariant");
+    assert_eq!(e1.stats(), e8.stats(), "and so is its accounting");
+    let s = e1.stats();
+    assert_eq!(s.des_evals, frontier.len() as u64, "every miss ran on the DES");
+    assert_eq!(s.sim_calls, s.des_evals, "des_evals is a subset of sim_calls");
+    assert_eq!(s.plan_compiles, 0, "the compiled-plan route never engages");
+
+    // Revisits are pure memo hits — the DES is not re-run.
+    let c = e1.evaluate_batch(&group, &frontier);
+    assert!(c.iter().all(|e| e.cached));
+    assert_eq!(e1.stats().des_evals, frontier.len() as u64);
+
+    // The deterministic DES also stays off plan/SoA and stays keyed.
+    let mut det = SimEvaluator::deterministic(cluster);
+    let d1 = det.evaluate_batch(&group, &frontier);
+    let d2 = det.evaluate_batch(&group, &frontier);
+    assert_eq!(d1.len(), d2.len());
+    assert!(d2.iter().all(|e| e.cached));
+    assert_eq!(det.stats().plan_compiles, 0);
+    assert_eq!(det.stats().des_evals, frontier.len() as u64);
 }
 
 #[test]

@@ -206,6 +206,51 @@ fn broadcast_on_empty_world_short_circuits() {
 }
 
 #[test]
+fn des_straggler_stretches_makespan_exactly_and_deterministically() {
+    // The discrete-event tier consumes the same FaultPlan the coordinator
+    // chaos layer uses: a 2x straggler on node 1 of a 2-node cluster must
+    // bound the fleet and stretch its makespan by exactly 2.0 (the
+    // straggle TimeMap is one exact multiply), leaving the healthy class
+    // bitwise-untouched.
+    use lagom::sim::{simulate_group_des, SimEnv};
+    let cl = ClusterSpec::cluster_b(2);
+    let g = group();
+    let c = vec![CommConfig::default_ring()];
+    let healthy = simulate_group_des(&g, &c, &mut SimEnv::deterministic(cl.clone()), &[]);
+    let mut faults = vec![FaultPlan::healthy(); 2];
+    faults[1] = FaultPlan::straggler(2.0);
+    let d = simulate_group_des(&g, &c, &mut SimEnv::deterministic(cl), &faults);
+    assert_eq!(d.critical_class, 1, "the straggling node bounds the fleet");
+    assert_eq!(d.makespan, 2.0 * healthy.makespan, "2x straggler stretches exactly 2x");
+    assert_eq!(d.comm_total, 2.0 * healthy.comm_total, "comm stretches with it");
+    assert_eq!(d.class_makespans[0], healthy.makespan, "healthy class untouched");
+    assert!(d.nic_skew > 0.0, "the NIC observes the inter-class skew");
+}
+
+#[test]
+fn des_straggler_replays_identically_under_same_chaos_seed() {
+    // Noisy DES runs fork one PRNG stream per rank class, tagged with the
+    // fault plan's chaos seed — the same replay contract the coordinator
+    // prints in health reports: same seeds, bitwise-identical schedule.
+    use lagom::sim::{simulate_group_des, SimEnv};
+    let cl = ClusterSpec::cluster_b(2);
+    let g = group();
+    let c = vec![CommConfig::default_ring()];
+    let mut faults = vec![FaultPlan::healthy(); 2];
+    faults[1] = FaultPlan { chaos_seed: 0xC0FFEE, ..FaultPlan::straggler(2.0) };
+    let run = |faults: &[FaultPlan]| {
+        let mut env = SimEnv::new(cl.clone(), 42);
+        simulate_group_des(&g, &c, &mut env, faults)
+    };
+    let a = run(&faults);
+    let b = run(&faults);
+    assert_eq!(a, b, "same seed + same chaos seed replays bitwise");
+    assert_eq!(a.critical_class, 1);
+    faults[1].chaos_seed = 0xBEEF;
+    assert_ne!(a.makespan, run(&faults).makespan, "chaos seed is part of the schedule");
+}
+
+#[test]
 fn campaign_resumes_from_checkpoint_bitwise_identical() {
     // Kill a campaign between scenarios (simulated by simply stopping after
     // a prefix, never calling the final save) and resume it from the

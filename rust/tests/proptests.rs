@@ -192,6 +192,43 @@ fn prop_soa_batch_matches_reference() {
 }
 
 #[test]
+fn prop_des_matches_reference() {
+    // The discrete-event tier must reproduce the **per-wave reference
+    // stepper** bitwise on homogeneous single-tenant groups — the PR 10
+    // parity contract: the components reuse the engine's stream
+    // arithmetic, so generality costs nothing on the shared class. Covers
+    // single-node and multi-node homogeneous clusters on both bandwidth
+    // classes.
+    use lagom::sim::simulate_group_des;
+    let clusters =
+        [ClusterSpec::cluster_b(1), ClusterSpec::cluster_a(1), ClusterSpec::cluster_b(2)];
+    let g = Gen::new(move |rng| {
+        let comps = vec_of(arb_comp(), 1, 4).sample(rng);
+        let comms = vec_of(arb_comm(), 0, 3).sample(rng);
+        let cfgs: Vec<CommConfig> =
+            (0..comms.len()).map(|_| arb_config().sample(rng)).collect();
+        (comps, comms, cfgs, rng.next_below(3) as usize)
+    });
+    for_all("des = per-wave reference", &g, default_cases() / 4, |(comps, comms, cfgs, ci)| {
+        let cl = clusters[*ci].clone();
+        let group = OverlapGroup::with("p", comps.clone(), comms.clone());
+        let d = simulate_group_des(&group, cfgs, &mut SimEnv::deterministic(cl.clone()), &[]);
+        let r = simulate_group_reference(&group, cfgs, &mut SimEnv::deterministic(cl));
+        let same = d.makespan == r.makespan
+            && d.comp_total == r.comp_total()
+            && d.comm_total == r.comm_total()
+            && d.comm_times == r.comm_times;
+        Check::from_bool(
+            same,
+            &format!(
+                "DES diverged from the reference: makespan {} vs {}",
+                d.makespan, r.makespan
+            ),
+        )
+    });
+}
+
+#[test]
 fn prop_plan_matches_reference() {
     // The compiled-plan route must reproduce the **per-wave reference
     // stepper** bitwise at sigma == 0 — and agree with the SoA frontier —
